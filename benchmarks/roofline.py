@@ -1,0 +1,61 @@
+"""§Roofline report — reads results/dryrun/*.json into the per-(arch × shape)
+three-term table used in EXPERIMENTS.md. Run the dry-run first."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh="single", quant="ttq4", opt=None):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("kind") == "decode" and r.get("quant") != quant:
+            continue
+        if opt is not None and r.get("opt_level", 1) != opt:
+            continue
+        if opt is None and r.get("opt_level", 1) != 1:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    if "skipped" in r:
+        return f"{r['arch']:24s} {r['shape']:12s} SKIP ({r['skipped'][:40]}…)"
+    if "error" in r:
+        return f"{r['arch']:24s} {r['shape']:12s} ERROR {r['error'][:50]}"
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    terms = (rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+    an = r.get("analytic", {})
+    ideal = ""
+    if an:
+        ideal = (f" | ideal C={an['t_compute_s']:.1e} M={an['t_memory_s']:.1e}"
+                 f" X={an['t_collective_s']:.1e}")
+    ufr = rl.get("useful_flop_ratio", 0.0)
+    return (f"{r['arch']:24s} {r['shape']:12s} "
+            f"C={terms[0]:.2e} M={terms[1]:.2e} X={terms[2]:.2e} "
+            f"dom={dom:10s} useful={ufr:.3f}{ideal}")
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        print(f"== mesh: {mesh} (HLO-walker terms; 'ideal' = analytic "
+              f"TPU lower bound, DESIGN.md §Roofline caveat) ==")
+        for r in rows:
+            print(fmt_row(r))
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+# One function per paper table. Prints CSV rows per section.
+"""Benchmark driver — one section per paper table. ``--full`` widens sweeps."""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: calibration,groupsize,methods,runtime,"
+                         "overhead,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_ablations, bench_calibration, bench_groupsize,
+                   bench_methods, bench_overhead, bench_runtime, roofline)
+
+    sections = [
+        ("overhead", bench_overhead.main),        # cheap first
+        ("runtime", bench_runtime.main),
+        ("ablations", bench_ablations.main),
+        ("calibration", bench_calibration.main),
+        ("groupsize", bench_groupsize.main),
+        ("methods", bench_methods.main),
+    ]
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n===== bench:{name} =====")
+        fn(fast)
+        print(f"[{name}] {time.time() - t0:.1f}s")
+    if only is None or "roofline" in only:
+        print("\n===== bench:roofline (from dry-run cache) =====")
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Domain-shift experiment (paper Fig. 1 / Table 3 core claim).
+
+Trains a small LM on two domains, then quantizes with:
+  * AWQ calibrated on each of three calibration domains (offline, static)
+  * TTQ with zero calibration (online, per-batch)
+and evaluates perplexity on in-domain + shifted eval sets.  AWQ's quality
+moves with the calibration choice; TTQ tracks the best of them without any
+calibration data.
+
+    PYTHONPATH=src python examples/domain_shift.py
+"""
+import sys
+sys.path.insert(0, ".")
+
+from benchmarks.common import (CALIB_DOMAINS, EVAL_DOMAINS, collect_stats,
+                               eval_batches, perplexity, quantize_with,
+                               trained_model, ttq_perplexity)
+
+BITS, G = 3, 32
+
+
+def main():
+    cfg, params = trained_model()
+    evs = {d: eval_batches(d, n=2) for d in EVAL_DOMAINS}
+    print(f"fp baseline ppl: " + ", ".join(
+        f"dom{d}={perplexity(cfg, params, evs[d]):.1f}" for d in EVAL_DOMAINS))
+    for c in CALIB_DOMAINS:
+        calib = collect_stats(cfg, params, eval_batches(c, n=2, seed0=555))
+        qp = quantize_with(cfg, params, "awq", BITS, G, calib=calib)
+        print(f"AWQ calib-dom{c} ppl: " + ", ".join(
+            f"dom{d}={perplexity(cfg, qp, evs[d]):.1f}" for d in EVAL_DOMAINS))
+    print("TTQ (zero calib) ppl: " + ", ".join(
+        f"dom{d}={ttq_perplexity(cfg, params, evs[d], BITS, G, rank=16):.1f}"
+        for d in EVAL_DOMAINS))
+
+
+if __name__ == "__main__":
+    main()

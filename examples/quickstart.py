@@ -1,0 +1,54 @@
+"""Quickstart — TTQ in 60 seconds.
+
+Builds a small LM, runs a prompt through the TTQ lifecycle (prefill with the
+stats tap → online activation-aware quantization → quantized decode), and
+compares RTN / AWQ / TTQ weight-approximation quality on the fly.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AWQConfig, QuantConfig, activation_diag, awq_qdq,
+                        qdq, quantize_params, svd_factors, ttq_lowrank_qdq,
+                        ttq_policy)
+from repro.core.awq import awq_loss
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, TTQEngine
+
+
+def main():
+    cfg = ModelConfig(name="quickstart", family="dense", n_layers=3,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab=256)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {cfg.name}, {sum(p.size for p in jax.tree.leaves(params)):,} params")
+
+    # --- 1. layer-level: the quantization science -------------------------
+    W = params["stack"][0]["u0"]["mlp"]["wg"][0].astype(jnp.float32)
+    key = jax.random.PRNGKey(1)
+    chan = jnp.exp(jax.random.normal(key, (cfg.d_model,)) * 1.5)
+    X = jax.random.normal(jax.random.PRNGKey(2), (512, cfg.d_model)) * chan
+    Cd = jnp.mean(X ** 2, axis=0)
+    qcfg = QuantConfig(bits=3, group_size=32, layout="row")
+    D = activation_diag(X)
+    B, A = svd_factors(W, 16)
+    print("\nactivation-aware loss ‖(W−Ŵ)diag(C)^½‖² at 3-bit, g=32:")
+    print(f"  RTN        : {float(awq_loss(W, qdq(W, qcfg), Cd)):.1f}")
+    print(f"  AWQ/TTQ    : {float(awq_loss(W, awq_qdq(W, D, qcfg), Cd)):.1f}")
+    print(f"  TTQ + r16  : {float(awq_loss(W, ttq_lowrank_qdq(W, B, A, D, qcfg), Cd)):.1f}")
+
+    # --- 2. system-level: the serving lifecycle ---------------------------
+    eng = TTQEngine(cfg, params, ttq_policy(bits=4, group_size=32, rank=8),
+                    EngineConfig(max_slots=2, max_len=64))
+    rids = [eng.submit([7, 3, 9, 1], max_new=8),
+            eng.submit([100, 42, 5], max_new=8)]
+    outs = eng.run_all()
+    print("\nTTQ engine (4-bit, r=8, per-prompt calibration):")
+    for rid in rids:
+        print(f"  request {rid}: {outs[rid]}")
+    print(f"  online requantizations: {eng.n_requants}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, reshard_restore
+
+__all__ = ["CheckpointManager", "reshard_restore"]

@@ -1,0 +1,20 @@
+"""TTQ core: groupwise QDQ, activation-aware statistics, online quantization.
+
+Public API re-exports — the rest of the framework imports from here.
+"""
+from .awq import AWQConfig, accumulate_stats, activation_diag, awq_qdq, awq_quantize, diag_from_stats
+from .gptq import gptq_qdq
+from .lowrank import alternating_refine, svd_factors, ttq_lowrank_qdq, ttq_lowrank_quantize
+from .policy import NO_QUANT, QuantPolicy, ttq_policy
+from .qdq import QuantConfig, dequantize, pack_bits, pack_int4, qdq, quantize, rtn, unpack_bits, unpack_int4
+from .ttq import (QuantizedTensor, calibrate, dequant, quantize_params,
+                  quantize_weight, ttq_linear, ttq_matmul)
+
+__all__ = [
+    "AWQConfig", "QuantConfig", "QuantPolicy", "QuantizedTensor", "NO_QUANT",
+    "accumulate_stats", "activation_diag", "alternating_refine", "awq_qdq",
+    "awq_quantize", "calibrate", "dequant", "dequantize", "diag_from_stats",
+    "gptq_qdq", "pack_bits", "pack_int4", "qdq", "quantize", "quantize_weight",
+    "rtn", "svd_factors", "ttq_linear", "ttq_lowrank_qdq", "ttq_lowrank_quantize",
+    "ttq_matmul", "ttq_policy", "unpack_bits", "unpack_int4",
+]

@@ -1,0 +1,102 @@
+"""Activation-aware diagonal statistics + AWQ closed form — paper §2 / Appendix C.
+
+The activation-aware loss  L = ‖(W-Ŵ)C^{1/2}‖²  with the diagonal approximation
+C ≈ D = diag[XX^T + λI]^α has the closed-form solution  Ŵ = Q[W·D^{1/2}]·D^{-1/2}.
+Following the paper's pseudo-code, the scaling vector already absorbs the 1/2
+power:  D_i = (‖X_i‖_p + λ)^α  and the QDQ is applied to W ∘ D (per input column).
+
+Two statistic forms:
+* ``raw``   — the paper's pseudo-code verbatim: D = (‖X_i‖_p + λ)^α.
+* ``blend`` — scale-stabilized Ledoit–Wolf-style shrinkage (paper eq. 13):
+  D = ((1-λ)·m_i + λ·mean(m))^{α/2} with m_i = ‖X_i‖²/T.  λ∈[0,1] blends the
+  activation-aware loss with the activation-unaware loss (paper eq. 14) and is
+  invariant to the activation scale and token count, which matters when stats
+  are accumulated across microbatches of different sizes.
+
+Sufficient statistics are additive (Σ_t |x_{t,i}|^p), so online accumulation
+over prefill chunks / microbatches is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .qdq import QuantConfig, qdq, quantize
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class AWQConfig:
+    """Activation-statistic hyper-parameters (paper Appendix F: α≈0.5, λ≈0.4, p=2)."""
+
+    p: float = 2.0
+    alpha: float = 0.5
+    lam: float = 0.4
+    form: str = "blend"  # 'raw' (paper pseudo-code) | 'blend' (eq. 13 shrinkage)
+
+
+def accumulate_stats(X: jnp.ndarray, p: float = 2.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sufficient statistic over tokens. X: (..., T, d) → (Σ|x|^p per feature (d,), count).
+
+    Leading axes (batch, chunks) are folded into the token axis.
+    """
+    Xf = X.astype(jnp.float32).reshape(-1, X.shape[-1])
+    if p == 2.0:
+        s = jnp.sum(Xf * Xf, axis=0)
+    elif p == 1.0:
+        s = jnp.sum(jnp.abs(Xf), axis=0)
+    else:
+        s = jnp.sum(jnp.abs(Xf) ** p, axis=0)
+    return s, jnp.asarray(Xf.shape[0], jnp.float32)
+
+
+def diag_from_stats(stat: jnp.ndarray, count: jnp.ndarray, cfg: AWQConfig) -> jnp.ndarray:
+    """Turn accumulated Σ|x|^p (d,) into the AWQ scaling vector D (d,)."""
+    stat = stat.astype(jnp.float32)
+    if cfg.form == "raw":
+        norm = stat ** (1.0 / cfg.p)                  # ‖X_i‖_p
+        D = (norm + cfg.lam) ** cfg.alpha
+    elif cfg.form == "blend":
+        # blend form is defined on the p=2 sufficient statistic (Σx²).
+        m = stat / jnp.maximum(count, 1.0)            # mean x² per feature = diag(C)
+        eta = jnp.mean(m)
+        Dsq = (1.0 - cfg.lam) * m + cfg.lam * eta     # shrunk diagonal of C (eq. 13)
+        D = jnp.maximum(Dsq, _EPS) ** (cfg.alpha / 2.0)
+    else:
+        raise ValueError(f"unknown AWQ form {cfg.form!r}")
+    return jnp.maximum(D, _EPS)
+
+
+def activation_diag(X: jnp.ndarray, cfg: AWQConfig = AWQConfig()) -> jnp.ndarray:
+    """One-shot D from raw activations X: (..., T, d) → (d,)."""
+    s, n = accumulate_stats(X, cfg.p)
+    return diag_from_stats(s, n, cfg)
+
+
+@partial(jax.jit, static_argnames=("qcfg",))
+def awq_qdq(W: jnp.ndarray, D: jnp.ndarray, qcfg: QuantConfig) -> jnp.ndarray:
+    """Fake-quant closed form  Ŵ = Q[W∘D]∘D⁻¹  (paper eq. 20). W: (d', d), D: (d,)."""
+    Dn = D[None, :].astype(jnp.float32)
+    return (qdq(W.astype(jnp.float32) * Dn, qcfg) / Dn).astype(W.dtype)
+
+
+@partial(jax.jit, static_argnames=("qcfg",))
+def awq_quantize(W: jnp.ndarray, D: jnp.ndarray, qcfg: QuantConfig):
+    """Real-quant path: quantize W∘D, keep D separate.
+
+    Returns (W_int, S, Z).  The matmul is  y = deq(W_int,S,Z) @ (x / D):
+    the 1/D prescale moves to the activation side (or is folded into the
+    preceding normalization scale — see serving/engine.py).
+    """
+    Ws = W.astype(jnp.float32) * D[None, :].astype(jnp.float32)
+    return quantize(Ws, qcfg)
+
+
+def awq_loss(W: jnp.ndarray, What: jnp.ndarray, C_diag: jnp.ndarray) -> jnp.ndarray:
+    """Diagnostic: activation-aware loss ‖(W-Ŵ)diag(c)^{1/2}‖² with c=E[x_i²]."""
+    E = (W - What).astype(jnp.float32)
+    return jnp.sum(E * E * C_diag[None, :].astype(jnp.float32))

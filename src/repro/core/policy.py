@@ -1,0 +1,48 @@
+"""Per-layer quantization policy — which matmuls get TTQ'd and how.
+
+A ``QuantPolicy`` is attached to a model config; the serving engine and the
+benchmarks consult it to decide, per named projection, the bits / groupsize /
+rank / activation-statistic settings, and whether the packed-int Pallas kernel
+or the fake-quant (QDQ) path is used.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Optional
+
+from .awq import AWQConfig
+from .qdq import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    method: str = "ttq"            # 'none' | 'rtn' | 'awq' | 'gptq' | 'ttq'
+    qcfg: QuantConfig = QuantConfig(bits=4, group_size=32, layout="row")
+    acfg: AWQConfig = AWQConfig()
+    rank: int = 0                  # low-rank residual rank r (0 = off)
+    skip: tuple = ("embed*", "lm_head", "*norm*", "router*",  # fnmatch patterns
+                   "w_gate*", "conv*", "pos_embed",           # tiny/elementwise
+                   "gamma", "beta")                           # norm params
+    packed: bool = False           # real int path (Pallas kernel) vs fake-quant
+    per_expert_stats: bool = True  # MoE: accumulate D per expert
+
+    def quantizes(self, name: str) -> bool:
+        if self.method == "none":
+            return False
+        return not any(fnmatch.fnmatch(name, pat) for pat in self.skip)
+
+    def with_(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+NO_QUANT = QuantPolicy(method="none")
+
+
+def ttq_policy(bits: int = 4, group_size: int = 32, rank: int = 16,
+               packed: bool = False, **kw) -> QuantPolicy:
+    return QuantPolicy(
+        method="ttq",
+        qcfg=QuantConfig(bits=bits, group_size=group_size, layout="row"),
+        rank=rank, packed=packed, **kw,
+    )

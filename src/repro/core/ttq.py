@@ -1,0 +1,286 @@
+"""TTQ — the paper's contribution as a composable JAX module.
+
+Lifecycle (paper Fig. 1b):
+
+    prefill (full precision, stats tap on)          decode (quantized)
+    ────────────────────────────────────►  quantize ────────────────►
+    stats[layer] += Σ_t |x_t|^p                 │    int4 matmul w/
+                                                ▼    prescaled x
+                             D = (stats^{1/p}+λ)^α
+                             W_int,S,Z = G[(W−BA)∘D]
+
+Three entry points:
+
+* :func:`calibrate`      — stats pytree → per-layer D vectors.
+* :func:`quantize_tree`  — fp param pytree (+ D tree, + optional low-rank tree)
+                           → :class:`QuantizedTensor` pytree (packed or fake).
+* :func:`ttq_linear`     — the functional linear used inside model forwards;
+                           dispatches on the param type (fp / QuantizedTensor).
+
+``QuantizedTensor`` is a pytree-registered dataclass so quantized parameter
+trees flow through jit / pjit / shard_map like any other params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .awq import AWQConfig, awq_quantize, diag_from_stats
+from .lowrank import svd_factors
+from .policy import QuantPolicy
+from .qdq import QuantConfig, dequantize, pack_bits, unpack_bits
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Groupwise-quantized weight (row layout): y = deq(Wint)·(x/D) [+ B(Ax)].
+
+    ``packed`` holds int32 nibble-packed data (d', d·bits/32) when the policy's
+    packed path is on, else ``wint`` holds int8.  Exactly one of the two is set.
+    """
+
+    wint: Optional[jnp.ndarray]      # (d', d) int8 | None
+    packed: Optional[jnp.ndarray]    # (d', d*bits//32) int32 | None
+    scale: jnp.ndarray               # (d', d//g) f32
+    zero: jnp.ndarray                # (d', d//g) f32
+    dinv: jnp.ndarray                # (d,) f32 — activation prescale 1/D
+    B: Optional[jnp.ndarray]         # (d', r) | None
+    A: Optional[jnp.ndarray]         # (r, d) | None
+    bits: int = 4
+    group_size: int = 32
+    out_features: int = 0
+    in_features: int = 0
+
+    def tree_flatten(self):
+        children = (self.wint, self.packed, self.scale, self.zero, self.dinv,
+                    self.B, self.A)
+        aux = (self.bits, self.group_size, self.out_features, self.in_features)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def qcfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.bits, group_size=self.group_size, layout="row")
+
+
+def calibrate(stats: Any, counts: Any, acfg: AWQConfig) -> Any:
+    """Map accumulated Σ|x|^p stats pytree → D pytree (matching structure)."""
+    return jax.tree.map(lambda s, n: diag_from_stats(s, n, acfg), stats, counts)
+
+
+def quantize_weight(W: jnp.ndarray, D: jnp.ndarray, policy: QuantPolicy,
+                    B: Optional[jnp.ndarray] = None,
+                    A: Optional[jnp.ndarray] = None) -> QuantizedTensor:
+    """Quantize one (d', d) weight online given its activation diagonal D."""
+    qcfg = policy.qcfg
+    if qcfg.layout != "row":
+        qcfg = dataclasses.replace(qcfg, layout="row")
+    Wf = W.astype(jnp.float32)
+    if B is not None and A is not None and policy.rank > 0:
+        Wf = Wf - B.astype(jnp.float32) @ A.astype(jnp.float32)
+    else:
+        B = A = None
+    wint, S, Z = awq_quantize(Wf, D, qcfg)
+    dinv = (1.0 / D).astype(jnp.float32)
+    packed = wint_out = None
+    if policy.packed and (32 % qcfg.bits == 0) and (W.shape[1] % (32 // qcfg.bits) == 0):
+        packed = pack_bits(wint.astype(jnp.int32), qcfg.bits)
+    else:
+        wint_out = wint
+    return QuantizedTensor(
+        wint=wint_out, packed=packed, scale=S, zero=Z, dinv=dinv, B=B, A=A,
+        bits=qcfg.bits, group_size=qcfg.group_size,
+        out_features=W.shape[0], in_features=W.shape[1],
+    )
+
+
+def init_lowrank_tree(params: Any, policy: QuantPolicy, is_weight) -> Any:
+    """Offline, data-free: top-r SVD factors per quantizable 2-D weight.
+
+    ``is_weight(path, leaf) → bool`` decides eligibility. Returns a pytree of
+    {'B','A'} dicts (None where ineligible) with the same treedef as params.
+    """
+    if policy.rank <= 0:
+        return jax.tree.map(lambda _: None, params)
+
+    def per_leaf(path, leaf):
+        if is_weight(path, leaf) and leaf.ndim == 2:
+            B, A = svd_factors(leaf, policy.rank)
+            return {"B": B, "A": A}
+        return None
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def dequant(qt: QuantizedTensor) -> jnp.ndarray:
+    """Effective fp weight  Ŵ = deq(Wint)∘D⁻¹ [+ BA]  — reference/debug path."""
+    wint = qt.wint
+    if wint is None:
+        wint = unpack_bits(qt.packed, qt.in_features, qt.bits).astype(jnp.uint8)
+    Wd = dequantize(wint, qt.scale, qt.zero, qt.qcfg)
+    W = Wd * qt.dinv[None, :]
+    if qt.B is not None:
+        W = W + qt.B.astype(jnp.float32) @ qt.A.astype(jnp.float32)
+    return W
+
+
+def ttq_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
+               use_kernel: bool = False, precision=None) -> jnp.ndarray:
+    """y = x @ Ŵᵀ for x: (..., d).  Kernel path uses the Pallas ttq_gemm.
+
+    The prescale x∘D⁻¹ happens on the (small) activation; the low-rank branch
+    runs in fp on the *unscaled* x (BA was subtracted before scaling).
+    """
+    xs = x * qt.dinv.astype(x.dtype)
+    if use_kernel and qt.packed is not None:
+        from repro.kernels import ops as kops  # local import: kernels are optional
+        y = kops.ttq_gemm(xs, qt.packed, qt.scale, qt.zero,
+                          bits=qt.bits, group_size=qt.group_size)
+    else:
+        wint = qt.wint
+        if wint is None:
+            wint = unpack_bits(qt.packed, qt.in_features, qt.bits)
+        Wd = dequantize(wint, qt.scale, qt.zero, qt.qcfg).astype(x.dtype)
+        y = jnp.einsum("...d,od->...o", xs, Wd, precision=precision)
+    if qt.B is not None:
+        y = y + jnp.einsum("...r,or->...o", jnp.einsum("...d,rd->...r", x, qt.A.astype(x.dtype)),
+                           qt.B.astype(x.dtype))
+    return y
+
+
+def ttq_linear(x: jnp.ndarray, w, **kw) -> jnp.ndarray:
+    """Dispatch: fp weight (d', d) → plain matmul; QuantizedTensor → ttq path."""
+    if isinstance(w, QuantizedTensor):
+        return ttq_matmul(x, w, **kw)
+    return jnp.einsum("...d,od->...o", x, w)
+
+
+# ---------------------------------------------------------------------------
+# whole-model quantization: join params ↔ activation stats by path
+# ---------------------------------------------------------------------------
+
+# projections sharing their input with a tapped sibling (one tap per input).
+STAT_ALIAS = {
+    "wk": "wq", "wv": "wq", "wkv_a": "wq", "wu": "wg",
+    "w_in": "w_branch", "w_z": "w_x", "w_B": "w_x", "w_C": "w_x", "w_dt": "w_x",
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(getattr(p, "key", p)))
+    return ".".join(parts)
+
+
+def _stats_key(rel_path: tuple) -> str:
+    """('u0','mix','wq') → 'u0.mix.wq' with alias resolution on the leaf name."""
+    *head, leaf = rel_path
+    leaf = STAT_ALIAS.get(leaf, leaf)
+    return ".".join([*head, leaf])
+
+
+def _lookup_stats(stats_run: dict, rel_path: tuple):
+    key = _stats_key(rel_path)
+    if key in stats_run:
+        return stats_run[key]
+    # expert weights: stats stored per 'experts.wg'/'experts.wd'
+    if rel_path[-1] in ("wg", "wu", "wd") and "experts" in rel_path:
+        leaf = "wg" if rel_path[-1] in ("wg", "wu") else "wd"
+        key2 = ".".join([*rel_path[:-1], leaf])
+        if key2 in stats_run:
+            return stats_run[key2]
+    return None
+
+
+def quantize_params(params, stats, policy: QuantPolicy, *,
+                    count: float = 1.0, acfg: Optional[AWQConfig] = None,
+                    lowrank_tree=None):
+    """TTQ the whole model: replace quantizable 2-D/3-D weights by
+    :class:`QuantizedTensor`, joining activation stats by param path.
+
+    ``stats`` is the structure produced by ``models.lm.forward(collect_stats=
+    True)``: {'stack': [run-dicts of Σx² leaves, leading run dim], ...}.
+    Weights whose stats are missing (untapped) or that match ``policy.skip``
+    stay in full precision.
+    """
+    acfg = acfg or policy.acfg
+    countf = jnp.asarray(count, jnp.float32)
+    is_rtn = policy.method == "rtn"
+
+    def quant_one(W, stat, BA):
+        if is_rtn:
+            D = jnp.ones((W.shape[-1],), jnp.float32)
+        else:
+            D = diag_from_stats(stat, countf, acfg)
+        B = A = None
+        if BA is not None:
+            B, A = BA["B"], BA["A"]
+        elif policy.rank > 0 and min(W.shape) > policy.rank:
+            B, A = svd_factors(W, policy.rank)
+        return quantize_weight(W, D, policy, B, A)
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2 or leaf.ndim > 4:
+            return leaf
+        if not policy.quantizes(ps.split(".")[-1]) or not policy.quantizes(ps):
+            return leaf
+        parts = ps.split(".")
+        ba = _tree_get(lowrank_tree, path) if lowrank_tree is not None else None
+        # locate the stats leaf for this weight (RTN needs none)
+        stat = None
+        if not is_rtn:
+            if parts[0] not in ("stack", "enc_stack"):
+                if isinstance(stats, dict) and ps in stats and leaf.ndim == 2:
+                    return quant_one(leaf, stats[ps], None)
+                return leaf
+            run = (stats or {}).get(parts[0])
+            if run is None:
+                return leaf
+            stat = _lookup_stats(run[int(parts[1])], tuple(parts[2:]))
+            if stat is None:
+                return leaf
+        elif (parts[0] in ("stack", "enc_stack") and leaf.ndim >= 3) \
+                or (parts[0] not in ("stack", "enc_stack") and leaf.ndim == 2):
+            # stacked weights are ≥3-D (run dim); stacked 1-D params (norm
+            # scales, decay vectors) must not be mistaken for 2-D weights
+            stat = jnp.zeros(leaf.shape[:-2] + leaf.shape[-1:], jnp.float32)
+        else:
+            return leaf
+        if ba is None:
+            fn = lambda W, s: quant_one(W, s, None)
+            for _ in range(leaf.ndim - 2):           # vmap over run / expert dims
+                fn = jax.vmap(fn)
+            return fn(leaf, stat)
+        fn = quant_one
+        for _ in range(leaf.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(leaf, stat, ba)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def _tree_get(tree, path):
+    node = tree
+    try:
+        for p in path:
+            key = p.key if isinstance(p, jax.tree_util.DictKey) else (
+                p.idx if isinstance(p, jax.tree_util.SequenceKey) else p)
+            node = node[key]
+        return node
+    except (KeyError, IndexError, TypeError):
+        return None

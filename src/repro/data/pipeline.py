@@ -1,0 +1,82 @@
+"""Deterministic synthetic multi-domain token pipeline.
+
+No datasets ship in this container, so the quality experiments need corpora
+with (a) learnable sequential structure and (b) *controllable domain shift*
+(the paper's central axis: AWQ calibrated on domain A, evaluated on domain B).
+
+Each domain is a random-parameter order-2 Markov chain over the vocabulary
+with a domain-specific sparse transition graph and unigram skew.  Different
+domains → different activation statistics → measurable AWQ calibration
+mismatch, exactly the WT2/PTB/C4 role in the paper.
+
+Everything is derived from (seed, domain_id, step) → fully deterministic,
+restart-safe (the trainer checkpoint stores only the step counter), and
+host-shardable (host h of H draws batch rows [h·B/H, (h+1)·B/H)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int = 256
+    seq_len: int = 128
+    batch: int = 8
+    branch: int = 8          # out-degree of the transition graph
+    seed: int = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    """Per-domain transition structure (device-resident, O(vocab·branch))."""
+    succ: jnp.ndarray        # (V, branch) int32 allowed successors
+    probs: jnp.ndarray       # (V, branch) f32 transition probabilities
+    start: jnp.ndarray       # (V,) f32 start distribution
+
+
+def make_domain(cfg: DataConfig, domain_id: int) -> DomainSpec:
+    rng = np.random.default_rng(cfg.seed * 1000 + domain_id)
+    V, B = cfg.vocab, cfg.branch
+    succ = rng.integers(0, V, size=(V, B)).astype(np.int32)
+    raw = rng.gamma(0.5, size=(V, B)).astype(np.float32) + 1e-3
+    probs = raw / raw.sum(1, keepdims=True)
+    start = rng.gamma(0.3, size=(V,)).astype(np.float32) + 1e-3
+    start = start / start.sum()
+    return DomainSpec(jnp.asarray(succ), jnp.asarray(probs), jnp.asarray(start))
+
+
+@partial(jax.jit, static_argnames=("batch", "seq_len"))
+def sample_batch(spec: DomainSpec, key, batch: int, seq_len: int):
+    """(batch, seq_len) int32 token matrix from the domain's Markov chain."""
+    k0, k1 = jax.random.split(key)
+    t0 = jax.random.categorical(k0, jnp.log(spec.start)[None], shape=(batch, 1))[:, 0]
+
+    def step(tok, k):
+        logp = jnp.log(spec.probs[tok])                  # (batch, branch)
+        pick = jax.random.categorical(k, logp)
+        nxt = jnp.take_along_axis(spec.succ[tok], pick[:, None], axis=1)[:, 0]
+        return nxt, nxt
+
+    keys = jax.random.split(k1, seq_len - 1)
+    _, rest = jax.lax.scan(step, t0, keys)
+    return jnp.concatenate([t0[:, None], rest.T], axis=1)
+
+
+def token_stream(cfg: DataConfig, domain_id: int, start_step: int = 0,
+                 host_id: int = 0, n_hosts: int = 1):
+    """Infinite deterministic iterator of {'tokens': (B_local, S)} batches."""
+    spec = make_domain(cfg, domain_id)
+    b_local = cfg.batch // n_hosts
+    step = start_step
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step * 65521 + domain_id)
+        full = sample_batch(spec, key, cfg.batch, cfg.seq_len)
+        yield {"tokens": full[host_id * b_local:(host_id + 1) * b_local]}
+        step += 1

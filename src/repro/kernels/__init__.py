@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``ttq_gemm``     — fused int-packed dequant matmul (the Marlin analogue):
+                     HBM int4/int8 weights → VMEM unpack+dequant → MXU.
+* ``ttq_quantize`` — the per-prompt online quantization as one streaming pass.
+
+``ops`` wraps both with jnp fallbacks; ``ref`` holds the pure-jnp oracles the
+tests assert against (interpret=True on CPU, compiled on TPU).
+"""
+from .ops import ttq_gemm, ttq_quantize
+
+__all__ = ["ttq_gemm", "ttq_quantize"]

@@ -1,0 +1,32 @@
+"""jit'd public wrappers for the Pallas kernels, with pure-jnp fallbacks.
+
+The rest of the framework calls these; ``use_pallas=False`` (or unsupported
+bit-widths) routes to the XLA fallback so every code path runs everywhere.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .ttq_gemm import ttq_gemm as _ttq_gemm_pallas
+from .ttq_quantize import ttq_quantize as _ttq_quantize_pallas
+
+_PACKABLE = (2, 4, 8)
+
+
+def ttq_gemm(x, packed, scale, zero, dinv=None, *, bits=4, group_size=32,
+             use_pallas=True, **block_kw):
+    if use_pallas and bits in _PACKABLE:
+        return _ttq_gemm_pallas(x, packed, scale, zero, dinv, bits=bits,
+                                group_size=group_size, **block_kw)
+    lead = x.shape[:-1]
+    y = _ref.ttq_gemm_ref(x.reshape(-1, x.shape[-1]), packed, scale, zero,
+                          bits=bits, group_size=group_size, dinv=dinv)
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def ttq_quantize(W, D, *, bits=4, group_size=32, use_pallas=True, **block_kw):
+    if use_pallas and bits in _PACKABLE:
+        return _ttq_quantize_pallas(W, D, bits=bits, group_size=group_size,
+                                    **block_kw)
+    return _ref.ttq_quantize_ref(W, D, bits=bits, group_size=group_size)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.qdq import unpack_bits
+
+
+def ttq_gemm_ref(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                 zero: jnp.ndarray, *, bits: int, group_size: int,
+                 dinv: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y (T, d') = x (T, d) [∘dinv] @ deq(packed (d', d·bits/32), S, Z)ᵀ, f32 accum."""
+    dp, _ = packed.shape[0], packed.shape[1]
+    d = x.shape[-1]
+    wint = unpack_bits(packed, d, bits).astype(jnp.float32)          # (d', d)
+    g = group_size
+    s = jnp.repeat(scale.astype(jnp.float32), g, axis=1)             # (d', d)
+    z = jnp.repeat(zero.astype(jnp.float32), g, axis=1)
+    W = wint * s + z
+    xf = x.astype(jnp.float32)
+    if dinv is not None:
+        xf = xf * dinv[None, :].astype(jnp.float32)
+    return xf @ W.T
+
+
+def ttq_quantize_ref(W: jnp.ndarray, D: jnp.ndarray, *, bits: int,
+                     group_size: int):
+    """Online scaled groupwise quantize+pack.
+
+    W (d', d), D (d,) → packed (d', d·bits/32) int32, S (d', d/g) f32, Z (d', d/g) f32.
+    """
+    qmax = (1 << bits) - 1
+    g = group_size
+    dp, d = W.shape
+    Ws = W.astype(jnp.float32) * D[None, :].astype(jnp.float32)
+    Wg = Ws.reshape(dp, d // g, g)
+    wmax = Wg.max(axis=-1)
+    wmin = Wg.min(axis=-1)
+    S = jnp.maximum((wmax - wmin) / qmax, 1e-12)
+    Z = wmin
+    wint = jnp.clip(jnp.round((Wg - Z[..., None]) / S[..., None]), 0, qmax)
+    wint = wint.reshape(dp, d).astype(jnp.int32)
+    per = 32 // bits
+    shifts = jnp.arange(per, dtype=jnp.int32) * bits
+    packed = (wint.reshape(dp, d // per, per) << shifts).sum(axis=-1)
+    return packed, S, Z

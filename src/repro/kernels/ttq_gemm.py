@@ -1,0 +1,132 @@
+"""Pallas-TPU fused dequant matmul — the Marlin analogue for TPU v5e.
+
+y (T, d') = x (T, d) [∘ D⁻¹] @ deq(W_packed)ᵀ
+
+Weights live in HBM packed ``32//bits`` values per int32, (d', d·bits/32) —
+the 4-bit path moves 4× fewer weight bytes than bf16, which is the entire
+speedup mechanism for memory-bound decode (paper Appendix H, Tables 4-8).
+Per k-tile the kernel:
+
+  HBM→VMEM  w_packed (bn, bk·bits/32) int32, scale/zero (bn, bk/g)
+  VPU       unpack nibbles (shift+mask), dequantize to f32 with the groupwise
+            scale broadcast, optional x-tile prescale by D⁻¹ (prologue fusion
+            the paper could not do on CUDA)
+  MXU       (bm, bk) @ (bk, bn) accumulate f32 into the output tile
+
+Grid (T/bm, d'/bn, d/bk) with the k axis marked "arbitrary" (sequential
+accumulation); bm/bn default 128 (MXU-aligned), bk 256.  Block constraints:
+bk % group_size == 0 and bk % (32//bits) == 0.
+
+Validated in interpret mode on CPU (this container); on real hardware the
+(bn, bk/g) scale tiles with g=32 imply an 8-lane broadcast-reshape that Mosaic
+supports via jnp.repeat; g ∈ {128, 256} is layout-optimal (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, w_ref, s_ref, z_ref, dinv_ref, o_ref, *, bits: int,
+                 group_size: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    per = 32 // bits
+    mask = (1 << bits) - 1
+    packed = w_ref[...]                                   # (bn, bk//per) int32
+    bn, bkp = packed.shape
+    bk = bkp * per
+    shifts = (jnp.arange(per, dtype=jnp.int32) * bits)[None, None, :]
+    wint = (packed[:, :, None] >> shifts) & mask          # (bn, bk//per, per)
+    wint = wint.reshape(bn, bk).astype(jnp.float32)
+    g = group_size
+    s = jnp.repeat(s_ref[...].astype(jnp.float32), g, axis=1)   # (bn, bk)
+    z = jnp.repeat(z_ref[...].astype(jnp.float32), g, axis=1)
+    w = wint * s + z                                      # dequantized (bn, bk)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+    if dinv_ref is not None:
+        x = x * dinv_ref[...].astype(jnp.float32)         # (1, bk) broadcast
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pad_to(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "bm", "bn", "bk", "interpret"),
+)
+def ttq_gemm(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+             zero: jnp.ndarray, dinv: jnp.ndarray | None = None, *,
+             bits: int = 4, group_size: int = 32,
+             bm: int = 128, bn: int = 128, bk: int = 256,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """x: (..., d) → (..., d'). packed: (d', d·bits/32) int32; S,Z: (d', d/g)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    per = 32 // bits
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    dp = packed.shape[0]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+
+    bm = min(bm, max(8, ((T + 7) // 8) * 8))
+    bk = min(bk, d)
+    assert d % bk == 0 or bk >= d, "d must tile by bk"
+    if bk % group_size or bk % per:
+        raise ValueError(f"bk={bk} must be divisible by group_size={group_size} and {per}")
+    bn = min(bn, dp)
+
+    x2 = _pad_to(x2, bm, 0)
+    packed_p = _pad_to(packed, bn, 0)
+    scale_p = _pad_to(scale, bn, 0)
+    zero_p = _pad_to(zero, bn, 0)
+    Tp, dpp = x2.shape[0], packed_p.shape[0]
+    n_k = d // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bn, bk // per), lambda i, j, k: (j, k)),
+        pl.BlockSpec((bn, bk // group_size), lambda i, j, k: (j, k)),
+        pl.BlockSpec((bn, bk // group_size), lambda i, j, k: (j, k)),
+    ]
+    args = [x2, packed_p, scale_p, zero_p]
+    if dinv is not None:
+        in_specs.append(pl.BlockSpec((1, bk), lambda i, j, k: (0, k)))
+        args.append(dinv.reshape(1, d))
+        kern = functools.partial(_gemm_kernel, bits=bits, group_size=group_size, n_k=n_k)
+    else:
+        kern = functools.partial(
+            lambda xr, wr, sr, zr, orf, **kw: _gemm_kernel(xr, wr, sr, zr, None, orf, **kw),
+            bits=bits, group_size=group_size, n_k=n_k)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(Tp // bm, dpp // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, dpp), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(*args)
+    return out[:T, :dp].reshape(*lead, dp).astype(x.dtype)

@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run — .lower().compile() for every (arch × shape × mesh).
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices build the production meshes; every cell's step is lowered with
+explicit in/out shardings, compiled (SPMD partitioner runs for real), and its
+memory/cost/collective analysis is cached to results/dryrun/<cell>.json.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--force] [--quant none|ttq4|ttq4r16]
+
+Cells skipped per DESIGN.md §5 (long_500k on full-attention archs) are
+recorded with their skip reason.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get, skip_reason
+from repro.core import ttq_policy
+from repro.launch import steps as S
+from repro.launch.analysis import roofline
+from repro.launch.mesh import make_ctx, make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def cell_id(arch, shape, mesh_kind, quant):
+    tag = ""
+    lvl = os.environ.get("REPRO_OPT_LEVEL")
+    if lvl is not None and lvl != "1":
+        tag = f"__opt{lvl}"
+    return f"{arch}__{shape}__{mesh_kind}__{quant}{tag}"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, quant: str = "ttq4",
+             force: bool = False, extra_tag: str = "") -> dict:
+    os.makedirs(RESULTS, exist_ok=True)
+    cid = cell_id(arch, shape, mesh_kind, quant) + extra_tag
+    path = os.path.join(RESULTS, cid + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get(arch)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "quant": quant,
+           "opt_level": int(os.environ.get("REPRO_OPT_LEVEL", "1"))}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["skipped"] = reason
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    pctx = make_ctx(mesh)
+    n_chips = mesh.devices.size
+    seq, gbatch, kind = SHAPES[shape]
+    t0 = time.time()
+    try:
+        if kind == "train":
+            fn, args, meta = S.build_train_cell(cfg, pctx, shape)
+        elif kind == "prefill":
+            fn, args, meta = S.build_prefill_cell(cfg, pctx, shape)
+        else:
+            policy = {"none": None,
+                      "ttq4": ttq_policy(bits=4, group_size=32, rank=0, packed=True),
+                      "ttq4r16": ttq_policy(bits=4, group_size=32, rank=16, packed=True),
+                      "bf16": ttq_policy(bits=4, group_size=32).with_(method="none"),
+                      }[quant]
+            fn, args, meta = S.build_decode_cell(cfg, pctx, shape, policy=policy)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        try:  # cache post-SPMD HLO → roofline re-analysis without recompiling
+            import zstandard as zstd
+            with open(os.path.join(RESULTS, cid + ".hlo.zst"), "wb") as zf:
+                zf.write(zstd.ZstdCompressor(level=3).compress(
+                    compiled.as_text().encode()))
+        except Exception:
+            pass
+        mf = 0.0
+        toks = gbatch * (seq if kind != "decode" else 1)
+        n_active = cfg.active_param_count()
+        mf = (6.0 if kind == "train" else 2.0) * n_active * toks
+        rec.update(meta)
+        from repro.launch.napkin import analytic_terms
+        rec.update({
+            "seq": seq, "global_batch": gbatch, "kind": kind,
+            "n_chips": n_chips, "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "roofline": roofline(compiled, n_chips, model_flops=mf),
+            "analytic": analytic_terms(cfg, shape, n_chips),
+        })
+        print(f"[OK] {cid}: compile {t_compile:.0f}s "
+              f"dominant={rec['roofline']['dominant']}")
+        print("  memory_analysis:", rec["roofline"]["memory_analysis"])
+        ca = {k: v for k, v in rec["roofline"].items() if k.startswith("t_")}
+        print("  roofline terms:", ca)
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAIL] {cid}: {rec['error']}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="ttq4")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                rec = run_cell(a, s, m, args.quant, force=args.force)
+                if "error" in rec:
+                    n_fail += 1
+                elif "skipped" in rec:
+                    n_skip += 1
+                else:
+                    n_ok += 1
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

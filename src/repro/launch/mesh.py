@@ -1,0 +1,24 @@
+"""Production mesh construction (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel import ParallelCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(mesh, *, moe_impl: str = "a2a") -> ParallelCtx:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    return ParallelCtx(mesh=mesh, data_axes=data_axes, model_axis="model",
+                       moe_impl=moe_impl)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    return jax.make_mesh((data, model), ("data", "model"))

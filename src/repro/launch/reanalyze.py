@@ -1,0 +1,59 @@
+"""Re-derive roofline terms from cached .hlo.zst texts (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+import glob
+import json
+import os
+
+import zstandard as zstd
+
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS, HloCost
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def reanalyze_cell(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        rec = json.load(f)
+    if "roofline" not in rec:
+        return False
+    with open(hlo_path, "rb") as f:
+        text = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    flops, byts, coll = HloCost(text).cost()
+    cbytes = sum(coll.values())
+    rl = rec["roofline"]
+    rl.update({
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": cbytes,
+        "collectives": {k: int(v) for k, v in coll.items()},
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": byts / HBM_BW,
+        "t_collective_s": cbytes / ICI_BW,
+    })
+    terms = [("compute", rl["t_compute_s"]), ("memory", rl["t_memory_s"]),
+             ("collective", rl["t_collective_s"])]
+    rl["dominant"] = max(terms, key=lambda kv: kv[1])[0]
+    if rl.get("model_flops"):
+        tot = flops * rl["n_chips"]
+        rl["useful_flop_ratio"] = rl["model_flops"] / tot if tot else 0.0
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return True
+
+
+def main():
+    n = 0
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        if reanalyze_cell(p):
+            n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Per-cell step builders for the dry-run: (arch × shape × mesh) → jitted fn +
+abstract inputs + shardings.  Nothing here allocates device memory — params,
+optimizer state, caches and stats are all ``jax.eval_shape`` products.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.core import AWQConfig, QuantPolicy, quantize_params, ttq_policy
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+from repro.parallel import ParallelCtx, param_sharding, state_sharding
+from repro.parallel.rules import divisible_spec
+from repro.training.trainer import TrainConfig, make_train_step, opt_sharding
+
+P = jax.sharding.PartitionSpec
+
+
+def _ns(mesh, spec):
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    seq, gbatch, kind = SHAPES[shape_name]
+    if kind == "train":
+        b = {"tokens": jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)}
+        if cfg.family == "encdec":
+            b["frames"] = jax.ShapeDtypeStruct(
+                (gbatch, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+        return b
+    if kind == "prefill":
+        b = {"tokens": jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)}
+        if cfg.family == "encdec":
+            b["frames"] = jax.ShapeDtypeStruct(
+                (gbatch, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+        return b
+    # decode: one new token against a seq-long cache
+    return {"token": jax.ShapeDtypeStruct((gbatch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((gbatch,), jnp.int32)}
+
+
+def params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def _batch_shardings(batch_sds, pctx):
+    dp = pctx.dp
+    return jax.tree.map(
+        lambda s: _ns(pctx.mesh, divisible_spec(
+            P(dp, *([None] * (s.ndim - 1))), s.shape, pctx.mesh)), batch_sds)
+
+
+# --------------------------------------------------------------------- train
+
+def build_train_cell(cfg: ModelConfig, pctx: ParallelCtx, shape_name: str,
+                     n_microbatches: Optional[int] = None):
+    seq, gbatch, kind = SHAPES[shape_name]
+    assert kind == "train"
+    mesh = pctx.mesh
+    dp_size = 1
+    for a in pctx.data_axes:
+        dp_size *= mesh.shape[a]
+    nmb = n_microbatches or max(1, gbatch // dp_size)
+    tcfg = TrainConfig(n_microbatches=nmb, remat=True, zero1=True)
+    opt_sds = jax.eval_shape(
+        lambda k: adamw_init(lm.init_params(cfg, k)), jax.random.PRNGKey(0))
+    batch_sds = input_specs(cfg, shape_name)
+    pshard = param_sharding(opt_sds["master"], pctx)
+    oshard = opt_sharding(opt_sds, pshard, pctx, tcfg.zero1)
+    bshard = _batch_shardings(batch_sds, pctx)
+    step = make_train_step(cfg, tcfg, pctx)
+    fn = jax.jit(step, in_shardings=(oshard, bshard),
+                 out_shardings=(oshard, None), donate_argnums=(0,))
+    return fn, (opt_sds, batch_sds), {"n_microbatches": nmb}
+
+
+# ------------------------------------------------------------------- prefill
+
+def build_prefill_cell(cfg: ModelConfig, pctx: ParallelCtx, shape_name: str):
+    seq, gbatch, kind = SHAPES[shape_name]
+    assert kind == "prefill"
+    mesh = pctx.mesh
+    params_sds = params_abstract(cfg)
+    batch_sds = input_specs(cfg, shape_name)
+    pshard = param_sharding(params_sds, pctx)
+    bshard = _batch_shardings(batch_sds, pctx)
+    pf = partial(lm.prefill, cfg, pctx=pctx, collect_stats=True,
+                 full_logits=False)
+    _, state_sds, stats_sds = jax.eval_shape(
+        lambda p, b: pf(p, b, max_len=seq), params_sds, batch_sds)
+    sshard = state_sharding(state_sds, pctx)
+    stats_shard = jax.tree.map(lambda s: _ns(mesh, P(*([None] * s.ndim))),
+                               stats_sds)
+    logits_shard = _ns(mesh, divisible_spec(P(pctx.dp, "model"),
+                                            (gbatch, cfg.vocab), mesh))
+    fn = jax.jit(lambda p, b: pf(p, b, max_len=seq),
+                 in_shardings=(pshard, bshard),
+                 out_shardings=(logits_shard, sshard, stats_shard))
+    return fn, (params_sds, batch_sds), {}
+
+
+# -------------------------------------------------------------------- decode
+
+def quantized_params_abstract(cfg: ModelConfig, policy: QuantPolicy, seq: int,
+                              gbatch: int):
+    """Abstract quantized param tree = eval_shape(prefill → quantize)."""
+    params_sds = params_abstract(cfg)
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((gbatch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        batch_sds["frames"] = jax.ShapeDtypeStruct(
+            (gbatch, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+    _, state_sds, stats_sds = jax.eval_shape(
+        lambda p, b: lm.prefill(cfg, p, b, max_len=seq, collect_stats=True,
+                                full_logits=False),
+        params_sds, batch_sds)
+    if policy.method == "none":
+        return params_sds, state_sds
+    qparams_sds = jax.eval_shape(
+        lambda p, s: quantize_params(p, s, policy, count=float(seq * gbatch)),
+        params_sds, stats_sds)
+    return qparams_sds, state_sds
+
+
+def build_decode_cell(cfg: ModelConfig, pctx: ParallelCtx, shape_name: str,
+                      policy: Optional[QuantPolicy] = None,
+                      seq_shard_kv: Optional[bool] = None):
+    seq, gbatch, kind = SHAPES[shape_name]
+    assert kind == "decode"
+    mesh = pctx.mesh
+    if policy is None:
+        policy = ttq_policy(bits=4, group_size=32, rank=0, packed=True)
+    qparams_sds, state_sds = quantized_params_abstract(cfg, policy, seq, gbatch)
+    batch_sds = input_specs(cfg, shape_name)
+    pshard = param_sharding(qparams_sds, pctx)
+    if seq_shard_kv is None:
+        seq_shard_kv = gbatch == 1          # long_500k: engage the data axis
+    sshard = state_sharding(state_sds, pctx,
+                            seq_axis="data" if seq_shard_kv else None)
+    tshard = _batch_shardings(batch_sds, pctx)
+    logits_shard = _ns(mesh, divisible_spec(P(pctx.dp, "model"),
+                                            (gbatch, cfg.vocab), mesh))
+    fn = jax.jit(partial(lm.decode_step, cfg, pctx=pctx),
+                 in_shardings=(pshard, sshard, tshard["token"], tshard["pos"]),
+                 out_shardings=(logits_shard, sshard),
+                 donate_argnums=(1,))
+    return fn, (qparams_sds, state_sds, batch_sds["token"], batch_sds["pos"]), \
+        {"policy": dataclasses.asdict(policy)}

@@ -1,0 +1,6 @@
+"""Model zoo public API."""
+from . import lm
+from .config import (EncDecCfg, HybridCfg, MLACfg, ModelConfig, MoECfg, SSMCfg)
+
+__all__ = ["lm", "ModelConfig", "MoECfg", "MLACfg", "HybridCfg", "SSMCfg",
+           "EncDecCfg"]

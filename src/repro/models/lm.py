@@ -1,0 +1,178 @@
+"""Top-level language model — embed → stack(s) → norm → vocab head.
+
+Uniform API across all 10 assigned families:
+
+    init_params(cfg, key)                       → params pytree
+    forward(cfg, params, batch, ...)            → (logits, stats, states)
+    loss_fn(cfg, params, batch, ...)            → (loss, aux)
+    init_decode_state(cfg, batch, max_len)      → DecodeState
+    prefill(cfg, params, batch, max_len, ...)   → (last_logits, state, stats)
+    decode_step(cfg, params, state, token, pos) → (logits, state)
+
+``batch`` is a dict: {'tokens': (B,S) int32} and, for encdec, also
+{'frames': (B, n_frames, d_model)} — the spec'd stub modality frontend.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import stack as S
+from .common import linear, norm, init_norm, sinusoidal_pos
+from .config import ModelConfig
+
+P = jax.sharding.PartitionSpec
+
+
+def _wsc(x, spec, pctx):
+    if pctx is None or pctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(pctx.mesh, spec))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    D = cfg.d_model
+    p: dict = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, D), jnp.float32)
+                  * D ** -0.5).astype(jnp.bfloat16),
+        "stack": S.init_stack(ks[1], cfg, S.stack_spec(cfg)),
+        "final_norm": init_norm(D, "rms" if cfg.norm == "rms" else "layer"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(ks[2], (cfg.vocab, D), jnp.float32)
+                        * D ** -0.5).astype(jnp.bfloat16)
+    if cfg.pos == "learned":
+        p["pos_embed"] = (jax.random.normal(ks[3], (cfg.max_seq, D), jnp.float32)
+                          * 0.02).astype(jnp.bfloat16)
+    if cfg.family == "encdec":
+        p["enc_stack"] = S.init_stack(ks[4], cfg, S.enc_spec(cfg))
+        p["enc_norm"] = init_norm(D, "rms" if cfg.norm == "rms" else "layer")
+    return p
+
+
+def _embed(cfg, params, tokens, pctx, pos0: int = 0):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos == "learned":
+        S_ = tokens.shape[1]
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos0, S_, 0)[None]
+    dp = None if pctx is None else pctx.data_axes
+    return _wsc(x, P(dp, None, None), pctx)
+
+
+def _head(cfg, params, x, pctx):
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = linear(x, w).astype(jnp.float32)
+    dp = None if pctx is None else pctx.data_axes
+    mp = None if pctx is None else pctx.model_axis
+    return _wsc(logits, P(dp, None, mp), pctx)
+
+
+def _encode(cfg, params, frames, pctx, stats_on=False):
+    x = frames.astype(jnp.bfloat16) + sinusoidal_pos(frames.shape[1], cfg.d_model)[None]
+    x, st, _ = S.apply_stack_seq(cfg, params["enc_stack"], S.enc_spec(cfg), x,
+                                 stats_on=stats_on, pctx=pctx)
+    return norm(x, params["enc_norm"]), st
+
+
+def forward(cfg: ModelConfig, params, batch, *, collect_stats=False, pctx=None,
+            want_state=False, max_len=0, remat=False):
+    """Full-sequence forward. Returns (logits, stats, states).
+
+    stats: {'stack': [per-run dict], 'enc_stack': [...]} of Σx² leaves
+    (leading run-repeat dim), path-aligned with params for the TTQ join.
+    """
+    tokens = batch["tokens"]
+    enc_out = None
+    stats: dict = {}
+    if cfg.family == "encdec":
+        enc_out, enc_stats = _encode(cfg, params, batch["frames"], pctx,
+                                     stats_on=collect_stats)
+        if collect_stats:
+            stats["enc_stack"] = enc_stats
+    x = _embed(cfg, params, tokens, pctx)
+    x, run_stats, states = S.apply_stack_seq(
+        cfg, params["stack"], S.stack_spec(cfg), x, stats_on=collect_stats,
+        pctx=pctx, enc_out=enc_out, want_state=want_state, max_len=max_len,
+        remat=remat)
+    if collect_stats:
+        stats["stack"] = run_stats
+    x = norm(x, params["final_norm"])
+    logits = _head(cfg, params, x, pctx)
+    return logits, (stats if collect_stats else None), states
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, pctx=None, remat=False):
+    """Next-token cross-entropy (vocab-sharded logsumexp — no full gather)."""
+    logits, _, _ = forward(cfg, params, batch, pctx=pctx, remat=remat)
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+    if mask.shape[1] == batch["tokens"].shape[1]:
+        mask = mask[:, 1:]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    return loss, {"loss": loss, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    st: dict = {"stack": S.init_stack_state(cfg, S.stack_spec(cfg), batch, max_len)}
+    if cfg.family == "encdec":
+        st["enc_out"] = jnp.zeros((batch, cfg.encdec.n_frames, cfg.d_model),
+                                  jnp.bfloat16)
+    return st
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
+            collect_stats=True, pctx=None, full_logits=False):
+    """Run the prompt, build decode state + TTQ activation statistics."""
+    tokens = batch["tokens"]
+    enc_out = None
+    stats: dict = {}
+    if cfg.family == "encdec":
+        enc_out, enc_stats = _encode(cfg, params, batch["frames"], pctx,
+                                     stats_on=collect_stats)
+        if collect_stats:
+            stats["enc_stack"] = enc_stats
+    x = _embed(cfg, params, tokens, pctx)
+    x, run_stats, states = S.apply_stack_seq(
+        cfg, params["stack"], S.stack_spec(cfg), x, stats_on=collect_stats,
+        pctx=pctx, enc_out=enc_out, want_state=True, max_len=max_len)
+    if collect_stats:
+        stats["stack"] = run_stats
+    x = norm(x, params["final_norm"])
+    if full_logits:
+        logits = _head(cfg, params, x, pctx)
+    else:
+        logits = _head(cfg, params, x[:, -1:], pctx)[:, 0]
+    state: dict = {"stack": states}
+    if enc_out is not None:
+        state["enc_out"] = enc_out
+    return logits, state, (stats if collect_stats else None)
+
+
+def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None):
+    """token: (B,1) int32; pos: (B,) int32 per-slot positions (scalar ok)."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (token.shape[0],))
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None]
+    dp = None if pctx is None else pctx.data_axes
+    x = _wsc(x, P(dp, None, None), pctx)
+    x, new_states = S.apply_stack_decode(cfg, params["stack"], S.stack_spec(cfg),
+                                         state["stack"], x, pos, pctx=pctx)
+    x = norm(x, params["final_norm"])
+    logits = _head(cfg, params, x, pctx)
+    new_state = dict(state)
+    new_state["stack"] = new_states
+    return logits[:, 0], new_state

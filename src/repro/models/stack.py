@@ -1,0 +1,322 @@
+"""Layer-stack machinery — scan over homogeneous units, heterogeneous patterns.
+
+A stack is a list of *runs*; each run repeats a *unit* (tuple of layer kinds)
+``n`` times and is executed with one ``lax.scan`` whose xs are the stacked
+unit params — HLO size stays O(#distinct units), not O(depth), which keeps the
+88-layer × 512-device dry-run compilable (DESIGN.md §6).
+
+Layer kinds:  attn | lattn (windowed) | enc (non-causal) | xdec (self+cross)
+              mla | rec (RG-LRU) | ssd (Mamba2)
+MLP kinds per layer are derived from the config (glu | plain | moe | none).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+from .common import glu_mlp, init_glu_mlp, init_norm, init_plain_mlp, linear, norm, plain_mlp
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# stack spec
+# ---------------------------------------------------------------------------
+
+def stack_spec(cfg: ModelConfig):
+    """[(unit_kinds, n_repeat)] for the decoder stack."""
+    if cfg.family == "hybrid":
+        pat = tuple(cfg.hybrid.pattern)
+        pat = tuple("lattn" if k == "attn" else k for k in pat)
+        n_full = cfg.n_layers // len(pat)
+        runs = [(pat, n_full)] if n_full else []
+        rem = cfg.n_layers % len(pat)
+        if rem:
+            runs.append((pat[:rem], 1))
+        return runs
+    kind = {"ssm": "ssd", "encdec": "xdec"}.get(cfg.family, None)
+    if kind is None:
+        kind = "mla" if cfg.mla is not None else "attn"
+    return [((kind,), cfg.n_layers)]
+
+
+def enc_spec(cfg: ModelConfig):
+    return [(("enc",), cfg.encdec.n_enc_layers)]
+
+
+def mlp_kind(cfg: ModelConfig, layer_kind: str) -> str:
+    if layer_kind == "ssd":
+        return "none"
+    if cfg.moe is not None and layer_kind != "enc":
+        return "moe"
+    return cfg.mlp
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply / decode / state
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str):
+    D = cfg.d_model
+    nk = "rms" if cfg.norm == "rms" else "layer"
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": init_norm(D, nk)}
+    if kind in ("attn", "lattn", "enc", "xdec"):
+        p["mix"] = L.init_attn(ks[0], cfg)
+    elif kind == "mla":
+        p["mix"] = L.init_mla(ks[0], cfg)
+    elif kind == "rec":
+        p["mix"] = L.init_rec(ks[0], cfg)
+    elif kind == "ssd":
+        p["mix"] = L.init_ssd(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "xdec":
+        p["lnx"] = init_norm(D, nk)
+        p["xattn"] = L.init_attn(ks[1], cfg, cross=True)
+    mk = mlp_kind(cfg, kind)
+    if mk == "glu":
+        p["ln2"] = init_norm(D, nk)
+        p["mlp"] = init_glu_mlp(ks[2], D, cfg.d_ff)
+    elif mk == "plain":
+        p["ln2"] = init_norm(D, nk)
+        p["mlp"] = init_plain_mlp(ks[2], D, cfg.d_ff)
+    elif mk == "moe":
+        p["ln2"] = init_norm(D, nk)
+        p["mlp"] = L.init_moe(ks[2], cfg)
+    return p
+
+
+def layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "lattn"):
+        ml = min(max_len, cfg.hybrid.window) if (kind == "lattn" and cfg.hybrid) else max_len
+        return L.attn_init_state(cfg, batch, ml)
+    if kind == "xdec":
+        st = L.attn_init_state(cfg, batch, max_len)
+        nf = cfg.encdec.n_frames
+        st["xk"] = jnp.zeros((batch, cfg.n_kv_heads, nf, cfg.hd), L.DTYPE)
+        st["xv"] = jnp.zeros((batch, cfg.n_kv_heads, nf, cfg.hd), L.DTYPE)
+        return st
+    if kind == "mla":
+        return L.mla_init_state(cfg, batch, max_len)
+    if kind == "rec":
+        return L.rec_init_state(cfg, batch, max_len)
+    if kind == "ssd":
+        return L.ssd_init_state(cfg, batch, max_len)
+    raise ValueError(kind)
+
+
+def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx):
+    mk = mlp_kind(cfg, kind)
+    if mk == "none":
+        return x
+    h = norm(x, p["ln2"])
+    if mk == "glu":
+        y = glu_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act)
+    elif mk == "plain":
+        y = plain_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act)
+    else:  # moe
+        pp = prefix + "mlp."
+        if pctx is not None and pctx.moe_impl == "a2a" and pctx.mesh is not None:
+            y, moe_stats = L.moe_a2a(cfg, p["mlp"], h, stats is not None, pp, pctx)
+            if stats is not None:
+                for k_, v_ in moe_stats.items():
+                    stats[k_] = stats.get(k_, 0.0) + v_
+        else:
+            y = L.moe_apply_dense(cfg, p["mlp"], h, stats, pp)
+        if cfg.moe.n_shared:
+            y = y + glu_mlp(h, p["mlp"]["shared"], stats, pp + "shared", cfg.act)
+    y = _ckpt_name(y, "mlp_out")   # post-AR activation
+    return x + y
+
+
+def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
+                    pctx=None, enc_out=None, want_state: bool = False,
+                    max_len: int = 0, pos0: int = 0, state=None):
+    """Sequence mode (train / prefill).  Returns (x, state|None)."""
+    h = norm(x, p["ln1"])
+    st = None
+    if kind in ("attn", "lattn", "enc"):
+        window = cfg.hybrid.window if (kind == "lattn" and cfg.hybrid) else 0
+        if want_state:
+            y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                                     causal=kind != "enc", window=window,
+                                     pos0=pos0, return_kv=True)
+            ml = min(max_len, window) if window else max_len
+            S = min(k.shape[2], ml)
+            kk, vv = k[:, :, -S:], v[:, :, -S:]
+            if window and k.shape[2] >= window:
+                # rolling layout: absolute position p lives at slot p % window
+                kk = jnp.roll(kk, k.shape[2] % window, axis=2)
+                vv = jnp.roll(vv, k.shape[2] % window, axis=2)
+            z = L.attn_init_state(cfg, x.shape[0], ml)
+            st = {"k": jax.lax.dynamic_update_slice(z["k"], kk.astype(L.DTYPE), (0, 0, 0, 0)),
+                  "v": jax.lax.dynamic_update_slice(z["v"], vv.astype(L.DTYPE), (0, 0, 0, 0))}
+        else:
+            y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                             causal=kind != "enc", window=window, pos0=pos0)
+    elif kind == "xdec":
+        if want_state:
+            y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                                     causal=True, pos0=pos0, return_kv=True)
+            z = L.attn_init_state(cfg, x.shape[0], max_len)
+            st = {"k": jax.lax.dynamic_update_slice(z["k"], k.astype(L.DTYPE), (0, 0, 0, 0)),
+                  "v": jax.lax.dynamic_update_slice(z["v"], v.astype(L.DTYPE), (0, 0, 0, 0))}
+        else:
+            y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                             causal=True, pos0=pos0)
+        x = x + y
+        hx = norm(x, p["lnx"])
+        if want_state:
+            yx, (xk, xv) = L.attn_apply(cfg, p["xattn"], hx, stats, prefix + "xattn.",
+                                        x_cross=enc_out, return_kv=True)
+            st["xk"], st["xv"] = xk.astype(L.DTYPE), xv.astype(L.DTYPE)
+        else:
+            yx = L.attn_apply(cfg, p["xattn"], hx, stats, prefix + "xattn.",
+                              x_cross=enc_out)
+        x = x + yx
+        return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx), st
+    elif kind == "mla":
+        if want_state:
+            y, cache = L.mla_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                                   pos0=pos0, return_cache=True)
+            z = L.mla_init_state(cfg, x.shape[0], max_len)
+            st = {k_: jax.lax.dynamic_update_slice(z[k_], cache[k_].astype(L.DTYPE), (0, 0, 0))
+                  for k_ in ("latent", "k_rope")}
+        else:
+            y = L.mla_apply(cfg, p["mix"], h, stats, prefix + "mix.", pos0=pos0)
+    elif kind == "rec":
+        if want_state:
+            y, st = L.rec_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                                return_state=True)
+        else:
+            y = L.rec_apply(cfg, p["mix"], h, stats, prefix + "mix.")
+    elif kind == "ssd":
+        if want_state:
+            y, st = L.ssd_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                                return_state=True)
+        else:
+            y = L.ssd_apply(cfg, p["mix"], h, stats, prefix + "mix.")
+    else:
+        raise ValueError(kind)
+    y = _ckpt_name(y, "mix_out")    # post-AR activation
+    x = x + y
+    return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx), st
+
+
+def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *, pctx=None):
+    """Single-token decode; pos: (B,) per-slot positions. Returns (x, new_state)."""
+    h = norm(x, p["ln1"])
+    if kind in ("attn", "lattn"):
+        window = cfg.hybrid.window if (kind == "lattn" and cfg.hybrid) else 0
+        if window:
+            y, st = L.attn_decode_rolling(cfg, p["mix"], h, state, pos, window)
+        else:
+            y, st = L.attn_decode(cfg, p["mix"], h, state, pos)
+    elif kind == "xdec":
+        y, st = L.attn_decode(cfg, p["mix"], h, {"k": state["k"], "v": state["v"]}, pos)
+        x = x + y
+        hx = norm(x, p["lnx"])
+        yx, _ = L.attn_decode(cfg, p["xattn"], hx, None, pos,
+                              cross_kv=(state["xk"], state["xv"]))
+        x = x + yx
+        st = {**st, "xk": state["xk"], "xv": state["xv"]}
+        return _mlp_apply(cfg, kind, p, x, None, "", pctx), st
+    elif kind == "mla":
+        y, st = L.mla_decode(cfg, p["mix"], h, state, pos)
+    elif kind == "rec":
+        y, st = L.rec_decode(cfg, p["mix"], h, state, pos)
+    elif kind == "ssd":
+        y, st = L.ssd_decode(cfg, p["mix"], h, state, pos)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    return _mlp_apply(cfg, kind, p, x, None, "", pctx), st
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply (scan over runs)
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ModelConfig, spec):
+    runs = []
+    for ri, (kinds, n) in enumerate(spec):
+        rk = jax.random.fold_in(key, ri)
+
+        def unit_init(k):
+            kk = jax.random.split(k, len(kinds))
+            return {f"u{j}": init_layer(kk[j], cfg, kind)
+                    for j, kind in enumerate(kinds)}
+
+        runs.append(jax.vmap(unit_init)(jax.random.split(rk, n)))
+    return runs
+
+
+def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int):
+    out = []
+    for kinds, n in spec:
+        unit = {f"u{j}": layer_state(cfg, kind, batch, max_len)
+                for j, kind in enumerate(kinds)}
+        out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), unit))
+    return out
+
+
+def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
+                    pctx=None, enc_out=None, want_state=False, max_len=0,
+                    remat=False):
+    """Train / prefill over all runs. Returns (x, stats_list, state_list).
+
+    With remat, the mixer/MLP outputs are checkpoint-tagged: saving the
+    *post-all-reduce* activations means the backward pass does NOT re-execute
+    the TP collectives of the forward (≈33% of train collective bytes on the
+    granite cell — EXPERIMENTS.md §Perf iteration 4). Memory cost: 2 saved
+    (B,S,D) tensors per layer.
+    """
+    all_stats, all_states = [], []
+    for (kinds, n), rp in zip(spec, run_params):
+        def body(carry, up):
+            h = carry
+            stats = {} if stats_on else None
+            states = {}
+            for j, kind in enumerate(kinds):
+                h, st = apply_layer_seq(cfg, kind, up[f"u{j}"], h, stats,
+                                        f"u{j}.", pctx=pctx, enc_out=enc_out,
+                                        want_state=want_state, max_len=max_len)
+                if st is not None:
+                    states[f"u{j}"] = st
+            return h, (stats, states)
+
+        if remat:
+            from .common import opt_level
+            if opt_level() >= 1:
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "mix_out", "mlp_out")
+                body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+            else:   # baseline: full remat (backward re-runs forward ARs)
+                body = jax.checkpoint(body, prevent_cse=False)
+        x, (stats, states) = jax.lax.scan(body, x, rp)
+        all_stats.append(stats)
+        all_states.append(states)
+    return x, all_stats, all_states
+
+
+def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
+                       *, pctx=None):
+    new_states = []
+    for (kinds, n), rp, rs in zip(spec, run_params, run_states):
+        def body(carry, xs):
+            up, st_in = xs
+            h = carry
+            st_out = {}
+            for j, kind in enumerate(kinds):
+                h, st = apply_layer_decode(cfg, kind, up[f"u{j}"], h,
+                                           st_in[f"u{j}"], pos, pctx=pctx)
+                st_out[f"u{j}"] = st
+            return h, st_out
+
+        x, st_new = jax.lax.scan(body, x, (rp, rs))
+        new_states.append(st_new)
+    return x, new_states

@@ -1,0 +1,66 @@
+"""AdamW from scratch (no optax in this container).
+
+Mixed precision: params live in bf16; the optimizer keeps f32 master copies
+and f32 (m, v).  With ZeRO-1 the (master, m, v) leaves are additionally
+sharded over the data axes (parallel/rules + training/trainer wire that up).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(grads, opt_state, cfg: AdamWConfig, params=None, lr_t=None):
+    """Returns (new_params [cast to the dtype of ``params``], state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cfg.lr if lr_t is None else lr_t
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mst, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        mst = mst - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * mst)
+        return mst, m, v
+
+    out = jax.tree.map(upd, grads, opt_state["master"], opt_state["m"],
+                       opt_state["v"])
+    master = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    ref = params if params is not None else opt_state["master"]
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype), master, ref)
+    new_state = {"step": step, "master": master, "m": m, "v": v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

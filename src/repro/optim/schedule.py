@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    return peak * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+
+
+def cosine_schedule(step, warmup: int, total: int, peak: float,
+                    floor_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,20 @@
+"""Parallelism context threaded through model forwards."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Optional[jax.sharding.Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)     # batch axes (('pod','data') multi-pod)
+    model_axis: str = "model"
+    moe_impl: str = "a2a"                      # 'a2a' (shard_map EP) | 'dense'
+    seq_axis: Optional[str] = None             # SP: shard sequence on this axis
+
+    @property
+    def dp(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]

@@ -1,0 +1,3 @@
+from .ft import ElasticController, FailureInjector, StepMonitor
+
+__all__ = ["ElasticController", "FailureInjector", "StepMonitor"]

@@ -1,0 +1,92 @@
+"""Fault-tolerance runtime pieces — heartbeat/straggler monitor, failure
+injection (tests), elastic re-mesh controller.
+
+On a real fleet these hook into the cluster scheduler; here they are
+process-local but exercise the same state machine the Trainer relies on:
+    monitor → detect (deadline / injected fault) → recover
+    (restart-from-checkpoint | skip-step | re-mesh-and-reshard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager, reshard_restore
+from repro.parallel import ParallelCtx, param_sharding
+
+
+class StepMonitor:
+    """Per-step deadline watchdog. Stores (step, duration) of violations.
+
+    A real deployment maps `on_straggle` to reissuing the step on a backup
+    slice (the optimizer state is consistent because the step either fully
+    completed or is re-run from the same params — steps are idempotent given
+    the deterministic data pipeline).
+    """
+
+    def __init__(self, deadline_s: float,
+                 on_straggle: Optional[Callable[[int, float], None]] = None):
+        self.deadline = deadline_s
+        self.violations: list = []
+        self.on_straggle = on_straggle
+        self._t0 = 0.0
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def finish(self, step: int) -> bool:
+        dt = time.monotonic() - self._t0
+        if self.deadline > 0 and dt > self.deadline:
+            self.violations.append((step, dt))
+            if self.on_straggle:
+                self.on_straggle(step, dt)
+            return True
+        return False
+
+
+class FailureInjector:
+    """Deterministic fault injection for FT tests: raises at chosen steps."""
+
+    class Crash(RuntimeError):
+        pass
+
+    def __init__(self, fail_at: set):
+        self.fail_at = set(fail_at)
+        self.fired: set = set()
+
+    def __call__(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise FailureInjector.Crash(f"injected failure at step {step}")
+
+
+class ElasticController:
+    """Elastic scaling: resume a checkpoint onto a different mesh.
+
+    ``rescale(ckpt_dir, step, params_like, opt_like, new_pctx)`` loads the
+    latest consistent checkpoint and reshards every leaf onto the new mesh —
+    the recovery path when a pod is lost (shrink) or re-added (grow).
+    """
+
+    @staticmethod
+    def rescale(ckpt: CheckpointManager, step: int, params_like, opt_like,
+                new_pctx: ParallelCtx, opt_sharding_fn=None):
+        pshard = param_sharding(params_like, new_pctx)
+        like = {"params": params_like}
+        shard = {"params": pshard}
+        if opt_like is not None:
+            if opt_sharding_fn is None:
+                mesh = new_pctx.mesh
+                oshard = jax.tree.map(
+                    lambda l: jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec(*([None] * l.ndim))),
+                    opt_like)
+            else:
+                oshard = opt_sharding_fn(opt_like, pshard, new_pctx)
+            like["opt"] = opt_like
+            shard["opt"] = oshard
+        out = reshard_restore(ckpt, step, like, shard)
+        return out["params"], out.get("opt")

@@ -1,0 +1,4 @@
+from .engine import EngineConfig, Request, TTQEngine
+from .sampling import sample
+
+__all__ = ["EngineConfig", "Request", "TTQEngine", "sample"]

@@ -1,0 +1,231 @@
+"""TTQEngine — continuous-batching serving with online test-time quantization.
+
+The paper's lifecycle (Fig. 1b) as a slot-based engine:
+
+  submit → [queue] → admit: PREFILL in full precision with the stats tap on
+                            (Σ_t x² per linear input feature, additive)
+                     → aggregate stats across active prompts
+                     → (re)QUANTIZE: D = f(stats); W_int,S,Z = G[(W−BA)∘D]
+                     → DECODE loop over all active slots with the quantized
+                       weights (4-bit packed path hits the Pallas ttq_gemm)
+
+Per-prompt calibration (the paper's setting) is the ``max_slots=1`` case; with
+batched serving the engine self-calibrates on the aggregate of the *current*
+prompts — the statistics are additive sufficient statistics, so this is the
+natural generalization (DESIGN.md §1).  Low-rank factors (B, A) are data-free
+SVD, computed once at engine construction.
+
+Per-slot positions everywhere → true continuous batching: a new request can be
+admitted while other slots are mid-generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AWQConfig, QuantPolicy, quantize_params
+from repro.core.ttq import _path_str
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+from .sampling import sample
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4
+    max_len: int = 256
+    recalibrate_every: int = 1      # re-quantize after every N admissions
+    stats_halflife: int = 0         # >0: exponential decay of stats (admissions)
+    temperature: float = 0.0
+    eos_token: int = -1             # -1 → run to max_new
+    prompt_buckets: tuple = (16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    frames: Any = None              # encdec stub modality input
+
+
+def _tree_add(a, b):
+    if a is None:
+        return b
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def _tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def _write_slot(batched, single, slot: int):
+    """Write a B=1 state into slot ``slot`` of the batched decode state."""
+    def per(path, bl, sl):
+        ps = _path_str(path)
+        if ps.startswith("stack"):
+            # leaves (R, B, ...) ← (R, 1, ...)
+            idx = (slice(None), slice(slot, slot + 1))
+        else:
+            idx = (slice(slot, slot + 1),)
+        return bl.at[idx].set(sl.astype(bl.dtype))
+
+    return jax.tree_util.tree_map_with_path(per, batched, single)
+
+
+class TTQEngine:
+    def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
+                 ecfg: EngineConfig = EngineConfig(), pctx=None, key=None):
+        self.cfg, self.params, self.policy, self.ecfg = cfg, params, policy, ecfg
+        self.pctx = pctx
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        B, ML = ecfg.max_slots, ecfg.max_len
+        self.state = lm.init_decode_state(cfg, B, ML)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.cur_tok = jnp.zeros((B, 1), jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.queue: deque = deque()
+        self.finished: Dict[int, Request] = {}
+        self._rid = itertools.count()
+        # TTQ state
+        self.agg_stats = None
+        self.stat_count = 0.0
+        self.qparams = None
+        self.admits_since_cal = 0
+        self.n_requants = 0
+        self.lowrank_tree = self._init_lowrank() if policy.rank > 0 else None
+        self._decode_jit = jax.jit(partial(lm.decode_step, cfg, pctx=pctx))
+        self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
+                                            collect_stats=True,
+                                            full_logits=True),
+                                    static_argnames=("max_len",))
+
+    # ------------------------------------------------------------------ TTQ
+
+    def _init_lowrank(self):
+        """Offline, data-free SVD factors for every quantizable 2-D weight."""
+        from repro.core.lowrank import svd_factors
+        pol = self.policy
+
+        def per_leaf(path, leaf):
+            ps = _path_str(path)
+            last = ps.split(".")[-1]
+            if (getattr(leaf, "ndim", 0) in (2, 3) and pol.quantizes(last)
+                    and pol.quantizes(ps) and min(leaf.shape[-2:]) > pol.rank):
+                fn = lambda W: dict(zip(("B", "A"), svd_factors(W, pol.rank)))
+                for _ in range(leaf.ndim - 2):
+                    fn = jax.vmap(fn)
+                return fn(leaf)
+            return None
+
+        return jax.tree_util.tree_map_with_path(per_leaf, self.params)
+
+    def _requantize(self):
+        if self.policy.method == "none" or self.agg_stats is None:
+            return
+        self.qparams = quantize_params(
+            self.params, self.agg_stats, self.policy,
+            count=max(self.stat_count, 1.0), lowrank_tree=None)
+        self.n_requants += 1
+        self.admits_since_cal = 0
+
+    @property
+    def decode_params(self):
+        return self.qparams if self.qparams is not None else self.params
+
+    # -------------------------------------------------------------- serving
+
+    def submit(self, prompt, max_new: int = 16, frames=None) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, list(prompt), max_new, frames=frames))
+        return rid
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _bucket(self, n: int) -> int:
+        for b in self.ecfg.prompt_buckets:
+            if n <= b:
+                return b
+        return self.ecfg.prompt_buckets[-1]
+
+    def _admit_one(self, slot: int, req: Request):
+        plen = len(req.prompt)
+        if self.cfg.family in ("hybrid", "ssm"):
+            # recurrent state would absorb pad tokens — use exact length
+            bucket = plen
+        else:
+            bucket = min(self._bucket(plen), self.ecfg.max_len)
+        # right-pad: causal masking keeps real tokens clean; pad positions
+        # beyond the prompt end are never attended at decode (ki ≤ pos mask)
+        toks = jnp.zeros((1, bucket), jnp.int32)
+        toks = toks.at[0, :plen].set(jnp.asarray(req.prompt))
+        batch = {"tokens": toks}
+        if self.cfg.family == "encdec":
+            batch["frames"] = req.frames[None] if req.frames.ndim == 2 else req.frames
+        logits, sstate, stats = self._prefill_jit(
+            self.params, batch, max_len=self.ecfg.max_len)
+        last_logits = logits[:, plen - 1]
+        if self.ecfg.stats_halflife and self.agg_stats is not None:
+            decay = 0.5 ** (1.0 / self.ecfg.stats_halflife)
+            self.agg_stats = _tree_scale(self.agg_stats, decay)
+            self.stat_count *= decay
+        self.agg_stats = _tree_add(self.agg_stats, stats)
+        self.stat_count += float(bucket)
+        self.state = _write_slot(self.state, sstate, slot)
+        self.key, sk = jax.random.split(self.key)
+        nxt = sample(last_logits, sk, self.ecfg.temperature)
+        req.out.append(int(nxt[0]))
+        self.cur_tok = self.cur_tok.at[slot, 0].set(nxt[0])
+        self.pos = self.pos.at[slot].set(plen)   # decode overwrites pads
+        self.slot_req[slot] = req
+        self.admits_since_cal += 1
+        if self.admits_since_cal >= self.ecfg.recalibrate_every:
+            self._requantize()
+
+    def admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._admit_one(slot, self.queue.popleft())
+
+    def step(self):
+        """One engine iteration: admit waiting requests, decode one token."""
+        self.admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        logits, self.state = self._decode_jit(self.decode_params, self.state,
+                                              self.cur_tok, self.pos)
+        self.key, sk = jax.random.split(self.key)
+        nxt = sample(logits, sk, self.ecfg.temperature)
+        self.pos = jnp.clip(self.pos + 1, 0, self.ecfg.max_len - 1)
+        self.cur_tok = nxt[:, None]
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            req.out.append(tok)
+            if len(req.out) >= req.max_new or tok == self.ecfg.eos_token:
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[i] = None
+        return True
+
+    def run_all(self, max_iters: int = 10_000) -> Dict[int, list]:
+        """Drive until all submitted requests finish; returns {rid: tokens}."""
+        it = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and it < max_iters:
+            if not self.step():
+                break
+            it += 1
+        return {rid: req.out for rid, req in self.finished.items()}

@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see exactly 1 device;
+multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 1, timeout: int = 600):
+    """Run python code in a subprocess with N fake devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

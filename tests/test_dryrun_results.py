@@ -1,0 +1,48 @@
+"""Deliverable (e) gate: every (arch × shape × mesh) dry-run cell in the
+results cache must have compiled (or carry a DESIGN.md-sanctioned skip)."""
+import glob
+import json
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _load(mesh):
+    rows = {}
+    for p in glob.glob(os.path.join(RESULTS, f"*__{mesh}__*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_all_cells_compiled(mesh):
+    rows = _load(mesh)
+    if not rows:
+        pytest.skip("dry-run cache not built (run repro.launch.dryrun)")
+    from repro.configs import ARCH_IDS, SHAPES
+    missing, errors = [], []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            r = rows.get((a, s))
+            if r is None:
+                missing.append((a, s))
+            elif "error" in r:
+                errors.append((a, s, r["error"]))
+            elif "skipped" not in r:
+                assert r["roofline"]["t_memory_s"] > 0
+    assert not errors, errors
+    assert len(missing) == 0, f"missing cells: {missing}"
+
+
+def test_skips_are_justified():
+    rows = _load("single")
+    if not rows:
+        pytest.skip("dry-run cache not built")
+    for (a, s), r in rows.items():
+        if "skipped" in r:
+            assert s == "long_500k", (a, s)
+            assert "full-attention" in r["skipped"]

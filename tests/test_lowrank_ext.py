@@ -1,0 +1,39 @@
+"""Appendix-E extensions: factor quantization + alternating refinement."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AWQConfig, QuantConfig, activation_diag,
+                        alternating_refine, svd_factors, ttq_lowrank_qdq)
+from repro.core.awq import awq_loss
+from repro.core.lowrank import quantize_factors
+
+RNG = np.random.default_rng(5)
+
+
+def _setup(dp=64, d=128, T=256):
+    W = jnp.asarray(RNG.standard_normal((dp, d)).astype("float32"))
+    chan = np.exp(RNG.standard_normal(d) * 1.5).astype("float32")
+    X = jnp.asarray(RNG.standard_normal((T, d)).astype("float32") * chan)
+    return W, X, jnp.mean(X ** 2, axis=0)
+
+
+def test_quantized_factors_close_to_fp():
+    W, X, Cd = _setup()
+    D = activation_diag(X)
+    qcfg = QuantConfig(bits=3, group_size=32, layout="row")
+    B, A = svd_factors(W, 8)
+    l_fp = float(awq_loss(W, ttq_lowrank_qdq(W, B, A, D, qcfg), Cd))
+    qB, qA = quantize_factors(B, A, QuantConfig(bits=8, group_size=16), "both")
+    l_q = float(awq_loss(W, ttq_lowrank_qdq(W, qB, qA, D, qcfg), Cd))
+    assert l_q < l_fp * 1.1, (l_fp, l_q)   # 8-bit factors ≈ free
+
+
+def test_alternating_not_worse():
+    W, X, Cd = _setup()
+    D = activation_diag(X)
+    qcfg = QuantConfig(bits=3, group_size=32, layout="row")
+    B, A = svd_factors(W, 8)
+    l_svd = float(awq_loss(W, ttq_lowrank_qdq(W, B, A, D, qcfg), Cd))
+    Br, Ar = alternating_refine(W, D, qcfg, 8, iters=2)
+    l_alt = float(awq_loss(W, ttq_lowrank_qdq(W, Br, Ar, D, qcfg), Cd))
+    assert l_alt < l_svd * 1.05

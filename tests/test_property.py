@@ -1,0 +1,73 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QuantConfig, dequantize, pack_bits, qdq, quantize, unpack_bits
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]),
+       st.integers(1, 8))
+def test_pack_unpack_roundtrip(seed, bits, rows):
+    rng = np.random.default_rng(seed)
+    per = 32 // bits
+    d = per * rng.integers(1, 8)
+    w = rng.integers(0, 2 ** bits, size=(rows, d)).astype(np.int32)
+    p = pack_bits(jnp.asarray(w), bits)
+    u = unpack_bits(p, d, bits)
+    assert (np.asarray(u) == w).all()
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4, 5]),
+       st.sampled_from([8, 16, 32]))
+def test_qdq_projection(seed, bits, g):
+    """QDQ is a projection: applying it twice equals applying it once."""
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.standard_normal((8, 64)).astype("float32"))
+    cfg = QuantConfig(bits=bits, group_size=g)
+    W1 = qdq(W, cfg)
+    W2 = qdq(W1, cfg)
+    np.testing.assert_allclose(np.asarray(W1), np.asarray(W2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+def test_qdq_positive_homogeneity(seed, c):
+    """Q[cW] == c·Q[W] for c > 0 (asymmetric min/max scaling)."""
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.standard_normal((4, 32)).astype("float32"))
+    cfg = QuantConfig(bits=4, group_size=16)
+    a = qdq(W * c, cfg)
+    b = qdq(W, cfg) * c
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_int_range(seed):
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray((rng.standard_normal((8, 64)) * 100).astype("float32"))
+    for bits in (2, 4, 8):
+        cfg = QuantConfig(bits=bits, group_size=16)
+        Wint, S, Z = quantize(W, cfg)
+        assert int(Wint.min()) >= 0 and int(Wint.max()) <= (1 << bits) - 1
+
+
+@SET
+@given(st.integers(0, 1000), st.integers(0, 3))
+def test_data_pipeline_deterministic(step, domain):
+    from repro.data import DataConfig, make_domain, sample_batch
+    import jax
+    cfg = DataConfig(vocab=64, seq_len=16, batch=4, seed=3)
+    spec = make_domain(cfg, domain)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    a = sample_batch(spec, key, cfg.batch, cfg.seq_len)
+    b = sample_batch(spec, key, cfg.batch, cfg.seq_len)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    assert int(a.min()) >= 0 and int(a.max()) < 64

@@ -1,0 +1,128 @@
+"""Core quantization science: RTN/QDQ, AWQ closed form, TTQ ordering, GPTQ."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AWQConfig, QuantConfig, activation_diag, awq_qdq,
+                        dequantize, gptq_qdq, qdq, quantize, rtn, svd_factors,
+                        ttq_lowrank_qdq)
+from repro.core.awq import awq_loss
+
+RNG = np.random.default_rng(0)
+
+
+def _w(dp=32, d=64):
+    return jnp.asarray(RNG.standard_normal((dp, d)).astype("float32"))
+
+
+def _x_heavytail(d=64, T=256, sigma=2.0, seed=1):
+    r = np.random.default_rng(seed)
+    chan = np.exp(r.standard_normal(d) * sigma).astype("float32")
+    return jnp.asarray(r.standard_normal((T, d)).astype("float32") * chan)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 8])
+@pytest.mark.parametrize("layout", ["flat", "row"])
+def test_qdq_error_bound(bits, layout):
+    """|W − Q[W]| ≤ S/2 per element (within clip range)."""
+    W = _w()
+    cfg = QuantConfig(bits=bits, group_size=32, layout=layout)
+    Wint, S, Z = quantize(W, cfg)
+    What = dequantize(Wint, S, Z, cfg)
+    if layout == "row":
+        Sfull = jnp.repeat(S, 32, axis=1)
+    else:
+        Sfull = jnp.repeat(S[:, None], 32, axis=1).reshape(W.shape)
+    assert float((jnp.abs(W - What) - Sfull / 2 - 1e-5).max()) <= 0.0
+
+
+def test_qdq_idempotent():
+    W = _w()
+    cfg = QuantConfig(bits=4, group_size=32)
+    W1 = qdq(W, cfg)
+    W2 = qdq(W1, cfg)
+    np.testing.assert_allclose(np.array(W1), np.array(W2), atol=1e-6)
+
+
+def test_more_bits_less_error():
+    W = _w()
+    errs = [float(jnp.mean((W - rtn(W, b, 32)) ** 2)) for b in (2, 3, 4, 5, 8)]
+    assert all(a > b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_smaller_group_less_error():
+    W = _w(32, 1024)
+    errs = [float(jnp.mean((W - rtn(W, 3, g)) ** 2)) for g in (8, 32, 128, 512)]
+    assert all(a < b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_symmetric_worse_or_equal_than_asymmetric():
+    W = _w()
+    ea = float(jnp.mean((W - qdq(W, QuantConfig(bits=3, group_size=32))) ** 2))
+    es = float(jnp.mean((W - qdq(W, QuantConfig(bits=3, group_size=32,
+                                                symmetric=True))) ** 2))
+    assert es >= ea * 0.9   # symmetric has fewer degrees of freedom
+
+
+def test_awq_scale_invariance():
+    """Q[W∘cD]∘(cD)⁻¹ == Q[W∘D]∘D⁻¹ — global D scale cancels (asym QDQ is
+    positively homogeneous)."""
+    W, X = _w(), _x_heavytail()
+    cfg = QuantConfig(bits=4, group_size=32, layout="row")
+    D = activation_diag(X)
+    a = awq_qdq(W, D, cfg)
+    b = awq_qdq(W, 3.7 * D, cfg)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-5)
+
+
+def test_activation_aware_ordering():
+    """Heavy-tailed activations: loss(RTN) > loss(AWQ); TTQ+LR ≤ AWQ (blend)."""
+    cfg = QuantConfig(bits=3, group_size=32, layout="row")
+    r_rtn, r_awq, r_lr = [], [], []
+    for t in range(4):
+        rng = np.random.default_rng(100 + t)
+        W = jnp.asarray(rng.standard_normal((64, 128)).astype("float32") * 0.05)
+        X = _x_heavytail(128, 256, seed=200 + t)
+        Cd = jnp.mean(X ** 2, axis=0)
+        D = activation_diag(X)
+        r_rtn.append(float(awq_loss(W, qdq(W, cfg), Cd)))
+        r_awq.append(float(awq_loss(W, awq_qdq(W, D, cfg), Cd)))
+        B, A = svd_factors(W, 16)
+        r_lr.append(float(awq_loss(W, ttq_lowrank_qdq(W, B, A, D, cfg), Cd)))
+    assert np.mean(r_awq) < np.mean(r_rtn)
+    assert np.mean(r_lr) < np.mean(r_rtn)
+
+
+def test_exact_stats_beat_mismatched_stats():
+    """TTQ's premise: D from the *test* activations beats D from a shifted
+    calibration domain (the paper's domain-shift argument, Table 3)."""
+    cfg = QuantConfig(bits=3, group_size=32, layout="row")
+    wins = 0
+    for t in range(6):
+        rng = np.random.default_rng(300 + t)
+        W = jnp.asarray(rng.standard_normal((64, 128)).astype("float32"))
+        X_test = _x_heavytail(128, 256, seed=400 + t)
+        X_cal = _x_heavytail(128, 256, seed=500 + t)   # different domain
+        Cd = jnp.mean(X_test ** 2, axis=0)
+        l_ttq = awq_loss(W, awq_qdq(W, activation_diag(X_test), cfg), Cd)
+        l_awq = awq_loss(W, awq_qdq(W, activation_diag(X_cal), cfg), Cd)
+        wins += int(float(l_ttq) < float(l_awq))
+    assert wins >= 4, f"TTQ won only {wins}/6"
+
+
+def test_gptq_beats_rtn_on_activation_loss():
+    """GPTQ minimizes the *full-covariance* loss ‖(W−Ŵ)X‖² — measure that."""
+    cfg = QuantConfig(bits=3, group_size=32)
+    rng = np.random.default_rng(7)
+    W = jnp.asarray(rng.standard_normal((48, 96)).astype("float32"))
+    X = _x_heavytail(96, 512, sigma=1.5, seed=8)
+    l_rtn = float(jnp.sum(((W - qdq(W, cfg)) @ X.T) ** 2))
+    l_gptq = float(jnp.sum(((W - gptq_qdq(W, X, cfg)) @ X.T) ** 2))
+    assert l_gptq < l_rtn
+
+
+def test_lowrank_factors_reconstruct():
+    W = _w(40, 64)
+    B, A = svd_factors(W, 40)   # full rank → exact
+    np.testing.assert_allclose(np.array(B @ A), np.array(W), atol=1e-3)

@@ -1,0 +1,100 @@
+"""Distribution: sharding rules, MoE a2a == dense, dry-run machinery on a
+small mesh, multi-pod axis — all in subprocesses with fake devices."""
+import numpy as np
+import pytest
+
+from repro.parallel.rules import spec_for_path
+
+
+def test_spec_rules():
+    import jax
+    P = jax.sharding.PartitionSpec
+    assert spec_for_path("stack.0.u0.mix.wq", 3, "model") == P(None, "model", None)
+    assert spec_for_path("stack.0.u0.mix.wo", 3, "model") == P(None, None, "model")
+    assert spec_for_path("embed", 2, "model", stacked=False) == P("model", None)
+    assert spec_for_path("stack.0.u0.mlp.experts.wg", 4, "model") == \
+        P(None, "model", None, None)
+    assert spec_for_path("stack.0.u0.ln1.gamma", 2, "model") == P(None, None)
+
+
+def test_moe_a2a_equals_dense(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.models import lm, ModelConfig, MoECfg
+from repro.parallel import ParallelCtx
+mesh = jax.make_mesh((2, 2), ('data', 'model'))
+cfg = ModelConfig(name='t', family='moe', n_layers=2, d_model=64, n_heads=4,
+      n_kv_heads=2, d_ff=0, vocab=128,
+      moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=64, n_shared=1,
+                 capacity_factor=8.0))
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 128)
+lg_d, st_d, _ = lm.forward(cfg, params, {'tokens': toks}, collect_stats=True)
+pctx = ParallelCtx(mesh=mesh, data_axes=('data',), model_axis='model')
+with mesh:
+    lg_a, st_a, _ = lm.forward(cfg, params, {'tokens': toks},
+                               collect_stats=True, pctx=pctx)
+np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_a), rtol=6e-2, atol=6e-2)
+sd = np.asarray(st_d['stack'][0]['u0.mlp.experts.wg']).ravel()
+sa = np.asarray(st_a['stack'][0]['u0.mlp.experts.wg']).ravel()
+# dense weights stats by gate mass, a2a counts routed tokens with weight 1 —
+# same assignment structure, different weighting: require strong correlation
+assert np.corrcoef(sd, sa)[0, 1] > 0.9
+print('OK')
+""", devices=4)
+    assert "OK" in out
+
+
+def test_sharded_train_step_runs(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro.models import ModelConfig
+from repro.training import Trainer, TrainConfig
+from repro.data import DataConfig, token_stream
+from repro.parallel import ParallelCtx
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+pctx = ParallelCtx(mesh=mesh, data_axes=('data',))
+cfg = ModelConfig(name='t', family='dense', n_layers=2, d_model=64, n_heads=8,
+                  n_kv_heads=4, d_ff=128, vocab=64)
+dc = DataConfig(vocab=64, seq_len=32, batch=8, seed=1)
+tc = TrainConfig(n_microbatches=2, remat=True, zero1=True, total_steps=20, warmup=2)
+with mesh:
+    tr = Trainer(cfg, tc, token_stream(dc, 0), pctx=pctx)
+    log = tr.run(4)
+assert log[-1]['loss'] < log[0]['loss'] + 0.1
+# ZeRO-1: master leaves carry a data-sharded dim
+specs = [l.sharding.spec for l in jax.tree.leaves(tr.opt_state['m'])]
+assert any('data' in str(s) for s in specs), specs
+print('OK')
+""", devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_multipod(subproc):
+    """(pod, data, model) mesh: lower+compile train/prefill/decode for three
+    representative smoke archs — the multi-pod axis proof at test scale."""
+    out = subproc("""
+import jax
+import repro.configs as C
+C.SHAPES = {'train_4k': (64, 8, 'train'), 'prefill_32k': (64, 4, 'prefill'),
+            'decode_32k': (64, 8, 'decode'), 'long_500k': (128, 1, 'decode')}
+import repro.launch.steps as S
+S.SHAPES = C.SHAPES
+from repro.launch.mesh import make_ctx
+from repro.configs import get
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+pctx = make_ctx(mesh)
+for arch in ['gemma_7b', 'deepseek_v2_lite_16b', 'mamba2_1p3b']:
+    cfg = get(arch, smoke=True)
+    for shape, kind in [('train_4k', 'train'), ('decode_32k', 'decode')]:
+        if kind == 'train':
+            fn, args, _ = S.build_train_cell(cfg, pctx, shape)
+        else:
+            fn, args, _ = S.build_decode_cell(cfg, pctx, shape)
+        with mesh:
+            fn.lower(*args).compile()
+        print(arch, shape, 'OK')
+print('ALLOK')
+""", devices=8, timeout=900)
+    assert "ALLOK" in out
