@@ -4,8 +4,15 @@ AWQ calibrated on a *shifted* domain with T ∈ {128 … 8192} tokens vs TTQ wit
 **zero** offline calibration (r=0 and r=16).  Metric: perplexity on the
 in-domain eval set.  Reproduces the claim: TTQ ≥ best AWQ while AWQ degrades
 as the calibration budget shrinks.
+
+The calibration budgets are built *incrementally* by merging
+``CalibrationSession`` chunks (the statistics are additive sufficient
+statistics, so merge-of-chunks == one big session) — each budget reuses all
+previous chunks' prefills instead of recomputing them.
 """
 from __future__ import annotations
+
+from repro.quant import CalibrationSession
 
 from .common import (EVAL_DOMAINS, collect_stats, eval_batches, perplexity,
                      quantize_with, trained_model, ttq_perplexity)
@@ -25,14 +32,22 @@ def run(fast: bool = True):
         rows.append((f"ttq_r{r}", 0, ppl))
     budgets = (128, 512, 2048, 8192) if fast else (128, 256, 512, 1024, 2048,
                                                    4096, 8192)
+    sess, done, batches_done = CalibrationSession(), 0, 0
     for T in budgets:
-        n = max(1, T // (8 * 64))
-        cal = eval_batches(CALIB_DOMAIN, n=n, batch=min(8, max(1, T // 64)),
-                           seq=64, seed0=777)
-        # trim to exactly T tokens worth of batches
-        stats, count = collect_stats(cfg, params, cal)
-        qp = quantize_with(cfg, params, "awq", BITS, G, calib=(stats, count))
-        rows.append((f"awq_T{T}", T, perplexity(cfg, qp, ev)))
+        # batches sized from the *remaining* budget so each row lands on
+        # exactly T accumulated tokens; the seed base advances by batches
+        # consumed so far (eval_batches strides its fold-in by i*131 — a
+        # per-chunk stride would collide and re-sample merged batches)
+        remaining = T - done
+        batch = min(8, max(1, remaining // 64))
+        n = max(1, remaining // (batch * 64))
+        cal = eval_batches(CALIB_DOMAIN, n=n, batch=batch,
+                           seq=64, seed0=777 + 131 * batches_done)
+        batches_done += n
+        sess = sess.merge(collect_stats(cfg, params, cal))   # grow the budget
+        done = int(sess.count)
+        qp = quantize_with(cfg, params, "awq", BITS, G, calib=sess)
+        rows.append((f"awq_T{T}", done, perplexity(cfg, qp, ev)))
     return rows
 
 

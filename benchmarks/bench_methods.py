@@ -1,8 +1,17 @@
 """Paper Table 3 — methods × bits, macro-averaged over domains, with AWQ's
-calibration-domain sensitivity vs TTQ's invariance (the domain-shift claim)."""
+calibration-domain sensitivity vs TTQ's invariance (the domain-shift claim).
+
+Methods are resolved through the repro.quant registry; calibration state is
+``CalibrationSession`` objects from :func:`benchmarks.common.collect_stats`.
+The ``awq_mixed`` row demonstrates per-layer policy overrides: attention
+projections one bit wider than the MLP base — mixed precision as policy, not
+code.
+"""
 from __future__ import annotations
 
 import numpy as np
+
+from repro.quant import override
 
 from .common import (CALIB_DOMAINS, EVAL_DOMAINS, collect_stats, eval_batches,
                      macro_avg, perplexity, quantize_with, trained_model,
@@ -21,6 +30,7 @@ def run(fast: bool = True):
     per_dom: dict = {}
     for d in EVAL_DOMAINS:
         per_dom[("fp", 0, d)] = perplexity(cfg, params, evs[d])
+    c_mix = CALIB_DOMAINS[0]
     for bits in bits_list:
         qp_rtn = quantize_with(cfg, params, "rtn", bits, G)
         for d in EVAL_DOMAINS:
@@ -29,6 +39,11 @@ def run(fast: bool = True):
             qp = quantize_with(cfg, params, "awq", bits, G, calib=calibs[c])
             for d in EVAL_DOMAINS:
                 per_dom[(f"awq_cal{c}", bits, d)] = perplexity(cfg, qp, evs[d])
+        # mixed precision via overrides: attention +1 bit over the MLP base
+        qp_mix = quantize_with(cfg, params, "awq", bits, G, calib=calibs[c_mix],
+                               overrides=(override("*.mix.*", bits=bits + 1),))
+        for d in EVAL_DOMAINS:
+            per_dom[("awq_mixed", bits, d)] = perplexity(cfg, qp_mix, evs[d])
         for r in (0, 16):
             for d in EVAL_DOMAINS:
                 per_dom[(f"ttq_r{r}", bits, d)] = ttq_perplexity(
@@ -39,7 +54,7 @@ def run(fast: bool = True):
 def main(fast: bool = True):
     bits_list, per_dom = run(fast)
     methods = ["fp", "rtn"] + [f"awq_cal{c}" for c in CALIB_DOMAINS] + \
-        ["ttq_r0", "ttq_r16"]
+        ["awq_mixed", "ttq_r0", "ttq_r16"]
 
     def macro(m, b, doms):
         bb = 0 if m == "fp" else b

@@ -16,9 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import AWQConfig, QuantPolicy, quantize_params, ttq_policy
+from repro.core import AWQConfig
 from repro.data import DataConfig, make_domain, sample_batch, token_stream
 from repro.models import ModelConfig, lm
+from repro.quant import CalibrationSession, QuantizedModel, ttq_policy
 from repro.training import TrainConfig, Trainer
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -73,37 +74,45 @@ def perplexity(cfg, params, batches) -> float:
     return float(np.exp(tot / cnt))
 
 
-def collect_stats(cfg, params, batches):
+def collect_stats(cfg, params, batches) -> CalibrationSession:
     """Accumulate activation statistics over batches (offline calibration)."""
-    agg, count = None, 0.0
+    sess = CalibrationSession()
     for b in batches:
         _, _, stats = lm.prefill(cfg, params, b, max_len=b["tokens"].shape[1],
                                  collect_stats=True)
-        agg = stats if agg is None else jax.tree.map(lambda a, s: a + s, agg, stats)
-        count += float(b["tokens"].size)
-    return agg, count
+        sess.update(stats, tokens=float(b["tokens"].size))
+    return sess
 
 
 def quantize_with(cfg, params, method: str, bits: int, group_size: int,
-                  rank: int = 0, calib=None, acfg: AWQConfig = AWQConfig()):
-    """method: 'rtn' | 'awq' (needs calib=(stats,count)) | returns qparams."""
+                  rank: int = 0, calib: CalibrationSession = None,
+                  acfg: AWQConfig = AWQConfig(), overrides=()):
+    """method: any registered quantizer name ('rtn' | 'awq' | 'ttq' | ...);
+    stats-dependent methods need ``calib``.  Returns the quantized tree."""
     pol = ttq_policy(bits=bits, group_size=group_size, rank=rank,
-                     packed=False, acfg=acfg)
-    if method == "rtn":
-        return quantize_params(params, None, pol.with_(method="rtn"))
-    stats, count = calib
-    return quantize_params(params, stats, pol, count=count, acfg=acfg)
+                     packed=False, acfg=acfg).with_(method=method)
+    if overrides:
+        pol = pol.with_overrides(*overrides)
+    qm = QuantizedModel(params, pol, acfg=acfg,
+                        session=calib.snapshot() if calib is not None else None)
+    qp = qm.requantize()
+    if qp is None:
+        raise ValueError(f"method {method!r} needs calibration statistics — "
+                         "pass calib=collect_stats(...)")
+    return qp
 
 
 def ttq_perplexity(cfg, params, batches, bits, group_size, rank=0,
                    acfg: AWQConfig = AWQConfig()) -> float:
     """TTQ: re-quantize per incoming batch from that batch's own stats —
     zero offline calibration (the paper's test-time loop)."""
+    pol = ttq_policy(bits=bits, group_size=group_size, rank=rank,
+                     packed=False, acfg=acfg)
+    qm = QuantizedModel(params, pol, acfg=acfg)   # low-rank factors: once
     tot, cnt = 0.0, 0.0
     for b in batches:
-        stats, count = collect_stats(cfg, params, [b])
-        qp = quantize_with(cfg, params, "awq", bits, group_size, rank,
-                           calib=(stats, count), acfg=acfg)
+        qm.session = collect_stats(cfg, params, [b])
+        qp = qm.requantize()
         loss, aux = lm.loss_fn(cfg, qp, b)
         tot += float(loss) * float(aux["tokens"])
         cnt += float(aux["tokens"])

@@ -1,8 +1,9 @@
 """Quickstart — TTQ in 60 seconds.
 
-Builds a small LM, runs a prompt through the TTQ lifecycle (prefill with the
-stats tap → online activation-aware quantization → quantized decode), and
-compares RTN / AWQ / TTQ weight-approximation quality on the fly.
+Builds a small LM, compares RTN / AWQ / TTQ weight-approximation quality,
+then runs the full lifecycle through the unified ``repro.quant`` API:
+``QuantizedModel``  — calibrate(stats) → requantize() → decode_params —
+with a mixed-precision policy override, and finally the serving engine.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +11,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (AWQConfig, QuantConfig, activation_diag, awq_qdq,
-                        qdq, quantize_params, svd_factors, ttq_lowrank_qdq,
-                        ttq_policy)
+                        qdq, svd_factors, ttq_lowrank_qdq)
 from repro.core.awq import awq_loss
+from repro.core.ttq import QuantizedTensor
 from repro.models import ModelConfig, lm
+from repro.quant import QuantizedModel, override, registered_methods, ttq_policy
 from repro.serving import EngineConfig, TTQEngine
 
 
@@ -23,6 +25,7 @@ def main():
                       vocab=256)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     print(f"model: {cfg.name}, {sum(p.size for p in jax.tree.leaves(params)):,} params")
+    print(f"registered quantizers: {', '.join(registered_methods())}")
 
     # --- 1. layer-level: the quantization science -------------------------
     W = params["stack"][0]["u0"]["mlp"]["wg"][0].astype(jnp.float32)
@@ -38,7 +41,25 @@ def main():
     print(f"  AWQ/TTQ    : {float(awq_loss(W, awq_qdq(W, D, qcfg), Cd)):.1f}")
     print(f"  TTQ + r16  : {float(awq_loss(W, ttq_lowrank_qdq(W, B, A, D, qcfg), Cd)):.1f}")
 
-    # --- 2. system-level: the serving lifecycle ---------------------------
+    # --- 2. model-level: the QuantizedModel facade ------------------------
+    # mixed precision as policy: MLPs 3-bit g=64, attention 4-bit g=32
+    policy = ttq_policy(bits=3, group_size=64, rank=8).with_overrides(
+        override("*.mix.*", bits=4, group_size=32))
+    qm = QuantizedModel(params, policy)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 16), 0, cfg.vocab)
+    _, _, stats = lm.prefill(cfg, params, {"tokens": toks}, max_len=32)
+    qm.calibrate(stats, tokens=toks.size).requantize()
+    mix = qm.qparams["stack"][0]["u0"]["mix"]["wq"]
+    mlp = qm.qparams["stack"][0]["u0"]["mlp"]["wg"]
+    assert isinstance(mix, QuantizedTensor) and isinstance(mlp, QuantizedTensor)
+    print(f"\nQuantizedModel (session count={qm.session.count:.0f}): "
+          f"attention {mix.bits}-bit g={mix.group_size}, "
+          f"MLP {mlp.bits}-bit g={mlp.group_size}")
+    lg, _, _ = lm.forward(cfg, qm.decode_params, {"tokens": toks})
+    print(f"quantized forward: logits {tuple(lg.shape)}, "
+          f"finite={bool(jnp.isfinite(lg).all())}")
+
+    # --- 3. system-level: the serving lifecycle ---------------------------
     eng = TTQEngine(cfg, params, ttq_policy(bits=4, group_size=32, rank=8),
                     EngineConfig(max_slots=2, max_len=64))
     rids = [eng.submit([7, 3, 9, 1], max_new=8),

@@ -4,6 +4,27 @@ A ``QuantPolicy`` is attached to a model config; the serving engine and the
 benchmarks consult it to decide, per named projection, the bits / groupsize /
 rank / activation-statistic settings, and whether the packed-int Pallas kernel
 or the fake-quant (QDQ) path is used.
+
+Mixed precision is expressed declaratively via ``overrides``: an ordered
+tuple of ``(fnmatch pattern, partial-policy delta)`` pairs resolved against
+the full parameter path (e.g. ``stack.0.u0.mix.wq``).  Every matching entry
+is applied in order (later entries win on conflicting fields), so a policy
+like::
+
+    ttq_policy(bits=3, group_size=64).with_overrides(
+        override("*.mix.*", bits=4, group_size=32),   # attention: finer
+        override("stack.*.u0.*", bits=8),             # first block: 8-bit
+    )
+
+gives attention projections 4-bit g=32, the first block 8-bit, and everything
+else the 3-bit g=64 base.  Deltas may set top-level fields (``method``,
+``rank``, ``packed``), QDQ fields (``bits``, ``group_size``, ``symmetric``,
+``nu``, ``layout``) and statistic fields (``p``, ``alpha``, ``lam``,
+``form``).  Resolution happens once per parameter path in
+:func:`repro.quant.api.quantize_params` (see DESIGN.md).
+
+The method name is resolved through :mod:`repro.quant.registry` — adding a
+method is a registry entry, not another ``if`` chain.
 """
 from __future__ import annotations
 
@@ -14,10 +35,24 @@ from typing import Optional
 from .awq import AWQConfig
 from .qdq import QuantConfig
 
+_QCFG_FIELDS = {f.name for f in dataclasses.fields(QuantConfig)}
+_ACFG_FIELDS = {f.name for f in dataclasses.fields(AWQConfig)}
+
+
+def override(pattern: str, **delta) -> tuple:
+    """Normalize one override to a hashable (pattern, ((key, value), ...))."""
+    known = _QCFG_FIELDS | _ACFG_FIELDS | {
+        "method", "rank", "packed", "per_expert_stats"}
+    unknown = set(delta) - known
+    if unknown:
+        raise ValueError(f"unknown override field(s) {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    return (pattern, tuple(sorted(delta.items())))
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    method: str = "ttq"            # 'none' | 'rtn' | 'awq' | 'gptq' | 'ttq'
+    method: str = "ttq"            # any name in repro.quant.registry
     qcfg: QuantConfig = QuantConfig(bits=4, group_size=32, layout="row")
     acfg: AWQConfig = AWQConfig()
     rank: int = 0                  # low-rank residual rank r (0 = off)
@@ -26,14 +61,72 @@ class QuantPolicy:
                    "gamma", "beta")                           # norm params
     packed: bool = False           # real int path (Pallas kernel) vs fake-quant
     per_expert_stats: bool = True  # MoE: accumulate D per expert
+    overrides: tuple = ()          # ((pattern, ((field, value), ...)), ...)
+
+    @property
+    def quantizer(self):
+        """The registered method object for ``self.method``."""
+        from repro.quant.registry import get_quantizer
+        return get_quantizer(self.method)
+
+    @property
+    def enabled(self) -> bool:
+        return self.quantizer.enabled
+
+    def methods(self) -> tuple:
+        """All method names this policy can resolve to (base + overrides)."""
+        names = [self.method]
+        for _, delta in self.overrides:
+            for k, v in delta:
+                if k == "method" and v not in names:
+                    names.append(v)
+        return tuple(names)
+
+    @property
+    def any_enabled(self) -> bool:
+        """True if the base method or any override-reachable method is on."""
+        from repro.quant.registry import get_quantizer
+        return any(get_quantizer(m).enabled for m in self.methods())
 
     def quantizes(self, name: str) -> bool:
-        if self.method == "none":
+        if not self.enabled:
             return False
         return not any(fnmatch.fnmatch(name, pat) for pat in self.skip)
 
     def with_(self, **kw) -> "QuantPolicy":
         return dataclasses.replace(self, **kw)
+
+    # ----------------------------------------------------- per-layer overrides
+
+    def with_overrides(self, *ovr) -> "QuantPolicy":
+        """Append overrides (``override(...)`` tuples or (pattern, dict))."""
+        norm = tuple(
+            o if isinstance(o[1], tuple) else override(o[0], **o[1])
+            for o in ovr)
+        return dataclasses.replace(self, overrides=self.overrides + norm)
+
+    def _apply(self, delta: tuple) -> "QuantPolicy":
+        top, qkw, akw = {}, {}, {}
+        for k, v in delta:
+            if k in _QCFG_FIELDS:
+                qkw[k] = v
+            elif k in _ACFG_FIELDS:
+                akw[k] = v
+            else:
+                top[k] = v
+        if qkw:
+            top["qcfg"] = dataclasses.replace(self.qcfg, **qkw)
+        if akw:
+            top["acfg"] = dataclasses.replace(self.acfg, **akw)
+        return dataclasses.replace(self, **top)
+
+    def resolve(self, path: str) -> "QuantPolicy":
+        """Effective policy for one parameter path (all matches, in order)."""
+        eff = self
+        for pat, delta in self.overrides:
+            if fnmatch.fnmatch(path, pat):
+                eff = eff._apply(delta)
+        return eff
 
 
 NO_QUANT = QuantPolicy(method="none")

@@ -23,7 +23,6 @@ trees flow through jit / pjit / shard_map like any other params.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -164,123 +163,9 @@ def ttq_linear(x: jnp.ndarray, w, **kw) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# whole-model quantization: join params ↔ activation stats by path
+# whole-model quantization now lives in repro.quant.api — thin shims below
+# keep historical imports (repro.core.quantize_params, ...) working.
 # ---------------------------------------------------------------------------
 
-# projections sharing their input with a tapped sibling (one tap per input).
-STAT_ALIAS = {
-    "wk": "wq", "wv": "wq", "wkv_a": "wq", "wu": "wg",
-    "w_in": "w_branch", "w_z": "w_x", "w_B": "w_x", "w_C": "w_x", "w_dt": "w_x",
-}
-
-
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if isinstance(p, jax.tree_util.DictKey):
-            parts.append(str(p.key))
-        elif isinstance(p, jax.tree_util.SequenceKey):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(getattr(p, "key", p)))
-    return ".".join(parts)
-
-
-def _stats_key(rel_path: tuple) -> str:
-    """('u0','mix','wq') → 'u0.mix.wq' with alias resolution on the leaf name."""
-    *head, leaf = rel_path
-    leaf = STAT_ALIAS.get(leaf, leaf)
-    return ".".join([*head, leaf])
-
-
-def _lookup_stats(stats_run: dict, rel_path: tuple):
-    key = _stats_key(rel_path)
-    if key in stats_run:
-        return stats_run[key]
-    # expert weights: stats stored per 'experts.wg'/'experts.wd'
-    if rel_path[-1] in ("wg", "wu", "wd") and "experts" in rel_path:
-        leaf = "wg" if rel_path[-1] in ("wg", "wu") else "wd"
-        key2 = ".".join([*rel_path[:-1], leaf])
-        if key2 in stats_run:
-            return stats_run[key2]
-    return None
-
-
-def quantize_params(params, stats, policy: QuantPolicy, *,
-                    count: float = 1.0, acfg: Optional[AWQConfig] = None,
-                    lowrank_tree=None):
-    """TTQ the whole model: replace quantizable 2-D/3-D weights by
-    :class:`QuantizedTensor`, joining activation stats by param path.
-
-    ``stats`` is the structure produced by ``models.lm.forward(collect_stats=
-    True)``: {'stack': [run-dicts of Σx² leaves, leading run dim], ...}.
-    Weights whose stats are missing (untapped) or that match ``policy.skip``
-    stay in full precision.
-    """
-    acfg = acfg or policy.acfg
-    countf = jnp.asarray(count, jnp.float32)
-    is_rtn = policy.method == "rtn"
-
-    def quant_one(W, stat, BA):
-        if is_rtn:
-            D = jnp.ones((W.shape[-1],), jnp.float32)
-        else:
-            D = diag_from_stats(stat, countf, acfg)
-        B = A = None
-        if BA is not None:
-            B, A = BA["B"], BA["A"]
-        elif policy.rank > 0 and min(W.shape) > policy.rank:
-            B, A = svd_factors(W, policy.rank)
-        return quantize_weight(W, D, policy, B, A)
-
-    def per_leaf(path, leaf):
-        ps = _path_str(path)
-        if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2 or leaf.ndim > 4:
-            return leaf
-        if not policy.quantizes(ps.split(".")[-1]) or not policy.quantizes(ps):
-            return leaf
-        parts = ps.split(".")
-        ba = _tree_get(lowrank_tree, path) if lowrank_tree is not None else None
-        # locate the stats leaf for this weight (RTN needs none)
-        stat = None
-        if not is_rtn:
-            if parts[0] not in ("stack", "enc_stack"):
-                if isinstance(stats, dict) and ps in stats and leaf.ndim == 2:
-                    return quant_one(leaf, stats[ps], None)
-                return leaf
-            run = (stats or {}).get(parts[0])
-            if run is None:
-                return leaf
-            stat = _lookup_stats(run[int(parts[1])], tuple(parts[2:]))
-            if stat is None:
-                return leaf
-        elif (parts[0] in ("stack", "enc_stack") and leaf.ndim >= 3) \
-                or (parts[0] not in ("stack", "enc_stack") and leaf.ndim == 2):
-            # stacked weights are ≥3-D (run dim); stacked 1-D params (norm
-            # scales, decay vectors) must not be mistaken for 2-D weights
-            stat = jnp.zeros(leaf.shape[:-2] + leaf.shape[-1:], jnp.float32)
-        else:
-            return leaf
-        if ba is None:
-            fn = lambda W, s: quant_one(W, s, None)
-            for _ in range(leaf.ndim - 2):           # vmap over run / expert dims
-                fn = jax.vmap(fn)
-            return fn(leaf, stat)
-        fn = quant_one
-        for _ in range(leaf.ndim - 2):
-            fn = jax.vmap(fn)
-        return fn(leaf, stat, ba)
-
-    return jax.tree_util.tree_map_with_path(per_leaf, params)
-
-
-def _tree_get(tree, path):
-    node = tree
-    try:
-        for p in path:
-            key = p.key if isinstance(p, jax.tree_util.DictKey) else (
-                p.idx if isinstance(p, jax.tree_util.SequenceKey) else p)
-            node = node[key]
-        return node
-    except (KeyError, IndexError, TypeError):
-        return None
+from repro.quant.api import (STAT_ALIAS, _lookup_stats, _path_str,  # noqa: E402
+                             _stats_key, _tree_get, quantize_params)

@@ -2,9 +2,29 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_7b --smoke \
         --requests 8 --bits 4 --rank 16
+
+Mixed precision is declared through policy overrides (repro.quant), e.g.
+``--attn-bits 4 --mlp-bits 3`` gives attention projections 4-bit and MLPs
+3-bit (outlier-heavy projections tolerate fewer bits worse — keep them wide).
 """
 import argparse
 import time
+
+
+def build_policy(args):
+    """CLI flags → QuantPolicy with per-layer mixed-precision overrides."""
+    from repro.quant import NO_QUANT, override, ttq_policy
+
+    if args.no_quant:
+        return NO_QUANT
+    policy = ttq_policy(bits=args.bits, group_size=args.group_size,
+                        rank=args.rank)
+    ovr = []
+    if args.attn_bits:
+        ovr.append(override("*.mix.*", bits=args.attn_bits))
+    if args.mlp_bits:
+        ovr.append(override("*.mlp.*", bits=args.mlp_bits))
+    return policy.with_overrides(*ovr) if ovr else policy
 
 
 def main():
@@ -19,20 +39,22 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--attn-bits", type=int, default=0,
+                    help="override bits for attention projections (0 = base)")
+    ap.add_argument("--mlp-bits", type=int, default=0,
+                    help="override bits for MLP projections (0 = base)")
     args = ap.parse_args()
 
     import jax
     import numpy as np
 
     from repro.configs import get
-    from repro.core import NO_QUANT, ttq_policy
     from repro.models import lm
     from repro.serving import EngineConfig, TTQEngine
 
     cfg = get(args.arch, smoke=args.smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    policy = NO_QUANT if args.no_quant else ttq_policy(
-        bits=args.bits, group_size=args.group_size, rank=args.rank)
+    policy = build_policy(args)
     eng = TTQEngine(cfg, params, policy,
                     EngineConfig(max_slots=args.slots, max_len=args.max_len))
     rng = np.random.default_rng(0)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES
-from repro.core import AWQConfig, QuantPolicy, quantize_params, ttq_policy
+from repro.core import AWQConfig, QuantPolicy
+from repro.quant import quantize_params, ttq_policy
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.optim import adamw_init
@@ -122,7 +123,7 @@ def quantized_params_abstract(cfg: ModelConfig, policy: QuantPolicy, seq: int,
         lambda p, b: lm.prefill(cfg, p, b, max_len=seq, collect_stats=True,
                                 full_logits=False),
         params_sds, batch_sds)
-    if policy.method == "none":
+    if not policy.enabled:
         return params_sds, state_sds
     qparams_sds = jax.eval_shape(
         lambda p, s: quantize_params(p, s, policy, count=float(seq * gbatch)),

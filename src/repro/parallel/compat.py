@@ -1,0 +1,30 @@
+"""JAX version compatibility.
+
+``jax.shard_map`` became a top-level API (with the ``check_vma`` kwarg) after
+the experimental period; older versions (≤0.4.x, like the pinned toolchain
+here) expose ``jax.experimental.shard_map.shard_map`` with the same semantics
+under the ``check_rep`` kwarg.  Call sites import :func:`shard_map` from here
+and always use the new-style ``check_vma`` name.
+"""
+from __future__ import annotations
+
+import jax
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` (new API) / ``psum(1, name)`` (old) inside a
+    mapped context."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

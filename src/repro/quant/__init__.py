@@ -1,0 +1,30 @@
+"""repro.quant — the unified quantization API.
+
+Three pillars (DESIGN.md):
+
+* **method registry** — :class:`Quantizer` protocol + ``@register_quantizer``;
+  methods (``ttq`` / ``awq`` / ``rtn`` / ``gptq`` / ``none``) are pluggable
+  objects, not string ``if`` chains.
+* **CalibrationSession** — first-class ownership of the additive activation
+  statistics: accumulate / decay / snapshot / fork / merge.
+* **per-layer policy overrides** — ``QuantPolicy.overrides`` maps fnmatch
+  patterns on parameter paths to partial-policy deltas, giving declarative
+  mixed precision (attention 4-bit g=32, MLP 3-bit g=64, edge blocks 8-bit…).
+
+Tied together by :class:`QuantizedModel`:
+``calibrate(stats) → requantize() → decode_params``.
+"""
+from repro.core.policy import NO_QUANT, QuantPolicy, override, ttq_policy
+
+from .api import lowrank_tree, quantize_params
+from .model import QuantizedModel
+from .registry import (Quantizer, get_quantizer, register_quantizer,
+                       registered_methods)
+from .session import CalibrationSession
+
+__all__ = [
+    "CalibrationSession", "NO_QUANT", "QuantPolicy", "QuantizedModel",
+    "Quantizer", "get_quantizer", "lowrank_tree", "override",
+    "quantize_params", "register_quantizer", "registered_methods",
+    "ttq_policy",
+]

@@ -1,0 +1,178 @@
+"""Whole-model quantization driver: join params ↔ activation stats by path.
+
+This is the tree-level orchestration behind every quantization entry point
+(engine requantization, benchmark sweeps, dry-run shape inference).  Per
+parameter path it:
+
+1. resolves the effective :class:`~repro.core.policy.QuantPolicy` through the
+   policy's fnmatch ``overrides`` (mixed precision),
+2. resolves the effective policy's ``method`` through the
+   :mod:`repro.quant.registry` (no string dispatch),
+3. locates the matching activation-statistic leaf (methods with
+   ``requires_stats=False`` synthesize a zero statistic), and
+4. asks the quantizer for the :class:`~repro.core.ttq.QuantizedTensor`,
+   vmapping over leading run / expert dims.
+
+``repro.core`` keeps thin delegating shims so historical imports
+(``repro.core.quantize_params``) continue to work.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.awq import AWQConfig
+from repro.core.lowrank import svd_factors
+from repro.core.policy import QuantPolicy
+
+# projections sharing their input with a tapped sibling (one tap per input).
+STAT_ALIAS = {
+    "wk": "wq", "wv": "wq", "wkv_a": "wq", "wu": "wg",
+    "w_in": "w_branch", "w_z": "w_x", "w_B": "w_x", "w_C": "w_x", "w_dt": "w_x",
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(getattr(p, "key", p)))
+    return ".".join(parts)
+
+
+def _stats_key(rel_path: tuple) -> str:
+    """('u0','mix','wq') → 'u0.mix.wq' with alias resolution on the leaf name."""
+    *head, leaf = rel_path
+    leaf = STAT_ALIAS.get(leaf, leaf)
+    return ".".join([*head, leaf])
+
+
+def _lookup_stats(stats_run: dict, rel_path: tuple):
+    key = _stats_key(rel_path)
+    if key in stats_run:
+        return stats_run[key]
+    # expert weights: stats stored per 'experts.wg'/'experts.wd'
+    if rel_path[-1] in ("wg", "wu", "wd") and "experts" in rel_path:
+        leaf = "wg" if rel_path[-1] in ("wg", "wu") else "wd"
+        key2 = ".".join([*rel_path[:-1], leaf])
+        if key2 in stats_run:
+            return stats_run[key2]
+    return None
+
+
+def _tree_get(tree, path):
+    node = tree
+    try:
+        for p in path:
+            key = p.key if isinstance(p, jax.tree_util.DictKey) else (
+                p.idx if isinstance(p, jax.tree_util.SequenceKey) else p)
+            node = node[key]
+        return node
+    except (KeyError, IndexError, TypeError):
+        return None
+
+
+def quantize_params(params, stats, policy: QuantPolicy, *,
+                    count: float = 1.0, acfg: Optional[AWQConfig] = None,
+                    lowrank_tree=None):
+    """Quantize the whole model: replace quantizable 2-D/3-D weights by
+    :class:`~repro.core.ttq.QuantizedTensor`, joining activation stats by
+    param path.
+
+    ``stats`` is the structure produced by ``models.lm.forward(collect_stats=
+    True)``: {'stack': [run-dicts of Σx² leaves, leading run dim], ...}.
+    Weights whose stats are missing (untapped), that match ``policy.skip``,
+    or whose override-resolved method is disabled stay in full precision.
+    """
+    countf = jnp.asarray(count, jnp.float32)
+    # a caller-supplied acfg replaces the policy's *base* statistics config;
+    # per-path overrides (p/alpha/lam/form) still apply on top of it
+    base = policy if acfg is None else policy.with_(acfg=acfg)
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2 or leaf.ndim > 4:
+            return leaf
+        eff = base.resolve(ps)
+        if not eff.quantizes(ps.split(".")[-1]) or not eff.quantizes(ps):
+            return leaf
+        qz = eff.quantizer
+        eff_acfg = eff.acfg
+        parts = ps.split(".")
+        ba = _tree_get(lowrank_tree, path) if lowrank_tree is not None else None
+
+        def quant_one(W, stat, BA=None):
+            B = A = None
+            if BA is not None:
+                B, A = BA["B"], BA["A"]
+            elif eff.rank > 0 and min(W.shape) > eff.rank:
+                B, A = svd_factors(W, eff.rank)
+            return qz.quantize_weight(W, stat, countf, eff, eff_acfg, B, A)
+
+        # locate the stats leaf for this weight (stats-free methods need none)
+        stat = None
+        if qz.requires_stats:
+            if parts[0] not in ("stack", "enc_stack"):
+                if isinstance(stats, dict) and ps in stats and leaf.ndim == 2:
+                    return quant_one(leaf, stats[ps], None)
+                return leaf
+            run = (stats or {}).get(parts[0])
+            if run is None:
+                return leaf
+            stat = _lookup_stats(run[int(parts[1])], tuple(parts[2:]))
+            if stat is None:
+                return leaf
+        elif (parts[0] in ("stack", "enc_stack") and leaf.ndim >= 3) \
+                or (parts[0] not in ("stack", "enc_stack") and leaf.ndim == 2):
+            # stacked weights are ≥3-D (run dim); stacked 1-D params (norm
+            # scales, decay vectors) must not be mistaken for 2-D weights
+            stat = jnp.zeros(leaf.shape[:-2] + leaf.shape[-1:], jnp.float32)
+        else:
+            return leaf
+        if ba is None:
+            fn = lambda W, s: quant_one(W, s, None)
+            for _ in range(leaf.ndim - 2):           # vmap over run / expert dims
+                fn = jax.vmap(fn)
+            return fn(leaf, stat)
+        fn = quant_one
+        for _ in range(leaf.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(leaf, stat, ba)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def lowrank_tree(params, policy: QuantPolicy):
+    """Offline, data-free SVD factors for every quantizable 2/3-D weight.
+
+    Returns a pytree of {'B','A'} dicts (None where ineligible) matching the
+    param container structure, vmapped over leading run / expert dims, or
+    None when no path resolves to rank > 0 (base policy *or* overrides).
+    Computed once per model; :func:`quantize_params` consumes it via
+    ``lowrank_tree=`` so requantization never re-runs the SVD.
+    """
+    found = False
+
+    def per_leaf(path, leaf):
+        nonlocal found
+        ps = _path_str(path)
+        eff = policy.resolve(ps)
+        last = ps.split(".")[-1]
+        if (getattr(leaf, "ndim", 0) in (2, 3) and eff.rank > 0
+                and eff.quantizes(last) and eff.quantizes(ps)
+                and min(leaf.shape[-2:]) > eff.rank):
+            found = True
+            fn = lambda W: dict(zip(("B", "A"), svd_factors(W, eff.rank)))
+            for _ in range(leaf.ndim - 2):
+                fn = jax.vmap(fn)
+            return fn(leaf)
+        return None
+
+    tree = jax.tree_util.tree_map_with_path(per_leaf, params)
+    return tree if found else None

@@ -1,0 +1,100 @@
+"""QuantizedModel — the calibrate → requantize → decode_params facade.
+
+Owns everything the TTQ lifecycle needs around a parameter tree:
+
+* a :class:`~repro.quant.session.CalibrationSession` accumulating the live
+  workload's activation statistics (decay, fork/merge for multi-stream),
+* the data-free low-rank factor tree (computed **once**; requantization
+  reuses it — no per-requant SVD),
+* the current quantized parameter tree and a requantization counter.
+
+Typical serving loop::
+
+    qm = QuantizedModel(params, policy, halflife=ecfg.stats_halflife)
+    ...
+    qm.calibrate(prefill_stats, tokens=n_prefill_tokens)
+    qm.requantize()
+    logits = decode(qm.decode_params, ...)
+
+Multi-stream: ``child = qm.fork()`` shares params and low-rank factors but
+gets an independent calibration session; join with
+``qm.adopt(child.session)`` (exact — the statistics are additive).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.awq import AWQConfig
+from repro.core.policy import QuantPolicy
+
+from .api import lowrank_tree, quantize_params
+from .session import CalibrationSession
+
+
+_AUTO = object()   # sentinel: compute the low-rank tree from the policy
+
+
+class QuantizedModel:
+    def __init__(self, params: Any, policy: QuantPolicy, *,
+                 acfg: Optional[AWQConfig] = None, halflife: float = 0.0,
+                 session: Optional[CalibrationSession] = None,
+                 lowrank: Any = _AUTO):
+        self.params = params
+        self.policy = policy
+        self.acfg = acfg
+        self.session = session if session is not None else \
+            CalibrationSession(halflife=halflife)
+        if lowrank is _AUTO:
+            self.lowrank_tree = lowrank_tree(params, policy) \
+                if policy.any_enabled else None
+        else:
+            self.lowrank_tree = lowrank
+        self.qparams = None
+        self.n_requants = 0
+
+    # -------------------------------------------------------------- lifecycle
+
+    def calibrate(self, stats: Any, tokens: float) -> "QuantizedModel":
+        """Fold one prefill's activation statistics into the session."""
+        self.session.update(stats, tokens)
+        return self
+
+    def requantize(self):
+        """(Re)quantize from the session's current statistics.
+
+        Returns the quantized tree, or None when every reachable method
+        (base policy or override) is disabled, or when all enabled methods
+        still need statistics the session doesn't have yet.
+        """
+        from .registry import get_quantizer
+        active = [q for q in map(get_quantizer, self.policy.methods())
+                  if q.enabled]
+        if not active:
+            return None
+        if not self.session.calibrated and all(q.requires_stats
+                                               for q in active):
+            return None
+        stats, count = self.session.as_calib()
+        self.qparams = quantize_params(
+            self.params, stats, self.policy, count=count,
+            acfg=self.acfg, lowrank_tree=self.lowrank_tree)
+        self.n_requants += 1
+        return self.qparams
+
+    @property
+    def decode_params(self):
+        """Quantized tree if one exists, else the fp parameters."""
+        return self.qparams if self.qparams is not None else self.params
+
+    # ------------------------------------------------------------ fork / join
+
+    def fork(self) -> "QuantizedModel":
+        """Independent calibration stream sharing params + low-rank factors."""
+        return QuantizedModel(self.params, self.policy, acfg=self.acfg,
+                              session=self.session.fork(),
+                              lowrank=self.lowrank_tree)
+
+    def adopt(self, session: CalibrationSession) -> "QuantizedModel":
+        """Join a forked stream's statistics into this model's session."""
+        self.session = self.session.merge(session)
+        return self

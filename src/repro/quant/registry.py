@@ -1,0 +1,149 @@
+"""Quantization-method registry — pluggable method objects, no string `if` chains.
+
+A method is a :class:`Quantizer` instance registered under a name::
+
+    @register_quantizer("my_method")
+    class MyQuantizer:
+        requires_stats = True
+        def diag(self, stat, count, acfg, d): ...
+        def quantize_weight(self, W, stat, count, policy, acfg, B=None, A=None): ...
+
+The tree-level driver (:func:`repro.quant.api.quantize_params`) resolves the
+method once per parameter path (after per-layer policy overrides) and asks the
+quantizer for (a) the activation scaling diagonal D and (b) the quantized
+weight.  ``enabled=False`` methods (the ``"none"`` placeholder) switch
+quantization off without any ``policy.method == "..."`` checks at call sites.
+
+Built-ins:
+
+* ``ttq``  — the paper's method: D from the *live* activation statistics.
+* ``awq``  — identical closed form, offline-calibrated usage (stats from a
+  fixed calibration set instead of the live workload).
+* ``rtn``  — round-to-nearest, activation-unaware (D = 1).
+* ``gptq`` — diagonal-Hessian surrogate on the tree path (only the additive
+  diagonal sufficient statistic is available online; with a diagonal Hessian
+  the OBS error propagation vanishes and the closed form coincides with the
+  activation-aware scaling).  The full-covariance reference lives in
+  :func:`repro.core.gptq.gptq_qdq` and is exposed as ``qdq_reference`` for
+  layer-level benchmarks.
+* ``none`` — disabled placeholder (full precision).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.core.awq import AWQConfig, diag_from_stats
+
+
+@runtime_checkable
+class Quantizer(Protocol):
+    """Protocol every registered quantization method implements."""
+
+    name: str               # filled in by @register_quantizer
+    enabled: bool           # False → method is a no-op (params stay fp)
+    requires_stats: bool    # True → needs accumulated activation statistics
+
+    def diag(self, stat: Any, count: Any, acfg: AWQConfig, d: int) -> jnp.ndarray:
+        """Activation scaling vector D (d,) from the sufficient statistic."""
+        ...
+
+    def quantize_weight(self, W, stat, count, policy, acfg,
+                        B=None, A=None):
+        """One (d', d) weight → :class:`repro.core.ttq.QuantizedTensor`."""
+        ...
+
+
+_REGISTRY: Dict[str, Quantizer] = {}
+
+
+def register_quantizer(name: str):
+    """Class decorator: instantiate and register under ``name``."""
+
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _REGISTRY[name] = inst
+        return cls
+
+    return deco
+
+
+def get_quantizer(name: str) -> Quantizer:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown quantization method {name!r}; registered: "
+            f"{registered_methods()}") from None
+
+
+def registered_methods() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# built-in methods
+# ---------------------------------------------------------------------------
+
+
+class _BaseQuantizer:
+    enabled = True
+    requires_stats = True
+
+    def diag(self, stat, count, acfg: AWQConfig, d: int) -> jnp.ndarray:
+        return diag_from_stats(stat, count, acfg)
+
+    def quantize_weight(self, W, stat, count, policy, acfg, B=None, A=None):
+        from repro.core.ttq import quantize_weight
+        D = self.diag(stat, count, acfg, W.shape[-1])
+        return quantize_weight(W, D, policy, B, A)
+
+
+@register_quantizer("ttq")
+class TTQQuantizer(_BaseQuantizer):
+    """Test-time quantization: D from the live workload's statistics."""
+
+
+@register_quantizer("awq")
+class AWQQuantizer(_BaseQuantizer):
+    """Same closed form as TTQ; stats come from an offline calibration set."""
+
+
+@register_quantizer("rtn")
+class RTNQuantizer(_BaseQuantizer):
+    """Round-to-nearest: activation-unaware, D = 1."""
+
+    requires_stats = False
+
+    def diag(self, stat, count, acfg: AWQConfig, d: int) -> jnp.ndarray:
+        return jnp.ones((d,), jnp.float32)
+
+
+@register_quantizer("gptq")
+class GPTQQuantizer(_BaseQuantizer):
+    """Diagonal-Hessian GPTQ for the (online) tree path.
+
+    Only diag[XXᵀ] is available as an additive online statistic; the OBS
+    cross-column compensation needs the full Hessian, so the tree path uses
+    the activation-aware diagonal closed form (== AWQ/TTQ scaling, the
+    paper's Appendix C equivalence).  ``qdq_reference`` runs the exact
+    column-serial algorithm against raw activations for benchmarks.
+    """
+
+    @staticmethod
+    def qdq_reference(W, X, qcfg):
+        from repro.core.gptq import gptq_qdq
+        return gptq_qdq(W, X, qcfg)
+
+
+@register_quantizer("none")
+class NoneQuantizer(_BaseQuantizer):
+    """Quantization disabled — parameters stay in full precision."""
+
+    enabled = False
+    requires_stats = False
+
+    def quantize_weight(self, W, stat, count, policy, acfg, B=None, A=None):
+        return W

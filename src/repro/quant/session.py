@@ -1,0 +1,100 @@
+"""CalibrationSession — first-class ownership of online activation statistics.
+
+The paper's calibration state is a pytree of additive sufficient statistics
+(Σ_t |x_t|^p per linear input feature) plus a token count.  Everything the
+serving engine and the benchmarks used to hand-roll (tree-add, tree-scale,
+halflife decay, count bookkeeping) lives here, with two extras needed for
+multi-stream serving:
+
+* ``snapshot()`` / ``fork()`` — O(1) copies (jax arrays are immutable, so the
+  stats tree is shared by reference; subsequent ``update``s rebuild the tree
+  functionally and never mutate a snapshot).
+* ``merge(other)`` — join two sessions by summing their sufficient statistics
+  (exact, because the statistics are additive): fork per stream, join at
+  requantization time.
+
+Decay: with ``halflife=h`` (measured in updates), every ``update`` first
+scales existing stats and count by ``0.5**(1/h)``, so a request admitted h
+updates ago carries half the weight of the current one.  ``halflife=0``
+disables decay (plain accumulation).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def _tree_add(a: Any, b: Any) -> Any:
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def _tree_scale(a: Any, s: float) -> Any:
+    if a is None:
+        return None
+    return jax.tree.map(lambda x: x * s, a)
+
+
+class CalibrationSession:
+    """Accumulates activation statistics for online (re)quantization."""
+
+    def __init__(self, halflife: float = 0.0,
+                 stats: Any = None, count: float = 0.0, n_updates: int = 0):
+        self.halflife = float(halflife)
+        self.stats = stats
+        self.count = float(count)
+        self.n_updates = int(n_updates)
+
+    # ------------------------------------------------------------- lifecycle
+
+    def update(self, stats: Any, tokens: float) -> "CalibrationSession":
+        """Fold one prefill's statistics in (with decay if halflife > 0)."""
+        if self.halflife > 0 and self.stats is not None:
+            decay = 0.5 ** (1.0 / self.halflife)
+            self.stats = _tree_scale(self.stats, decay)
+            self.count *= decay
+        self.stats = _tree_add(self.stats, stats)
+        self.count += float(tokens)
+        self.n_updates += 1
+        return self
+
+    def reset(self) -> "CalibrationSession":
+        self.stats, self.count, self.n_updates = None, 0.0, 0
+        return self
+
+    # ----------------------------------------------------------- fork / join
+
+    def snapshot(self) -> "CalibrationSession":
+        """Immutable-by-construction copy sharing the current stats tree."""
+        return CalibrationSession(self.halflife, self.stats,
+                                  self.count, self.n_updates)
+
+    fork = snapshot
+
+    def merge(self, other: "CalibrationSession") -> "CalibrationSession":
+        """Join: sum of sufficient statistics (exact for additive stats)."""
+        return CalibrationSession(
+            self.halflife,
+            _tree_add(self.stats, other.stats),
+            self.count + other.count,
+            self.n_updates + other.n_updates,
+        )
+
+    # ------------------------------------------------------------ inspection
+
+    @property
+    def calibrated(self) -> bool:
+        return self.stats is not None
+
+    def as_calib(self) -> tuple:
+        """(stats, count) pair for the tree quantization driver."""
+        return self.stats, max(self.count, 1.0)
+
+    def __repr__(self) -> str:
+        return (f"CalibrationSession(count={self.count:.0f}, "
+                f"n_updates={self.n_updates}, halflife={self.halflife}, "
+                f"calibrated={self.calibrated})")

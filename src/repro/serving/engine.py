@@ -12,8 +12,10 @@ The paper's lifecycle (Fig. 1b) as a slot-based engine:
 Per-prompt calibration (the paper's setting) is the ``max_slots=1`` case; with
 batched serving the engine self-calibrates on the aggregate of the *current*
 prompts — the statistics are additive sufficient statistics, so this is the
-natural generalization (DESIGN.md §1).  Low-rank factors (B, A) are data-free
-SVD, computed once at engine construction.
+natural generalization (DESIGN.md §"CalibrationSession").  Quantization state
+(stats accumulation/decay, low-rank factors computed once, the quantized
+tree) is owned by :class:`repro.quant.QuantizedModel`; the engine only
+drives the lifecycle.
 
 Per-slot positions everywhere → true continuous batching: a new request can be
 admitted while other slots are mid-generation.
@@ -29,10 +31,11 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import AWQConfig, QuantPolicy, quantize_params
-from repro.core.ttq import _path_str
+from repro.core import QuantPolicy
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.quant import QuantizedModel
+from repro.quant.api import _path_str
 
 from .sampling import sample
 
@@ -56,16 +59,6 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     frames: Any = None              # encdec stub modality input
-
-
-def _tree_add(a, b):
-    if a is None:
-        return b
-    return jax.tree.map(lambda x, y: x + y, a, b)
-
-
-def _tree_scale(a, s):
-    return jax.tree.map(lambda x: x * s, a)
 
 
 def _write_slot(batched, single, slot: int):
@@ -96,13 +89,12 @@ class TTQEngine:
         self.queue: deque = deque()
         self.finished: Dict[int, Request] = {}
         self._rid = itertools.count()
-        # TTQ state
-        self.agg_stats = None
-        self.stat_count = 0.0
-        self.qparams = None
+        # TTQ state: session + low-rank factors + quantized tree, all owned
+        # by the facade (factors are computed once, here — requantization
+        # reuses them, no per-requant SVD).
+        self.qmodel = QuantizedModel(params, policy,
+                                     halflife=ecfg.stats_halflife)
         self.admits_since_cal = 0
-        self.n_requants = 0
-        self.lowrank_tree = self._init_lowrank() if policy.rank > 0 else None
         self._decode_jit = jax.jit(partial(lm.decode_step, cfg, pctx=pctx))
         self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
                                             collect_stats=True,
@@ -111,36 +103,34 @@ class TTQEngine:
 
     # ------------------------------------------------------------------ TTQ
 
-    def _init_lowrank(self):
-        """Offline, data-free SVD factors for every quantizable 2-D weight."""
-        from repro.core.lowrank import svd_factors
-        pol = self.policy
-
-        def per_leaf(path, leaf):
-            ps = _path_str(path)
-            last = ps.split(".")[-1]
-            if (getattr(leaf, "ndim", 0) in (2, 3) and pol.quantizes(last)
-                    and pol.quantizes(ps) and min(leaf.shape[-2:]) > pol.rank):
-                fn = lambda W: dict(zip(("B", "A"), svd_factors(W, pol.rank)))
-                for _ in range(leaf.ndim - 2):
-                    fn = jax.vmap(fn)
-                return fn(leaf)
-            return None
-
-        return jax.tree_util.tree_map_with_path(per_leaf, self.params)
-
     def _requantize(self):
-        if self.policy.method == "none" or self.agg_stats is None:
-            return
-        self.qparams = quantize_params(
-            self.params, self.agg_stats, self.policy,
-            count=max(self.stat_count, 1.0), lowrank_tree=None)
-        self.n_requants += 1
-        self.admits_since_cal = 0
+        if self.qmodel.requantize() is not None:
+            self.admits_since_cal = 0
 
+    # back-compat views of the facade's state (tests/benchmarks use these)
     @property
     def decode_params(self):
-        return self.qparams if self.qparams is not None else self.params
+        return self.qmodel.decode_params
+
+    @property
+    def qparams(self):
+        return self.qmodel.qparams
+
+    @property
+    def n_requants(self):
+        return self.qmodel.n_requants
+
+    @property
+    def lowrank_tree(self):
+        return self.qmodel.lowrank_tree
+
+    @property
+    def agg_stats(self):
+        return self.qmodel.session.stats
+
+    @property
+    def stat_count(self):
+        return self.qmodel.session.count
 
     # -------------------------------------------------------------- serving
 
@@ -175,12 +165,7 @@ class TTQEngine:
         logits, sstate, stats = self._prefill_jit(
             self.params, batch, max_len=self.ecfg.max_len)
         last_logits = logits[:, plen - 1]
-        if self.ecfg.stats_halflife and self.agg_stats is not None:
-            decay = 0.5 ** (1.0 / self.ecfg.stats_halflife)
-            self.agg_stats = _tree_scale(self.agg_stats, decay)
-            self.stat_count *= decay
-        self.agg_stats = _tree_add(self.agg_stats, stats)
-        self.stat_count += float(bucket)
+        self.qmodel.calibrate(stats, tokens=float(bucket))
         self.state = _write_slot(self.state, sstate, slot)
         self.key, sk = jax.random.split(self.key)
         nxt = sample(last_logits, sk, self.ecfg.temperature)

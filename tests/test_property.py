@@ -1,7 +1,11 @@
 """Hypothesis property tests on system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import QuantConfig, dequantize, pack_bits, qdq, quantize, unpack_bits
 

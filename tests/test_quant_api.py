@@ -1,0 +1,288 @@
+"""The unified repro.quant API: method registry, CalibrationSession,
+per-layer mixed-precision overrides, QuantizedModel lifecycle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AWQConfig, QuantizedTensor, quantize_params
+from repro.models import ModelConfig, lm
+from repro.quant import (CalibrationSession, NO_QUANT, QuantizedModel,
+                         get_quantizer, override, registered_methods,
+                         register_quantizer, ttq_policy)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=3, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def prefilled():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab)
+    _, _, stats = lm.prefill(CFG, params, {"tokens": toks}, max_len=20)
+    return params, stats, float(toks.size)
+
+
+def _qts(tree):
+    return [l for l in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor)]
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_builtins_present():
+    for m in ("ttq", "rtn", "awq", "gptq", "none"):
+        assert m in registered_methods()
+    assert get_quantizer("ttq").requires_stats
+    assert not get_quantizer("rtn").requires_stats
+    assert not get_quantizer("none").enabled
+
+
+def test_registry_unknown_method_raises():
+    with pytest.raises(KeyError, match="unknown quantization method"):
+        get_quantizer("int2point5")
+
+
+def test_register_custom_quantizer_roundtrip(prefilled):
+    """A user-registered method flows through the tree driver untouched."""
+    from repro.quant.registry import RTNQuantizer
+
+    @register_quantizer("rtn_test_alias")
+    class _Alias(RTNQuantizer):
+        pass
+
+    params, stats, count = prefilled
+    pol = ttq_policy(bits=4, group_size=32, rank=0)
+    qp_a = quantize_params(params, None, pol.with_(method="rtn_test_alias"))
+    qp_b = quantize_params(params, None, pol.with_(method="rtn"))
+    wa, wb = _qts(qp_a), _qts(qp_b)
+    assert len(wa) == len(wb) > 0
+    for a, b in zip(wa, wb):
+        np.testing.assert_array_equal(np.asarray(a.wint), np.asarray(b.wint))
+
+
+def test_registry_matches_closed_form_bit_exact(prefilled):
+    """Registry-dispatched ttq == direct quantize_weight closed form."""
+    from repro.core.awq import diag_from_stats
+    from repro.core.ttq import quantize_weight
+
+    params, stats, count = prefilled
+    pol = ttq_policy(bits=4, group_size=32, rank=0)
+    qp = quantize_params(params, stats, pol, count=count)
+    W = params["stack"][0]["u0"]["mix"]["wq"][1]
+    stat = stats["stack"][0]["u0.mix.wq"][1]
+    D = diag_from_stats(stat, jnp.float32(count), pol.acfg)
+    expect = quantize_weight(W, D, pol)
+    got = jax.tree.map(lambda l: l[1], qp["stack"][0]["u0"]["mix"]["wq"])
+    np.testing.assert_array_equal(np.asarray(got.wint), np.asarray(expect.wint))
+    np.testing.assert_allclose(np.asarray(got.scale), np.asarray(expect.scale))
+
+
+# ---------------------------------------------------------- CalibrationSession
+
+def _fake_stats(v):
+    return {"stack": [{"u0.mix.wq": jnp.full((4,), float(v))}]}
+
+
+def test_session_accumulates_and_counts():
+    s = CalibrationSession()
+    s.update(_fake_stats(1.0), tokens=10).update(_fake_stats(2.0), tokens=5)
+    assert s.count == 15 and s.n_updates == 2
+    np.testing.assert_allclose(
+        np.asarray(s.stats["stack"][0]["u0.mix.wq"]), 3.0)
+
+
+def test_session_halflife_decay():
+    s = CalibrationSession(halflife=1.0)   # each update halves the past
+    s.update(_fake_stats(8.0), tokens=8)
+    s.update(_fake_stats(0.0), tokens=0)
+    s.update(_fake_stats(0.0), tokens=0)
+    np.testing.assert_allclose(
+        np.asarray(s.stats["stack"][0]["u0.mix.wq"]), 2.0)
+    assert s.count == pytest.approx(2.0)
+
+
+def test_session_merge_is_sum():
+    a = CalibrationSession().update(_fake_stats(1.0), 4)
+    b = CalibrationSession().update(_fake_stats(5.0), 6)
+    m = a.merge(b)
+    np.testing.assert_allclose(
+        np.asarray(m.stats["stack"][0]["u0.mix.wq"]), 6.0)
+    assert m.count == 10 and m.n_updates == 2
+    # merge with an empty (fresh) session is identity
+    e = CalibrationSession().merge(a)
+    np.testing.assert_allclose(
+        np.asarray(e.stats["stack"][0]["u0.mix.wq"]), 1.0)
+
+
+def test_session_snapshot_isolated_from_updates():
+    s = CalibrationSession().update(_fake_stats(1.0), 1)
+    snap = s.snapshot()
+    s.update(_fake_stats(100.0), 1)
+    np.testing.assert_allclose(
+        np.asarray(snap.stats["stack"][0]["u0.mix.wq"]), 1.0)
+    assert snap.count == 1
+
+
+def test_session_merge_equals_one_big_session(prefilled):
+    """Additivity: chunked merge == single accumulation (exact)."""
+    params, _, _ = prefilled
+    toks = jax.random.randint(jax.random.PRNGKey(7), (4, 16), 0, CFG.vocab)
+    whole = CalibrationSession()
+    _, _, st = lm.prefill(CFG, params, {"tokens": toks}, max_len=20)
+    whole.update(st, toks.size)
+    parts = CalibrationSession()
+    for i in range(2):
+        chunk = toks[2 * i:2 * i + 2]
+        _, _, st = lm.prefill(CFG, params, {"tokens": chunk}, max_len=20)
+        parts = parts.merge(CalibrationSession().update(st, chunk.size))
+    assert parts.count == whole.count
+    for a, b in zip(jax.tree.leaves(parts.stats), jax.tree.leaves(whole.stats)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5)
+
+
+# ------------------------------------------------------- mixed precision
+
+def test_mixed_precision_overrides(prefilled):
+    """Two fnmatch patterns → different bits in the resulting tree."""
+    params, stats, count = prefilled
+    pol = ttq_policy(bits=3, group_size=32, rank=0).with_overrides(
+        override("*.mix.*", bits=8),
+        override("*.mlp.*", bits=2, group_size=16))
+    qp = quantize_params(params, stats, pol, count=count)
+    wq = qp["stack"][0]["u0"]["mix"]["wq"]
+    wg = qp["stack"][0]["u0"]["mlp"]["wg"]
+    assert isinstance(wq, QuantizedTensor) and isinstance(wg, QuantizedTensor)
+    assert wq.bits == 8 and wq.group_size == 32
+    assert wg.bits == 2 and wg.group_size == 16
+    # int codes actually live in the overridden ranges
+    assert int(wq.wint.max()) > 15          # 8-bit codes exceed 4-bit range
+    assert int(wg.wint.max()) <= 3          # 2-bit codes
+
+
+def test_override_later_wins():
+    pol = ttq_policy(bits=3).with_overrides(
+        override("stack.*", bits=4),
+        override("*.mlp.*", bits=8))
+    assert pol.resolve("stack.0.u0.mlp.wg").qcfg.bits == 8
+    assert pol.resolve("stack.0.u0.mix.wq").qcfg.bits == 4
+    assert pol.resolve("embed").qcfg.bits == 3
+
+
+def test_override_can_disable_per_path(prefilled):
+    """method='none' in an override keeps matching layers full precision."""
+    params, stats, count = prefilled
+    pol = ttq_policy(bits=4, group_size=32, rank=0).with_overrides(
+        override("*.mlp.*", method="none"))
+    qp = quantize_params(params, stats, pol, count=count)
+    assert isinstance(qp["stack"][0]["u0"]["mix"]["wq"], QuantizedTensor)
+    assert not isinstance(qp["stack"][0]["u0"]["mlp"]["wg"], QuantizedTensor)
+
+
+def test_override_unknown_field_rejected():
+    with pytest.raises(ValueError, match="unknown override field"):
+        override("*", bitz=4)
+
+
+# --------------------------------------------------------- QuantizedModel
+
+def test_quantized_model_lifecycle(prefilled):
+    params, stats, count = prefilled
+    qm = QuantizedModel(params, ttq_policy(bits=4, group_size=32, rank=0))
+    assert qm.decode_params is params          # not calibrated yet
+    assert qm.requantize() is None             # ttq needs stats
+    qm.calibrate(stats, tokens=count)
+    qp = qm.requantize()
+    assert qp is not None and qm.n_requants == 1
+    assert len(_qts(qp)) == 7
+    assert qm.decode_params is qp
+
+
+def test_quantized_model_none_policy(prefilled):
+    params, _, _ = prefilled
+    qm = QuantizedModel(params, NO_QUANT)
+    assert qm.requantize() is None and qm.decode_params is params
+
+
+def test_quantized_model_override_enables_disabled_base(prefilled):
+    """A 'none' base with an enabling override must still requantize the
+    matching layers (the facade gate considers override-reachable methods)."""
+    params, stats, count = prefilled
+    pol = NO_QUANT.with_overrides(override("*.mix.*", method="rtn", bits=4))
+    assert pol.any_enabled and not pol.enabled
+    qm = QuantizedModel(params, pol)
+    qp = qm.requantize()           # rtn override is stats-free → works now
+    assert qp is not None
+    assert isinstance(qp["stack"][0]["u0"]["mix"]["wq"], QuantizedTensor)
+    assert not isinstance(qp["stack"][0]["u0"]["mlp"]["wg"], QuantizedTensor)
+
+
+def test_quantized_model_fork_join(prefilled):
+    """Fork per stream, join at requant time — additive stats make it exact."""
+    params, stats, count = prefilled
+    qm = QuantizedModel(params, ttq_policy(bits=4, group_size=32, rank=0))
+    child_a, child_b = qm.fork(), qm.fork()
+    child_a.calibrate(stats, count)
+    child_b.calibrate(stats, count)
+    qm.adopt(child_a.session).adopt(child_b.session)
+    assert qm.session.count == 2 * count
+    assert qm.requantize() is not None
+
+
+def test_no_svd_rerun_on_requantize(prefilled, monkeypatch):
+    """Low-rank factors are computed once; requantization must reuse them."""
+    import repro.quant.api as api
+
+    params, stats, count = prefilled
+    qm = QuantizedModel(params, ttq_policy(bits=4, group_size=32, rank=8))
+    assert qm.lowrank_tree is not None
+    calls = []
+    real = api.svd_factors
+    monkeypatch.setattr(api, "svd_factors",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    for _ in range(3):
+        qm.calibrate(stats, tokens=count)
+        assert qm.requantize() is not None
+    assert not calls, f"requantize re-ran SVD {len(calls)} times"
+    qt = qm.qparams["stack"][0]["u0"]["mlp"]["wg"]
+    assert qt.B is not None and qt.A is not None
+
+
+def test_no_svd_rerun_with_override_rank(prefilled, monkeypatch):
+    """rank set only via an override must still precompute factors once."""
+    import repro.quant.api as api
+
+    params, stats, count = prefilled
+    pol = ttq_policy(bits=4, group_size=32, rank=0).with_overrides(
+        override("*.mlp.*", rank=8))
+    qm = QuantizedModel(params, pol)
+    assert qm.lowrank_tree is not None
+    calls = []
+    real = api.svd_factors
+    monkeypatch.setattr(api, "svd_factors",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    qm.calibrate(stats, tokens=count)
+    qp = qm.requantize()
+    assert not calls, "override-rank requantize re-ran SVD"
+    assert qp["stack"][0]["u0"]["mlp"]["wg"].B is not None
+    assert qp["stack"][0]["u0"]["mix"]["wq"].B is None   # base rank 0
+
+
+def test_engine_requantize_reuses_lowrank(prefilled, monkeypatch):
+    """The serving engine's requant path must not re-run SVD either."""
+    import repro.quant.api as api
+    from repro.serving import EngineConfig, TTQEngine
+
+    params, _, _ = prefilled
+    eng = TTQEngine(CFG, params, ttq_policy(bits=4, group_size=32, rank=8),
+                    EngineConfig(max_slots=1, max_len=32))
+    calls = []
+    real = api.svd_factors
+    monkeypatch.setattr(api, "svd_factors",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    for p in ([3, 1, 4], [1, 5, 9]):
+        eng.submit(p, max_new=2)
+    eng.run_all()
+    assert eng.n_requants >= 2
+    assert not calls, f"engine requant re-ran SVD {len(calls)} times"
