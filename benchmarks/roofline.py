@@ -51,7 +51,7 @@ def main():
         if not rows:
             continue
         print(f"== mesh: {mesh} (HLO-walker terms; 'ideal' = analytic "
-              f"TPU lower bound, DESIGN.md §Roofline caveat) ==")
+              f"TPU lower bound, EXPERIMENTS.md §Roofline caveat) ==")
         for r in rows:
             print(fmt_row(r))
     return 0

@@ -3,15 +3,18 @@
 Builds a small LM, compares RTN / AWQ / TTQ weight-approximation quality,
 then runs the full lifecycle through the unified ``repro.quant`` API:
 ``QuantizedModel``  — calibrate(stats) → requantize() → decode_params —
-with a mixed-precision policy override, and finally the serving engine.
+with a mixed-precision policy override, and finally the serving engine with
+a quantized KV cache (everything below runs on the CPU fallback paths:
+interpret-mode Pallas + jnp oracles).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (AWQConfig, QuantConfig, activation_diag, awq_qdq,
-                        qdq, svd_factors, ttq_lowrank_qdq)
+from repro.core import (AWQConfig, KVCacheConfig, QuantConfig,
+                        activation_diag, awq_qdq, qdq, svd_factors,
+                        ttq_lowrank_qdq)
 from repro.core.awq import awq_loss
 from repro.core.ttq import QuantizedTensor
 from repro.models import ModelConfig, lm
@@ -60,15 +63,25 @@ def main():
           f"finite={bool(jnp.isfinite(lg).all())}")
 
     # --- 3. system-level: the serving lifecycle ---------------------------
-    eng = TTQEngine(cfg, params, ttq_policy(bits=4, group_size=32, rank=8),
+    # int4 weights AND an int8 KV cache: kv_dtype switches the engine's slot
+    # caches to codes + per-(head, token) scales, decoded on the fly by the
+    # fused dequant-attention kernel (interpret mode on CPU)
+    eng = TTQEngine(cfg, params,
+                    ttq_policy(bits=4, group_size=32, rank=8,
+                               kvcache=KVCacheConfig(dtype="int8")),
                     EngineConfig(max_slots=2, max_len=64))
     rids = [eng.submit([7, 3, 9, 1], max_new=8),
             eng.submit([100, 42, 5], max_new=8)]
     outs = eng.run_all()
-    print("\nTTQ engine (4-bit, r=8, per-prompt calibration):")
+    print("\nTTQ engine (4-bit weights, int8 KV cache, per-prompt calibration):")
     for rid in rids:
         print(f"  request {rid}: {outs[rid]}")
     print(f"  online requantizations: {eng.n_requants}")
+    kstate = eng.state["stack"][0]["u0"]
+    print(f"  slot cache leaves: k_q {kstate['k_q'].dtype} "
+          f"{tuple(kstate['k_q'].shape)}, k_s {kstate['k_s'].dtype} "
+          f"({eng.kvcfg.bytes_per_token_head(cfg.hd):.0f} B vs "
+          f"{2 * cfg.hd} B bf16 per head-token row)")
 
 
 if __name__ == "__main__":

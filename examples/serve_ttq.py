@@ -1,10 +1,14 @@
-"""Serving demo — continuous batching with per-workload TTQ self-calibration.
+"""Serving demo — continuous batching with per-workload TTQ self-calibration
+and a quantized KV cache.
 
 Submits a staggered stream of requests to the TTQEngine; the engine prefillls
 each prompt in full precision (stats tap on), aggregates the activation
-statistics of the *live* workload, requantizes, and decodes 4-bit.  Prints a
-timeline of admissions / requantizations / completions and a throughput
-summary.
+statistics of the *live* workload, requantizes, and decodes 4-bit over an
+int8 KV cache (``kv_dtype="int8"`` — codes + per-(head, token) scales, read
+by the fused dequant-attention kernel; on CPU the kernel runs in Pallas
+interpret mode, so this demo exercises the exact production code path).
+Prints a timeline of admissions / requantizations / completions and a
+throughput summary.
 
     PYTHONPATH=src python examples/serve_ttq.py
 """
@@ -28,9 +32,14 @@ def main():
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     eng = TTQEngine(
         cfg, params,
-        ttq_policy(bits=4, group_size=32, rank=8),
+        ttq_policy(bits=4, group_size=32, rank=8, kv_dtype="int8"),
         EngineConfig(max_slots=4, max_len=96, recalibrate_every=2),
     )
+    kv = eng.kvcfg
+    cache_rows = cfg.n_layers * cfg.n_kv_heads
+    print(f"kv-cache: {kv.dtype}, {kv.bytes_per_token_head(cfg.hd):.0f} B "
+          f"per (head, token) row x {cache_rows} rows/token "
+          f"(bf16 would be {2 * cfg.hd} B/row)")
     rng = np.random.default_rng(0)
     arrivals = [(i, list(rng.integers(1, 256, size=rng.integers(4, 24))),
                  int(rng.integers(8, 20))) for i in range(10)]

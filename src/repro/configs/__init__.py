@@ -3,8 +3,7 @@
 Each ``<arch>.py`` exposes ``config()`` (the full published config) and
 ``smoke()`` (a reduced same-family config for CPU smoke tests).  ``get(name)``
 resolves either.  ``SHAPES`` defines the per-arch input-shape set; skip rules
-(long_500k needs sub-quadratic attention; see DESIGN.md §5) are enforced by
-``cells()``.
+(long_500k needs sub-quadratic attention) are enforced by ``cells()``.
 """
 from __future__ import annotations
 

@@ -4,6 +4,7 @@ Public API re-exports — the rest of the framework imports from here.
 """
 from .awq import AWQConfig, accumulate_stats, activation_diag, awq_qdq, awq_quantize, diag_from_stats
 from .gptq import gptq_qdq
+from .kvquant import BF16_KV, KVCacheConfig, dequantize_kv, quantize_kv
 from .lowrank import alternating_refine, svd_factors, ttq_lowrank_qdq, ttq_lowrank_quantize
 from .policy import NO_QUANT, QuantPolicy, ttq_policy
 from .qdq import QuantConfig, dequantize, pack_bits, pack_int4, qdq, quantize, rtn, unpack_bits, unpack_int4
@@ -11,10 +12,13 @@ from .ttq import (QuantizedTensor, calibrate, dequant, quantize_params,
                   quantize_weight, ttq_linear, ttq_matmul)
 
 __all__ = [
-    "AWQConfig", "QuantConfig", "QuantPolicy", "QuantizedTensor", "NO_QUANT",
+    "AWQConfig", "BF16_KV", "KVCacheConfig", "QuantConfig", "QuantPolicy",
+    "QuantizedTensor", "NO_QUANT",
     "accumulate_stats", "activation_diag", "alternating_refine", "awq_qdq",
-    "awq_quantize", "calibrate", "dequant", "dequantize", "diag_from_stats",
-    "gptq_qdq", "pack_bits", "pack_int4", "qdq", "quantize", "quantize_weight",
+    "awq_quantize", "calibrate", "dequant", "dequantize", "dequantize_kv",
+    "diag_from_stats",
+    "gptq_qdq", "pack_bits", "pack_int4", "qdq", "quantize", "quantize_kv",
+    "quantize_weight",
     "rtn", "svd_factors", "ttq_linear", "ttq_lowrank_qdq", "ttq_lowrank_quantize",
     "ttq_matmul", "ttq_policy", "unpack_bits", "unpack_int4",
 ]

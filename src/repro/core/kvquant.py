@@ -1,43 +1,133 @@
-"""Beyond-paper extension: int8 KV-cache quantization for TTQ serving.
+"""int8/int4 KV-cache quantization for TTQ serving — the decode-traffic term.
 
 The paper quantizes *weights* at test time; at 32k+ contexts the KV cache —
-not the weights — dominates decode traffic (§Roofline: gemma decode cache
-≈ 7.5 GB/device vs ≈ 0.3 GB of int4 weights).  The same test-time machinery
-extends naturally: per-(head, token) symmetric int8 with an f32 scale, written
-at prefill/decode time, dequantized on the fly inside the attention reads.
+not the weights — dominates decode traffic (EXPERIMENTS.md §Roofline: gemma
+decode cache ≈ 7.5 GB/device vs ≈ 0.3 GB of int4 weights).  The same
+test-time machinery extends naturally: per-(head, token) symmetric int8/int4
+with f32 scales, written at prefill and per-decode-step append, dequantized
+on the fly inside the attention reads (fused in ``kernels/ttq_attn.py``).
 
-    cache bytes: 2 B/elem (bf16) → 1 B/elem + scale/Dh ≈ 0.5× traffic
-    quality:     per-head-token scales keep softmax logits within ~1e-2
+    cache bytes: 2 B/elem (bf16) → 1 B/elem + scale/Dh ≈ 0.5× traffic (int8)
+                                 → 0.5 B/elem + scale/Dh ≈ 0.27× (int4-packed)
+    quality:     per-head-token scales keep softmax logits within ~1e-2 (int8)
 
-Opt-in (`decode_attention_q8` / `quantize_kv`); the default engine path stays
-bf16 — wiring it into the production cache layout is the documented next step
-(EXPERIMENTS.md §Roofline "what would move the decode term further").
+:class:`KVCacheConfig` is the policy knob (``QuantPolicy.kvcache``) that the
+serving engine threads into the model's decode-state layout; ``bf16`` keeps
+the seed behaviour bit-for-bit.  ``decode_attention_q8`` remains as the
+historical int8 per-token opt-in (EXPERIMENTS.md §Roofline "what would move
+the decode term further" is this wiring).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-
-def quantize_kv(kv: jnp.ndarray):
-    """(B, Hkv, S, Dh) → (int8 codes, f32 scales (B, Hkv, S, 1))."""
-    f = kv.astype(jnp.float32)
-    s = jnp.maximum(jnp.abs(f).max(axis=-1, keepdims=True), 1e-8) / 127.0
-    q = jnp.clip(jnp.round(f / s), -127, 127).astype(jnp.int8)
-    return q, s
+_KV_BITS = {"bf16": 16, "int8": 8, "int4": 4}
 
 
-def dequantize_kv(q: jnp.ndarray, s: jnp.ndarray, dtype=jnp.bfloat16):
-    return (q.astype(jnp.float32) * s).astype(dtype)
+@dataclasses.dataclass(frozen=True)
+class KVCacheConfig:
+    """Static KV-cache layout config (hashable → usable as a jit static arg).
+
+    dtype       'bf16' (seed layout) | 'int8' | 'int4' (packed 8/int32)
+    group_size  scale granularity along the head dim; 0 → one scale per
+                (head, token) row (the default, matching ``quantize_kv``)
+    use_pallas  fused Pallas dequant-attention for the decode read; False →
+                pure-jnp fallback (same escape hatch as ``ttq_gemm``)
+    """
+
+    dtype: str = "bf16"
+    group_size: int = 0
+    use_pallas: bool = True
+
+    def __post_init__(self):
+        if self.dtype not in _KV_BITS:
+            raise ValueError(f"kv dtype {self.dtype!r} not in {sorted(_KV_BITS)}")
+
+    @property
+    def bits(self) -> int:
+        return _KV_BITS[self.dtype]
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype != "bf16"
+
+    def groups(self, head_dim: int) -> int:
+        """Number of scale groups per (head, token) row."""
+        g = self.group_size or head_dim
+        if head_dim % g:
+            raise ValueError(f"head_dim={head_dim} not divisible by group_size={g}")
+        return head_dim // g
+
+    def code_shape(self, head_dim: int) -> int:
+        """Trailing dim of the code tensor (int4 packs 8 nibbles per int32)."""
+        if self.dtype == "int4":
+            if head_dim % 8:
+                raise ValueError(f"head_dim={head_dim} must divide by 8 for int4")
+            return head_dim // 8
+        return head_dim
+
+    @property
+    def code_dtype(self):
+        return {"bf16": jnp.bfloat16, "int8": jnp.int8,
+                "int4": jnp.int32}[self.dtype]
+
+    def bytes_per_token_head(self, head_dim: int) -> float:
+        """Cache bytes per (head, token) row — the decode-traffic unit."""
+        if not self.quantized:
+            return 2.0 * head_dim
+        code = head_dim if self.dtype == "int8" else head_dim / 2
+        return code + 4.0 * self.groups(head_dim)
+
+
+BF16_KV = KVCacheConfig()
+
+
+def quantize_kv(kv: jnp.ndarray, *, bits: int = 8, group_size: int = 0):
+    """(..., S, Dh) → (codes, f32 scales (..., S, Dh//g or 1)).
+
+    Symmetric per-(head, token, group) quantization.  int8 codes are stored
+    as int8; int4 codes are biased to [1, 15] and packed 8-per-int32 along
+    the head dim (``core.qdq.pack_bits`` layout, unpacked in the kernel).
+    """
+    Dh = kv.shape[-1]
+    g = group_size or Dh
+    f = kv.astype(jnp.float32).reshape(*kv.shape[:-1], Dh // g, g)
+    qmax = 127.0 if bits == 8 else 7.0
+    s = jnp.maximum(jnp.abs(f).max(axis=-1), 1e-8) / qmax      # (..., S, Dh/g)
+    q = jnp.clip(jnp.round(f / s[..., None]), -qmax, qmax)
+    if bits == 8:
+        return q.reshape(*kv.shape).astype(jnp.int8), s
+    from .qdq import pack_bits
+    codes = (q.reshape(*kv.shape) + 8.0).astype(jnp.int32)     # [1, 15]
+    return pack_bits(codes, 4), s
+
+
+def dequantize_kv(q: jnp.ndarray, s: jnp.ndarray, dtype=jnp.bfloat16, *,
+                  bits: int = 8, group_size: int = 0):
+    """Inverse of :func:`quantize_kv` (jnp fallback / oracle path)."""
+    if bits == 8:
+        codes = q.astype(jnp.float32)
+    else:
+        from .qdq import unpack_bits
+        codes = unpack_bits(q, q.shape[-1] * 8, 4).astype(jnp.float32) - 8.0
+    Dh = codes.shape[-1]
+    g = group_size or Dh
+    grouped = codes.reshape(*codes.shape[:-1], Dh // g, g)
+    return (grouped * s[..., None]).reshape(*codes.shape).astype(dtype)
 
 
 def decode_attention_q8(q, kq, ks, vq, vs, cur_pos, *, scale=None,
                         soft_cap: float = 0.0):
-    """Single-token attention over an int8-quantized cache.
+    """Single-token attention over an int8-quantized cache (per-token scales).
 
     q: (B,H,1,Dh); kq/vq: (B,Hkv,S,Dh) int8; ks/vs: (B,Hkv,S,1) f32.
     The k-dot runs on int8 codes (MXU int8 path on TPU) and folds the scale
-    into the score; the v-dot dequantizes per block.
+    into the score; the v-dot dequantizes per block.  Historical opt-in —
+    the production path is ``kernels.ops.kv_decode_attention`` driven by
+    :class:`KVCacheConfig`, which also supports int4 and grouped scales.
     """
     from repro.models.common import NEG_INF
     B, H, _, Dh = q.shape

@@ -33,6 +33,7 @@ import fnmatch
 from typing import Optional
 
 from .awq import AWQConfig
+from .kvquant import KVCacheConfig
 from .qdq import QuantConfig
 
 _QCFG_FIELDS = {f.name for f in dataclasses.fields(QuantConfig)}
@@ -62,6 +63,10 @@ class QuantPolicy:
     packed: bool = False           # real int path (Pallas kernel) vs fake-quant
     per_expert_stats: bool = True  # MoE: accumulate D per expert
     overrides: tuple = ()          # ((pattern, ((field, value), ...)), ...)
+    # KV-cache memory layout (global, not per-path: the cache is allocated
+    # once per engine — see DESIGN.md §"KV-cache layout").  Orthogonal to the
+    # weight method: NO_QUANT weights + int8 cache is a valid combination.
+    kvcache: KVCacheConfig = KVCacheConfig()
 
     @property
     def quantizer(self):
@@ -133,7 +138,10 @@ NO_QUANT = QuantPolicy(method="none")
 
 
 def ttq_policy(bits: int = 4, group_size: int = 32, rank: int = 16,
-               packed: bool = False, **kw) -> QuantPolicy:
+               packed: bool = False, kv_dtype: str = "bf16",
+               kv_group_size: int = 0, **kw) -> QuantPolicy:
+    kw.setdefault("kvcache", KVCacheConfig(dtype=kv_dtype,
+                                           group_size=kv_group_size))
     return QuantPolicy(
         method="ttq",
         qcfg=QuantConfig(bits=bits, group_size=group_size, layout="row"),

@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-* ``ttq_gemm``     — fused int-packed dequant matmul (the Marlin analogue):
-                     HBM int4/int8 weights → VMEM unpack+dequant → MXU.
-* ``ttq_quantize`` — the per-prompt online quantization as one streaming pass.
+* ``ttq_gemm``            — fused int-packed dequant matmul (the Marlin
+                            analogue): HBM int4/int8 weights → VMEM
+                            unpack+dequant → MXU.
+* ``ttq_quantize``        — the per-prompt online quantization as one
+                            streaming pass.
+* ``kv_decode_attention`` — fused dequant decode-attention over an int8/int4
+                            KV cache (flash-decoding over the S axis).
 
-``ops`` wraps both with jnp fallbacks; ``ref`` holds the pure-jnp oracles the
+``ops`` wraps all with jnp fallbacks; ``ref`` holds the pure-jnp oracles the
 tests assert against (interpret=True on CPU, compiled on TPU).
 """
-from .ops import ttq_gemm, ttq_quantize
+from .ops import kv_decode_attention, ttq_gemm, ttq_quantize
 
-__all__ = ["ttq_gemm", "ttq_quantize"]
+__all__ = ["kv_decode_attention", "ttq_gemm", "ttq_quantize"]

@@ -8,10 +8,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .ttq_attn import ttq_decode_attention as _ttq_attn_pallas
 from .ttq_gemm import ttq_gemm as _ttq_gemm_pallas
 from .ttq_quantize import ttq_quantize as _ttq_quantize_pallas
 
 _PACKABLE = (2, 4, 8)
+_KV_BITS = (4, 8)
 
 
 def ttq_gemm(x, packed, scale, zero, dinv=None, *, bits=4, group_size=32,
@@ -23,6 +25,24 @@ def ttq_gemm(x, packed, scale, zero, dinv=None, *, bits=4, group_size=32,
     y = _ref.ttq_gemm_ref(x.reshape(-1, x.shape[-1]), packed, scale, zero,
                           bits=bits, group_size=group_size, dinv=dinv)
     return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def kv_decode_attention(q, kq, ks, vq, vs, cur_pos, *, bits=8, group_size=0,
+                        scale=None, soft_cap=0.0, window=0, use_pallas=True,
+                        **block_kw):
+    """Decode attention over an int8/int4 KV cache (fused dequant read).
+
+    The Pallas path streams the quantized cache HBM→VMEM and dequantizes
+    in-register; unsupported bit-widths or a windowed mask route to the
+    pure-jnp oracle so every code path runs everywhere.
+    """
+    if use_pallas and bits in _KV_BITS and window == 0:
+        return _ttq_attn_pallas(q, kq, ks, vq, vs, cur_pos, bits=bits,
+                                group_size=group_size, scale=scale,
+                                soft_cap=soft_cap, **block_kw)
+    return _ref.kv_attn_ref(q, kq, ks, vq, vs, cur_pos, bits=bits,
+                            group_size=group_size, scale=scale,
+                            soft_cap=soft_cap, window=window)
 
 
 def ttq_quantize(W, D, *, bits=4, group_size=32, use_pallas=True, **block_kw):

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels (the allclose targets in tests)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.qdq import unpack_bits
@@ -21,6 +22,41 @@ def ttq_gemm_ref(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     if dinv is not None:
         xf = xf * dinv[None, :].astype(jnp.float32)
     return xf @ W.T
+
+
+NEG_INF = -1e30
+
+
+def kv_attn_ref(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
+                vq: jnp.ndarray, vs: jnp.ndarray, cur_pos: jnp.ndarray, *,
+                bits: int = 8, group_size: int = 0,
+                scale: float | None = None, soft_cap: float = 0.0,
+                window: int = 0) -> jnp.ndarray:
+    """Decode attention over a quantized cache: dequantize, then the same
+    grouped-query math as ``models.common.decode_attention`` (f32 softmax).
+
+    q: (B,H,1,Dh); kq/vq codes (B,Hkv,S,Dc); ks/vs scales (B,Hkv,S,Dh//g);
+    cur_pos: (B,) int32.  The allclose target for ``ttq_attn``.
+    """
+    from repro.core.kvquant import dequantize_kv
+    B, H, _, Dh = q.shape
+    Hkv, S = kq.shape[1], kq.shape[2]
+    G = H // Hkv
+    sc = scale if scale is not None else Dh ** -0.5
+    k = dequantize_kv(kq, ks, jnp.float32, bits=bits, group_size=group_size)
+    v = dequantize_kv(vq, vs, jnp.float32, bits=bits, group_size=group_size)
+    qg = (q[:, :, 0].astype(jnp.float32) * sc).reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k)
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    ki = jnp.arange(S)
+    mask = ki[None, :] <= cur_pos[:, None]
+    if window > 0:
+        mask &= ki[None, :] > cur_pos[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v)
+    return o.reshape(B, H, 1, Dh).astype(q.dtype)
 
 
 def ttq_quantize_ref(W: jnp.ndarray, D: jnp.ndarray, *, bits: int,

@@ -1,0 +1,162 @@
+"""Pallas-TPU fused dequant decode-attention — the KV-cache analogue of
+``ttq_gemm``.
+
+o (B,H,1,Dh) = softmax(q·deq(K_codes)ᵀ/√Dh) · deq(V_codes)
+
+The cache lives in HBM as int8 codes (1 B/elem) or int4 packed 8-per-int32
+(0.5 B/elem) plus f32 per-(head, token, group) scales — decode attention is
+memory-bound, so moving ~half (int8) or ~quarter (int4) of the bf16 bytes is
+the entire speedup mechanism (EXPERIMENTS.md §Roofline).  Per S-tile the
+kernel:
+
+  HBM→VMEM  k/v codes (bs, Dh·bits/32 or bs, Dh) + scales (bs, Dh/g)
+  VPU       unpack nibbles (shift+mask, int4 only), dequantize to f32 with
+            the groupwise scale broadcast — the cache is NEVER materialized
+            at bf16 in HBM
+  MXU       (G, Dh) @ (Dh, bs) scores; online-softmax accumulate into a
+            (G, Dh) f32 output tile (flash-decoding over the S axis)
+
+Grid (B, Hkv, S/bs) with the S axis "arbitrary" (sequential — the running
+max/denominator/accumulator live in VMEM scratch, initialized at s==0 and
+written out at the last tile).  ``cur_pos`` rides in SMEM; slots beyond it
+are masked with an explicit where (NOT exp(-inf - -inf), which would poison
+fully-masked tiles).
+
+Validated in interpret mode on CPU (this container) against
+``ref.kv_attn_ref``; ``ops.kv_decode_attention`` is the public wrapper with
+the ``use_pallas=False`` escape hatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant_tile(codes, scales, *, bits: int, group_size: int, Dh: int):
+    """codes (bs, Dc) int8/int32, scales (bs, Dh//g) f32 → (bs, Dh) f32."""
+    bs = codes.shape[0]
+    if bits == 8:
+        w = codes.astype(jnp.float32)
+    else:
+        shifts = (jnp.arange(8, dtype=jnp.int32) * 4)[None, None, :]
+        w = (codes[:, :, None] >> shifts) & 0xF                # (bs, Dh//8, 8)
+        w = w.reshape(bs, Dh).astype(jnp.float32) - 8.0
+    g = group_size or Dh
+    s = scales.astype(jnp.float32)
+    if g != Dh:
+        s = jnp.repeat(s, g, axis=-1)                          # (bs, Dh)
+    return w * s
+
+
+def _attn_kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, bits: int, group_size: int,
+                 soft_cap: float, bs: int, Dh: int, n_s: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = pos_ref[0, 0]
+    q = q_ref[0, 0]                                            # (G, Dh) f32
+    k = _dequant_tile(kq_ref[0, 0], ks_ref[0, 0], bits=bits,
+                      group_size=group_size, Dh=Dh)            # (bs, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    ki = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ki <= cur
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]                    # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit mask-zeroing: a fully-masked tile must contribute 0, not
+    # exp(NEG_INF - NEG_INF) = 1 per slot
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)               # (G, bs)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    v = _dequant_tile(vq_ref[0, 0], vs_ref[0, 0], bits=bits,
+                      group_size=group_size, Dh=Dh)            # (bs, Dh)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _pad_seq(x, m):
+    r = (-x.shape[2]) % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[2] = (0, r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "scale",
+                                             "soft_cap", "bs", "interpret"))
+def ttq_decode_attention(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
+                         vq: jnp.ndarray, vs: jnp.ndarray, cur_pos: jnp.ndarray,
+                         *, bits: int = 8, group_size: int = 0,
+                         scale: float | None = None, soft_cap: float = 0.0,
+                         bs: int = 256, interpret: bool | None = None
+                         ) -> jnp.ndarray:
+    """q: (B,H,1,Dh); kq/vq: (B,Hkv,S,Dc) codes; ks/vs: (B,Hkv,S,Dh//g) f32;
+    cur_pos: (B,) int32 → o (B,H,1,Dh).  Positions > cur_pos are masked."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, _, Dh = q.shape
+    Hkv, S = kq.shape[1], kq.shape[2]
+    G = H // Hkv
+    Gn = ks.shape[3]
+    Dc = kq.shape[3]
+    sc = scale if scale is not None else Dh ** -0.5
+    qg = (q[:, :, 0].astype(jnp.float32) * sc).reshape(B, Hkv, G, Dh)
+
+    bs = min(bs, S)
+    kq, ks = _pad_seq(kq, bs), _pad_seq(ks, bs)
+    vq, vs = _pad_seq(vq, bs), _pad_seq(vs, bs)
+    Sp = kq.shape[2]
+    n_s = Sp // bs
+    pos2 = jnp.asarray(cur_pos, jnp.int32).reshape(B, 1)
+
+    kern = functools.partial(_attn_kernel, bits=bits, group_size=group_size,
+                             soft_cap=soft_cap, bs=bs, Dh=Dh, n_s=n_s)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Dc), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, Gn), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, Dc), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, Gn), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),       # running max
+            pltpu.VMEM((G, 1), jnp.float32),       # running denom
+            pltpu.VMEM((G, Dh), jnp.float32),      # output accumulator
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(pos2, qg, kq, ks, vq, vs)
+    return out.reshape(B, H, 1, Dh).astype(q.dtype)

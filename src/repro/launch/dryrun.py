@@ -11,8 +11,8 @@ memory/cost/collective analysis is cached to results/dryrun/<cell>.json.
     PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
         [--mesh single|multi|both] [--force] [--quant none|ttq4|ttq4r16]
 
-Cells skipped per DESIGN.md §5 (long_500k on full-attention archs) are
-recorded with their skip reason.
+Skipped cells (long_500k on full-attention archs — the sub-quadratic skip
+rule in ``configs.cells``) are recorded with their skip reason.
 """
 import argparse
 import json

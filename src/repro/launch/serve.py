@@ -1,11 +1,14 @@
 """Production serving launcher — TTQEngine with a synthetic request stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_7b --smoke \
-        --requests 8 --bits 4 --rank 16
+        --requests 8 --bits 4 --rank 16 --kv-dtype int8
 
 Mixed precision is declared through policy overrides (repro.quant), e.g.
 ``--attn-bits 4 --mlp-bits 3`` gives attention projections 4-bit and MLPs
 3-bit (outlier-heavy projections tolerate fewer bits worse — keep them wide).
+``--kv-dtype int8|int4`` switches the engine's KV-cache memory layout to
+quantized codes + per-(head, token) scales, read by the fused Pallas
+dequant-attention kernel (``--kv-no-pallas`` forces the jnp fallback).
 """
 import argparse
 import time
@@ -13,12 +16,15 @@ import time
 
 def build_policy(args):
     """CLI flags → QuantPolicy with per-layer mixed-precision overrides."""
-    from repro.quant import NO_QUANT, override, ttq_policy
+    from repro.quant import KVCacheConfig, NO_QUANT, override, ttq_policy
 
+    kvcache = KVCacheConfig(dtype=args.kv_dtype,
+                            group_size=args.kv_group_size,
+                            use_pallas=not args.kv_no_pallas)
     if args.no_quant:
-        return NO_QUANT
+        return NO_QUANT.with_(kvcache=kvcache)
     policy = ttq_policy(bits=args.bits, group_size=args.group_size,
-                        rank=args.rank)
+                        rank=args.rank, kvcache=kvcache)
     ovr = []
     if args.attn_bits:
         ovr.append(override("*.mix.*", bits=args.attn_bits))
@@ -43,6 +49,13 @@ def main():
                     help="override bits for attention projections (0 = base)")
     ap.add_argument("--mlp-bits", type=int, default=0,
                     help="override bits for MLP projections (0 = base)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8", "int4"),
+                    help="KV-cache storage dtype (int4 is packed 8/int32)")
+    ap.add_argument("--kv-group-size", type=int, default=0,
+                    help="KV scale group along head dim (0 = per head-token)")
+    ap.add_argument("--kv-no-pallas", action="store_true",
+                    help="jnp fallback for the dequant-attention read")
     args = ap.parse_args()
 
     import jax
@@ -57,6 +70,9 @@ def main():
     policy = build_policy(args)
     eng = TTQEngine(cfg, params, policy,
                     EngineConfig(max_slots=args.slots, max_len=args.max_len))
+    print(f"kv-cache: dtype={eng.kvcfg.dtype} "
+          f"group_size={eng.kvcfg.group_size or 'per-head-token'} "
+          f"pallas={eng.kvcfg.use_pallas}")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

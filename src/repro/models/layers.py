@@ -77,15 +77,74 @@ def attn_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
     return y
 
 
-def attn_init_state(cfg: ModelConfig, batch: int, max_len: int):
+def attn_init_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None):
+    """Decode-state cache for one attention layer.
+
+    bf16 (kvcfg None / dtype='bf16'): {'k','v'} (B,Hkv,Smax,Dh) — the seed
+    layout.  Quantized: {'k_q','k_s','v_q','v_s'} with int8 / packed-int4
+    codes plus f32 per-(head, token, group) scales (DESIGN.md §"KV-cache
+    layout").
+    """
     Hkv, hd = cfg.n_kv_heads, cfg.hd
-    z = jnp.zeros((batch, Hkv, max_len, hd), DTYPE)
-    return {"k": z, "v": z}
+    if kvcfg is None or not kvcfg.quantized:
+        z = jnp.zeros((batch, Hkv, max_len, hd), DTYPE)
+        return {"k": z, "v": z}
+    cz = jnp.zeros((batch, Hkv, max_len, kvcfg.code_shape(hd)),
+                   kvcfg.code_dtype)
+    sz = jnp.zeros((batch, Hkv, max_len, kvcfg.groups(hd)), jnp.float32)
+    return {"k_q": cz, "k_s": sz, "v_q": cz, "v_s": sz}
+
+
+def build_kv_state(cfg: ModelConfig, batch: int, max_len: int, k: Array,
+                   v: Array, kvcfg=None):
+    """Prefill write point: materialize the decode cache from sequence-mode
+    k/v (B,Hkv,S,Dh), quantizing at the cache's storage dtype."""
+    z = attn_init_state(cfg, batch, max_len, kvcfg)
+    if kvcfg is None or not kvcfg.quantized:
+        return {"k": jax.lax.dynamic_update_slice(z["k"], k.astype(DTYPE),
+                                                  (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(z["v"], v.astype(DTYPE),
+                                                  (0, 0, 0, 0))}
+    from repro.core.kvquant import quantize_kv
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        codes, scales = quantize_kv(t, bits=kvcfg.bits,
+                                    group_size=kvcfg.group_size)
+        out[name + "_q"] = jax.lax.dynamic_update_slice(
+            z[name + "_q"], codes, (0, 0, 0, 0))
+        out[name + "_s"] = jax.lax.dynamic_update_slice(
+            z[name + "_s"], scales, (0, 0, 0, 0))
+    return out
+
+
+def _kv_append(state, k: Array, v: Array, pos, kvcfg):
+    """Per-decode-step append: quantize one token's k/v and write both the
+    codes and the per-slot scale rows at position ``pos``."""
+    from repro.core.kvquant import quantize_kv
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        codes, scales = quantize_kv(t, bits=kvcfg.bits,
+                                    group_size=kvcfg.group_size)
+        out[name + "_q"] = cache_update_batched(state[name + "_q"], codes, pos)
+        out[name + "_s"] = cache_update_batched(state[name + "_s"], scales, pos)
+    return out
+
+
+def _kv_attention(q: Array, state, cur, kvcfg, *, soft_cap: float = 0.0,
+                  window: int = 0):
+    """Fused dequant attention read over the quantized cache (a nonzero
+    ``window`` routes to the jnp oracle, which applies the window mask)."""
+    from repro.kernels import kv_decode_attention
+    return kv_decode_attention(
+        q, state["k_q"], state["k_s"], state["v_q"], state["v_s"], cur,
+        bits=kvcfg.bits, group_size=kvcfg.group_size, soft_cap=soft_cap,
+        window=window, use_pallas=kvcfg.use_pallas)
 
 
 def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
-                cross_kv=None):
-    """x: (B,1,D); state: {'k','v'} caches; pos: (B,) per-slot positions."""
+                cross_kv=None, kvcfg=None):
+    """x: (B,1,D); state: bf16 {'k','v'} or quantized {'k_q','k_s','v_q',
+    'v_s'} caches (``kvcfg`` selects); pos: (B,) per-slot positions."""
     if cross_kv is not None:
         k, v = cross_kv
         B = x.shape[0]
@@ -101,6 +160,12 @@ def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
     if cfg.pos == "rope":
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
+    if kvcfg is not None and kvcfg.quantized:
+        st = _kv_append(state, k, v, pos, kvcfg)
+        o = _kv_attention(q, st, pos, kvcfg, soft_cap=cfg.attn_soft_cap,
+                          window=window)
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
+        return y, st
     kc = cache_update_batched(state["k"], k, pos)
     vc = cache_update_batched(state["v"], v, pos)
     o = decode_attention(q, kc, vc, pos, window=window,
@@ -110,7 +175,7 @@ def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
 
 
 def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
-                        window: int):
+                        window: int, kvcfg=None):
     """Windowed decode with a rolling (B,Hkv,W,hd) cache — O(W) per step.
 
     Slot validity needs no ordering (softmax is set-wise): slot i is valid iff
@@ -121,10 +186,15 @@ def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
     wpos = jnp.mod(pos, window)
-    kc = cache_update_batched(state["k"], k, wpos)
-    vc = cache_update_batched(state["v"], v, wpos)
     # validity: min(pos, W-1) marks the highest filled slot
     cur = jnp.minimum(pos, window - 1)
+    if kvcfg is not None and kvcfg.quantized:
+        st = _kv_append(state, k, v, wpos, kvcfg)
+        o = _kv_attention(q, st, cur, kvcfg, soft_cap=cfg.attn_soft_cap)
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
+        return y, st
+    kc = cache_update_batched(state["k"], k, wpos)
+    vc = cache_update_batched(state["v"], v, wpos)
     o = decode_attention(q, kc, vc, cur, soft_cap=cfg.attn_soft_cap)
     y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
     return y, {"k": kc, "v": vc}

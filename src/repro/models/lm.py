@@ -125,8 +125,12 @@ def loss_fn(cfg: ModelConfig, params, batch, *, pctx=None, remat=False):
 # serving entry points
 # ---------------------------------------------------------------------------
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
-    st: dict = {"stack": S.init_stack_state(cfg, S.stack_spec(cfg), batch, max_len)}
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None):
+    """``kvcfg`` (:class:`repro.core.KVCacheConfig`) selects the attention
+    cache layout: None/bf16 → the seed {'k','v'} bf16 slots; int8/int4 →
+    quantized codes + per-(head, token) scales (DESIGN.md §"KV-cache layout")."""
+    st: dict = {"stack": S.init_stack_state(cfg, S.stack_spec(cfg), batch,
+                                            max_len, kvcfg)}
     if cfg.family == "encdec":
         st["enc_out"] = jnp.zeros((batch, cfg.encdec.n_frames, cfg.d_model),
                                   jnp.bfloat16)
@@ -134,7 +138,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
-            collect_stats=True, pctx=None, full_logits=False):
+            collect_stats=True, pctx=None, full_logits=False, kvcfg=None):
     """Run the prompt, build decode state + TTQ activation statistics."""
     tokens = batch["tokens"]
     enc_out = None
@@ -147,7 +151,8 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
     x = _embed(cfg, params, tokens, pctx)
     x, run_stats, states = S.apply_stack_seq(
         cfg, params["stack"], S.stack_spec(cfg), x, stats_on=collect_stats,
-        pctx=pctx, enc_out=enc_out, want_state=True, max_len=max_len)
+        pctx=pctx, enc_out=enc_out, want_state=True, max_len=max_len,
+        kvcfg=kvcfg)
     if collect_stats:
         stats["stack"] = run_stats
     x = norm(x, params["final_norm"])
@@ -161,8 +166,12 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
     return logits, state, (stats if collect_stats else None)
 
 
-def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None):
-    """token: (B,1) int32; pos: (B,) int32 per-slot positions (scalar ok)."""
+def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
+                kvcfg=None):
+    """token: (B,1) int32; pos: (B,) int32 per-slot positions (scalar ok).
+
+    ``kvcfg`` must match the layout ``state`` was initialized with (it is a
+    static jit arg — the engine threads the same config everywhere)."""
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (token.shape[0],))
     x = jnp.take(params["embed"], token, axis=0)
     if cfg.pos == "learned":
@@ -170,7 +179,8 @@ def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None):
     dp = None if pctx is None else pctx.data_axes
     x = _wsc(x, P(dp, None, None), pctx)
     x, new_states = S.apply_stack_decode(cfg, params["stack"], S.stack_spec(cfg),
-                                         state["stack"], x, pos, pctx=pctx)
+                                         state["stack"], x, pos, pctx=pctx,
+                                         kvcfg=kvcfg)
     x = norm(x, params["final_norm"])
     logits = _head(cfg, params, x, pctx)
     new_state = dict(state)

@@ -3,7 +3,8 @@
 A stack is a list of *runs*; each run repeats a *unit* (tuple of layer kinds)
 ``n`` times and is executed with one ``lax.scan`` whose xs are the stacked
 unit params — HLO size stays O(#distinct units), not O(depth), which keeps the
-88-layer × 512-device dry-run compilable (DESIGN.md §6).
+88-layer × 512-device dry-run compilable (EXPERIMENTS.md §Roofline, dry-run
+tables).
 
 Layer kinds:  attn | lattn (windowed) | enc (non-causal) | xdec (self+cross)
               mla | rec (RG-LRU) | ssd (Mamba2)
@@ -90,12 +91,15 @@ def init_layer(key, cfg: ModelConfig, kind: str):
     return p
 
 
-def layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+def layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                kvcfg=None):
     if kind in ("attn", "lattn"):
         ml = min(max_len, cfg.hybrid.window) if (kind == "lattn" and cfg.hybrid) else max_len
-        return L.attn_init_state(cfg, batch, ml)
+        return L.attn_init_state(cfg, batch, ml, kvcfg)
     if kind == "xdec":
-        st = L.attn_init_state(cfg, batch, max_len)
+        st = L.attn_init_state(cfg, batch, max_len, kvcfg)
+        # cross k/v are computed once from the encoder and stay bf16 — the
+        # quantized layout targets the growing self-attention cache
         nf = cfg.encdec.n_frames
         st["xk"] = jnp.zeros((batch, cfg.n_kv_heads, nf, cfg.hd), L.DTYPE)
         st["xv"] = jnp.zeros((batch, cfg.n_kv_heads, nf, cfg.hd), L.DTYPE)
@@ -135,7 +139,7 @@ def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx):
 
 def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
                     pctx=None, enc_out=None, want_state: bool = False,
-                    max_len: int = 0, pos0: int = 0, state=None):
+                    max_len: int = 0, pos0: int = 0, state=None, kvcfg=None):
     """Sequence mode (train / prefill).  Returns (x, state|None)."""
     h = norm(x, p["ln1"])
     st = None
@@ -152,9 +156,7 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
                 # rolling layout: absolute position p lives at slot p % window
                 kk = jnp.roll(kk, k.shape[2] % window, axis=2)
                 vv = jnp.roll(vv, k.shape[2] % window, axis=2)
-            z = L.attn_init_state(cfg, x.shape[0], ml)
-            st = {"k": jax.lax.dynamic_update_slice(z["k"], kk.astype(L.DTYPE), (0, 0, 0, 0)),
-                  "v": jax.lax.dynamic_update_slice(z["v"], vv.astype(L.DTYPE), (0, 0, 0, 0))}
+            st = L.build_kv_state(cfg, x.shape[0], ml, kk, vv, kvcfg)
         else:
             y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                              causal=kind != "enc", window=window, pos0=pos0)
@@ -162,9 +164,7 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
         if want_state:
             y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                                      causal=True, pos0=pos0, return_kv=True)
-            z = L.attn_init_state(cfg, x.shape[0], max_len)
-            st = {"k": jax.lax.dynamic_update_slice(z["k"], k.astype(L.DTYPE), (0, 0, 0, 0)),
-                  "v": jax.lax.dynamic_update_slice(z["v"], v.astype(L.DTYPE), (0, 0, 0, 0))}
+            st = L.build_kv_state(cfg, x.shape[0], max_len, k, v, kvcfg)
         else:
             y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                              causal=True, pos0=pos0)
@@ -207,17 +207,20 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
     return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx), st
 
 
-def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *, pctx=None):
+def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *,
+                       pctx=None, kvcfg=None):
     """Single-token decode; pos: (B,) per-slot positions. Returns (x, new_state)."""
     h = norm(x, p["ln1"])
     if kind in ("attn", "lattn"):
         window = cfg.hybrid.window if (kind == "lattn" and cfg.hybrid) else 0
         if window:
-            y, st = L.attn_decode_rolling(cfg, p["mix"], h, state, pos, window)
+            y, st = L.attn_decode_rolling(cfg, p["mix"], h, state, pos, window,
+                                          kvcfg)
         else:
-            y, st = L.attn_decode(cfg, p["mix"], h, state, pos)
+            y, st = L.attn_decode(cfg, p["mix"], h, state, pos, kvcfg=kvcfg)
     elif kind == "xdec":
-        y, st = L.attn_decode(cfg, p["mix"], h, {"k": state["k"], "v": state["v"]}, pos)
+        self_kv = {k_: v_ for k_, v_ in state.items() if k_ not in ("xk", "xv")}
+        y, st = L.attn_decode(cfg, p["mix"], h, self_kv, pos, kvcfg=kvcfg)
         x = x + y
         hx = norm(x, p["lnx"])
         yx, _ = L.attn_decode(cfg, p["xattn"], hx, None, pos,
@@ -255,10 +258,11 @@ def init_stack(key, cfg: ModelConfig, spec):
     return runs
 
 
-def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int):
+def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int,
+                     kvcfg=None):
     out = []
     for kinds, n in spec:
-        unit = {f"u{j}": layer_state(cfg, kind, batch, max_len)
+        unit = {f"u{j}": layer_state(cfg, kind, batch, max_len, kvcfg)
                 for j, kind in enumerate(kinds)}
         out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), unit))
     return out
@@ -266,7 +270,7 @@ def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int):
 
 def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                     pctx=None, enc_out=None, want_state=False, max_len=0,
-                    remat=False):
+                    remat=False, kvcfg=None):
     """Train / prefill over all runs. Returns (x, stats_list, state_list).
 
     With remat, the mixer/MLP outputs are checkpoint-tagged: saving the
@@ -284,7 +288,8 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
             for j, kind in enumerate(kinds):
                 h, st = apply_layer_seq(cfg, kind, up[f"u{j}"], h, stats,
                                         f"u{j}.", pctx=pctx, enc_out=enc_out,
-                                        want_state=want_state, max_len=max_len)
+                                        want_state=want_state, max_len=max_len,
+                                        kvcfg=kvcfg)
                 if st is not None:
                     states[f"u{j}"] = st
             return h, (stats, states)
@@ -304,7 +309,7 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
 
 
 def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
-                       *, pctx=None):
+                       *, pctx=None, kvcfg=None):
     new_states = []
     for (kinds, n), rp, rs in zip(spec, run_params, run_states):
         def body(carry, xs):
@@ -313,7 +318,8 @@ def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
             st_out = {}
             for j, kind in enumerate(kinds):
                 h, st = apply_layer_decode(cfg, kind, up[f"u{j}"], h,
-                                           st_in[f"u{j}"], pos, pctx=pctx)
+                                           st_in[f"u{j}"], pos, pctx=pctx,
+                                           kvcfg=kvcfg)
                 st_out[f"u{j}"] = st
             return h, st_out
 

@@ -14,6 +14,7 @@ Three pillars (DESIGN.md):
 Tied together by :class:`QuantizedModel`:
 ``calibrate(stats) → requantize() → decode_params``.
 """
+from repro.core.kvquant import BF16_KV, KVCacheConfig
 from repro.core.policy import NO_QUANT, QuantPolicy, override, ttq_policy
 
 from .api import lowrank_tree, quantize_params
@@ -23,7 +24,8 @@ from .registry import (Quantizer, get_quantizer, register_quantizer,
 from .session import CalibrationSession
 
 __all__ = [
-    "CalibrationSession", "NO_QUANT", "QuantPolicy", "QuantizedModel",
+    "BF16_KV", "CalibrationSession", "KVCacheConfig", "NO_QUANT",
+    "QuantPolicy", "QuantizedModel",
     "Quantizer", "get_quantizer", "lowrank_tree", "override",
     "quantize_params", "register_quantizer", "registered_methods",
     "ttq_policy",

@@ -19,6 +19,12 @@ drives the lifecycle.
 
 Per-slot positions everywhere → true continuous batching: a new request can be
 admitted while other slots are mid-generation.
+
+The slot caches' memory layout is policy-driven (``policy.kvcache`` /
+``EngineConfig.kv_dtype``): bf16, or int8 / packed-int4 codes with
+per-(head, token) f32 scales written at prefill and per-decode-step append
+and read by the fused Pallas dequant-attention kernel (DESIGN.md §"KV-cache
+layout", EXPERIMENTS.md §Roofline for the traffic numbers).
 """
 from __future__ import annotations
 
@@ -49,6 +55,7 @@ class EngineConfig:
     temperature: float = 0.0
     eos_token: int = -1             # -1 → run to max_new
     prompt_buckets: tuple = (16, 32, 64, 128, 256)
+    kv_dtype: str = ""              # "" → policy.kvcache; else bf16|int8|int4
 
 
 @dataclasses.dataclass
@@ -81,8 +88,14 @@ class TTQEngine:
         self.cfg, self.params, self.policy, self.ecfg = cfg, params, policy, ecfg
         self.pctx = pctx
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        # KV-cache memory layout: policy-driven, EngineConfig.kv_dtype wins
+        # when set.  Static across the engine's lifetime — every slot cache,
+        # the prefill write and the decode read share one layout.
+        self.kvcfg = policy.kvcache
+        if ecfg.kv_dtype:
+            self.kvcfg = dataclasses.replace(self.kvcfg, dtype=ecfg.kv_dtype)
         B, ML = ecfg.max_slots, ecfg.max_len
-        self.state = lm.init_decode_state(cfg, B, ML)
+        self.state = lm.init_decode_state(cfg, B, ML, kvcfg=self.kvcfg)
         self.pos = jnp.zeros((B,), jnp.int32)
         self.cur_tok = jnp.zeros((B, 1), jnp.int32)
         self.slot_req: List[Optional[Request]] = [None] * B
@@ -95,10 +108,12 @@ class TTQEngine:
         self.qmodel = QuantizedModel(params, policy,
                                      halflife=ecfg.stats_halflife)
         self.admits_since_cal = 0
-        self._decode_jit = jax.jit(partial(lm.decode_step, cfg, pctx=pctx))
+        self._decode_jit = jax.jit(partial(lm.decode_step, cfg, pctx=pctx,
+                                           kvcfg=self.kvcfg))
         self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
                                             collect_stats=True,
-                                            full_logits=True),
+                                            full_logits=True,
+                                            kvcfg=self.kvcfg),
                                     static_argnames=("max_len",))
 
     # ------------------------------------------------------------------ TTQ

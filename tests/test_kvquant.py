@@ -1,10 +1,18 @@
-"""int8 KV-cache quantization (beyond-paper extension)."""
+"""KV-cache quantization: codec roundtrips, the fused Pallas dequant-attention
+kernel vs its jnp oracle, and the engine integration (int8/int4 cache slots,
+mixed-slot admission)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import KVCacheConfig, NO_QUANT
 from repro.core.kvquant import decode_attention_q8, dequantize_kv, quantize_kv
+from repro.kernels import kv_decode_attention
+from repro.kernels.ref import kv_attn_ref
+from repro.models import ModelConfig, lm
 from repro.models.common import decode_attention
+from repro.serving import EngineConfig, TTQEngine
 
 RNG = np.random.default_rng(3)
 
@@ -15,12 +23,36 @@ def _cache(B=2, Hkv=2, S=64, Dh=16):
     return k, v
 
 
+# ---------------------------------------------------------------- codec
+
 def test_kv_roundtrip_error_small():
     k, _ = _cache()
     q, s = quantize_kv(k)
     kd = dequantize_kv(q, s, jnp.float32)
     rel = float(jnp.abs(k - kd).max() / jnp.abs(k).max())
     assert rel < 0.02                      # ~1/127 per-row relative error
+
+
+def test_kv_int4_roundtrip():
+    k, _ = _cache()
+    q, s = quantize_kv(k, bits=4)
+    assert q.dtype == jnp.int32 and q.shape[-1] == k.shape[-1] // 8
+    kd = dequantize_kv(q, s, jnp.float32, bits=4)
+    rel = float(jnp.abs(k - kd).max() / jnp.abs(k).max())
+    assert rel < 0.15                      # ~1/7 per-row relative error
+
+
+def test_kv_grouped_scales_tighter():
+    """Finer scale groups never lose to per-row scales (outlier rows win)."""
+    k = jnp.asarray(RNG.standard_normal((1, 2, 8, 32)).astype("float32"))
+    k = k.at[0, 0, :, 0].mul(50.0)         # one outlier channel per row
+    err = {}
+    for g in (0, 8):
+        q, s = quantize_kv(k, bits=8, group_size=g)
+        kd = dequantize_kv(q, s, jnp.float32, bits=8, group_size=g)
+        # channels outside the outlier's scale group
+        err[g] = float(jnp.abs(k - kd)[0, 0, :, 8:].mean())
+    assert err[8] < err[0] * 0.5
 
 
 def test_q8_attention_matches_fp():
@@ -43,3 +75,169 @@ def test_q8_halves_cache_bytes():
     fp_bytes = k.size * 2                              # bf16 production cache
     q8_bytes = q.size * 1 + s.size * 4
     assert q8_bytes < 0.6 * fp_bytes
+
+
+def test_kvcacheconfig_bytes_model():
+    assert KVCacheConfig("int8").bytes_per_token_head(128) == 128 + 4
+    assert KVCacheConfig("int4").bytes_per_token_head(128) == 64 + 4
+    assert KVCacheConfig().bytes_per_token_head(128) == 256
+    with pytest.raises(ValueError):
+        KVCacheConfig("fp8")
+
+
+# ------------------------------------------------- kernel vs jnp oracle
+
+@pytest.mark.parametrize("bits,group_size", [(8, 0), (8, 16), (4, 0), (4, 16)])
+def test_ttq_attn_kernel_matches_ref(bits, group_size):
+    """Pallas fused dequant-attention (interpret on CPU) vs kv_attn_ref."""
+    B, Hkv, S, Dh, H = 2, 2, 100, 32, 4
+    k, v = _cache(B, Hkv, S, Dh)
+    qv = jnp.asarray(RNG.standard_normal((B, H, 1, Dh)).astype("float32"))
+    pos = jnp.asarray([37, 99], jnp.int32)
+    kq, ks = quantize_kv(k, bits=bits, group_size=group_size)
+    vq, vs = quantize_kv(v, bits=bits, group_size=group_size)
+    o_ref = kv_attn_ref(qv, kq, ks, vq, vs, pos, bits=bits,
+                        group_size=group_size)
+    o_pl = kv_decode_attention(qv, kq, ks, vq, vs, pos, bits=bits,
+                               group_size=group_size, bs=32)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pl, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ttq_attn_kernel_soft_cap_and_single_tile():
+    B, Hkv, S, Dh, H = 1, 2, 48, 16, 4
+    k, v = _cache(B, Hkv, S, Dh)
+    qv = jnp.asarray(RNG.standard_normal((B, H, 1, Dh)).astype("float32"))
+    pos = jnp.asarray([20], jnp.int32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    o_ref = kv_attn_ref(qv, kq, ks, vq, vs, pos, soft_cap=30.0)
+    o_pl = kv_decode_attention(qv, kq, ks, vq, vs, pos, soft_cap=30.0, bs=64)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pl, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ttq_attn_matches_fp_attention():
+    """Fused int8 read stays within quantization tolerance of the bf16 path."""
+    B, Hkv, S, Dh, H = 2, 2, 64, 16, 4
+    k, v = _cache(B, Hkv, S, Dh)
+    qv = jnp.asarray(RNG.standard_normal((B, H, 1, Dh)).astype("float32"))
+    pos = jnp.asarray([40, 63], jnp.int32)
+    o_fp = decode_attention(qv, k, v, pos)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    o = kv_decode_attention(qv, kq, ks, vq, vs, pos, bs=32)
+    np.testing.assert_allclose(np.asarray(o_fp, np.float32),
+                               np.asarray(o, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+# ------------------------------------------------- engine integration
+
+CFG = ModelConfig(name="kv-t", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=96, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(params, kv_dtype, max_slots=2, use_pallas=True):
+    pol = NO_QUANT.with_(kvcache=KVCacheConfig(dtype=kv_dtype,
+                                               use_pallas=use_pallas))
+    return TTQEngine(CFG, params, pol,
+                     EngineConfig(max_slots=max_slots, max_len=64))
+
+
+PROMPTS = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12, 6, 3]]
+
+
+def _run(eng, prompts=PROMPTS, max_new=6):
+    rids = [eng.submit(p, max_new=max_new) for p in prompts]
+    outs = eng.run_all()
+    return [outs[r] for r in rids]
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_engine_quant_cache_decode_matches_bf16(params, kv_dtype):
+    """End-to-end tolerance check on LOGITS (greedy tokens can legitimately
+    flip on near-ties): prefill + decode steps, quantized cache vs bf16.
+    Documented tolerance: int8 ≲ 0.05, int4 ≲ 0.5 on f32 logits
+    (EXPERIMENTS.md §Roofline, "quality" rows)."""
+    toks = jnp.asarray([[5, 9, 17, 3]], jnp.int32)
+    out = {}
+    for kvd in ("bf16", kv_dtype):
+        kvcfg = KVCacheConfig(dtype=kvd)
+        lg, state, _ = lm.prefill(CFG, params, {"tokens": toks}, max_len=32,
+                                  kvcfg=kvcfg)         # last-token logits (B,V)
+        logits = [lg]
+        tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        pos = jnp.asarray([toks.shape[1]], jnp.int32)
+        for _ in range(4):
+            lg1, state = lm.decode_step(CFG, params, state, tok, pos,
+                                        kvcfg=kvcfg)
+            logits.append(lg1)
+            tok = jnp.argmax(lg1, axis=-1)[:, None].astype(jnp.int32)
+            pos = pos + 1
+        out[kvd] = jnp.stack(logits)
+    tol = 0.05 if kv_dtype == "int8" else 0.5
+    np.testing.assert_allclose(np.asarray(out[kv_dtype], np.float32),
+                               np.asarray(out["bf16"], np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_engine_int8_cache_end_to_end(params):
+    """Greedy generations over the int8 engine match the bf16 engine on a
+    well-separated model (same RNG, same admission order)."""
+    o_bf = _run(_engine(params, "bf16"))
+    o_i8 = _run(_engine(params, "int8"))
+    assert o_bf == o_i8
+
+
+def test_engine_int8_fallback_matches_pallas(params):
+    """use_pallas=False (pure-jnp oracle read) is decode-path equivalent."""
+    o_pl = _run(_engine(params, "int8", use_pallas=True))
+    o_np = _run(_engine(params, "int8", use_pallas=False))
+    assert o_pl == o_np
+
+
+def test_engine_quant_cache_layout(params):
+    eng = _engine(params, "int4")
+    _run(eng, prompts=[[5, 9, 17, 3]], max_new=3)
+    st = eng.state["stack"][0]["u0"]
+    assert sorted(st.keys()) == ["k_q", "k_s", "v_q", "v_s"]
+    assert st["k_q"].dtype == jnp.int32           # packed 8 nibbles / int32
+    assert st["k_q"].shape[-1] == CFG.hd // 8
+    assert st["k_s"].dtype == jnp.float32
+
+
+def test_engine_mixed_slots_per_slot_scales(params):
+    """A request admitted mid-generation lands in its own slot with its own
+    scale rows: both outputs match their single-request int8 references, and
+    the newly admitted slot's scales are populated while the other slot's
+    rows are untouched."""
+    eng = _engine(params, "int8", max_slots=2)
+    r1 = eng.submit(PROMPTS[0], max_new=8)
+    for _ in range(3):
+        eng.step()                      # r1 decoding alone
+    scales_before = np.asarray(eng.state["stack"][0]["u0"]["k_s"])
+    pos0 = int(eng.pos[0])              # slot 0 writes THIS row next step
+    r2 = eng.submit(PROMPTS[1], max_new=5)
+    eng.step()                          # admits r2 into slot 1
+    scales_after = np.asarray(eng.state["stack"][0]["u0"]["k_s"])
+    assert scales_after.shape[1] == 2   # (R, B, Hkv, S, 1) — B is axis 1
+    plen1 = len(PROMPTS[1])
+    assert (scales_after[:, 1, :, :plen1] > 0).all()
+    # slot 0's already-written rows untouched by slot-1 admission
+    np.testing.assert_array_equal(scales_before[:, 0, :, :pos0],
+                                  scales_after[:, 0, :, :pos0])
+    outs = eng.run_all()
+    ref1 = _run(_engine(params, "int8", max_slots=1),
+                prompts=[PROMPTS[0]], max_new=8)[0]
+    ref2 = _run(_engine(params, "int8", max_slots=1),
+                prompts=[PROMPTS[1]], max_new=5)[0]
+    assert outs[r1] == ref1
+    assert outs[r2] == ref2
