@@ -1,0 +1,185 @@
+"""Engine decode dispatch — host syncs per token and tokens/s vs baseline.
+
+The seed engine dispatched ONE ``decode_step`` per Python iteration and
+synced every generated token to the host per slot (``int(nxt[i])``) —
+``slots`` blocking transfers per decode dispatch, so decode throughput was
+gated by dispatch latency rather than by the kernels.  The scheduler/runner
+split fuses K decode steps on device (``lm.decode_many``) and pulls one
+(B, K) token block per chunk — ≤ 1/K transfers per token.
+
+This bench drives both dispatch patterns over identical workloads at
+1/4/8 slots and reports tokens/s and host-syncs-per-token:
+
+  * ``baseline`` — the seed pattern, reproduced faithfully: one jitted
+    ``decode_step`` per token + one per-active-slot ``int()`` sync;
+  * ``fused`` — the TTQEngine with ``decode_chunk=K`` (default 8).
+
+The model is deliberately tiny: the bench measures the *dispatch* path the
+refactor moved on-device, not kernel throughput (that is bench_runtime /
+bench_kvcache territory).  Each mode runs a warm-up wave first so jit
+compilation is excluded — both patterns are timed steady-state.
+
+Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--fast]
+Emits results/BENCH_engine.json (picked up by benchmarks/report.py);
+numbers land in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import NO_QUANT
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, TTQEngine
+from repro.serving.runner import _write_slots
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+CFG = ModelConfig(name="bench-engine", family="dense", n_layers=2,
+                  d_model=64, n_heads=2, n_kv_heads=1, d_ff=128, vocab=128)
+MAX_LEN = 128
+
+
+def workload(slots: int):
+    """One prompt per slot (all admitted up front — pure decode dispatch)."""
+    rng = np.random.default_rng(0)
+    return [list(rng.integers(1, CFG.vocab, size=int(rng.integers(4, 12))))
+            for _ in range(slots)]
+
+
+class Baseline:
+    """The seed engine's dispatch pattern: one decode_step per token, one
+    blocking ``int()`` host sync per active slot per token."""
+
+    def __init__(self):
+        self._decode = jax.jit(partial(lm.decode_step, CFG))
+        self._prefill = jax.jit(partial(lm.prefill, CFG, collect_stats=False,
+                                        full_logits=True),
+                                static_argnames=("max_len",))
+
+    def run(self, params, prompts, max_new: int):
+        B = len(prompts)
+        state = lm.init_decode_state(CFG, B, MAX_LEN)
+        pos = jnp.zeros((B,), jnp.int32)
+        cur = jnp.zeros((B, 1), jnp.int32)
+        outs = [[] for _ in range(B)]
+        syncs = 0
+        for i, p in enumerate(prompts):           # B=1 sequential prefills
+            toks = jnp.asarray(p, jnp.int32)[None]
+            lg, sstate, _ = self._prefill(params, {"tokens": toks},
+                                          max_len=MAX_LEN)
+            nxt = int(jnp.argmax(lg[0, len(p) - 1]))
+            syncs += 1
+            outs[i].append(nxt)
+            state = _write_slots(state, sstate, [i])
+            pos = pos.at[i].set(len(p))
+            cur = cur.at[i, 0].set(nxt)
+        live = list(range(B))
+        while live:
+            lg, state = self._decode(params, state, cur, pos)
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            pos = jnp.clip(pos + 1, 0, MAX_LEN - 1)
+            cur = nxt[:, None]
+            for i in list(live):
+                outs[i].append(int(nxt[i]))       # per-slot host sync
+                syncs += 1
+                if len(outs[i]) >= max_new:
+                    live.remove(i)
+        return outs, syncs
+
+
+class Fused:
+    """The TTQEngine (scheduler/runner split, fused decode blocks)."""
+
+    def __init__(self, slots: int, chunk: int):
+        self.eng = TTQEngine(CFG, lm.init_params(CFG, jax.random.PRNGKey(0)),
+                             NO_QUANT,
+                             EngineConfig(max_slots=slots, max_len=MAX_LEN,
+                                          decode_chunk=chunk))
+
+    def run(self, params, prompts, max_new: int):
+        self.eng.params = params                  # engine is reusable
+        s0 = self.eng.host_syncs
+        rids = [self.eng.submit(p, max_new=max_new) for p in prompts]
+        outs = self.eng.run_all()
+        return [list(outs[r]) for r in rids], self.eng.host_syncs - s0
+
+
+def timed(runner, params, prompts, max_new):
+    out = runner.run(params, prompts, max_new)    # warm wave: jit compiles
+    t0 = time.perf_counter()
+    out = runner.run(params, prompts, max_new)
+    return out, time.perf_counter() - t0
+
+
+def main(fast: bool = False, chunk: int = 8):
+    slot_counts = (1, 4) if fast else (1, 4, 8)
+    max_new = 16 if fast else 64
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    report = {"config": {"chunk": chunk, "max_new": max_new,
+                         "model": CFG.name}, "rows": []}
+    print("slots,mode,tokens,wall_s,tok_s,host_syncs,syncs_per_token")
+    for slots in slot_counts:
+        prompts = workload(slots)
+        (base_out, base_syncs), base_dt = timed(Baseline(), params, prompts,
+                                                max_new)
+        (fus_out, fus_syncs), fus_dt = timed(Fused(slots, chunk), params,
+                                             prompts, max_new)
+        assert fus_out == base_out, \
+            "fused decode diverged from the per-token baseline"
+        n_tok = sum(len(o) for o in base_out)
+        for mode, dt, syncs in (("baseline", base_dt, base_syncs),
+                                ("fused", fus_dt, fus_syncs)):
+            row = {"slots": slots, "mode": mode, "tokens": n_tok,
+                   "wall_s": round(dt, 4), "tok_s": round(n_tok / dt, 1),
+                   "host_syncs": syncs,
+                   "syncs_per_token": round(syncs / n_tok, 3)}
+            report["rows"].append(row)
+            print(f"{slots},{mode},{n_tok},{dt:.3f},{n_tok/dt:.1f},"
+                  f"{syncs},{syncs/n_tok:.3f}")
+    # acceptance: decode syncs ≤ 1/K per token (+ one admission sync per
+    # request, amortized over its max_new tokens), and tokens/s improves
+    # once several slots amortize the per-dispatch host overhead
+    budget = 1.0 / chunk + 1.0 / max_new + 0.01
+    ok_all = True
+    for slots in slot_counts:
+        b = next(r for r in report["rows"]
+                 if r["slots"] == slots and r["mode"] == "baseline")
+        f = next(r for r in report["rows"]
+                 if r["slots"] == slots and r["mode"] == "fused")
+        ok = f["syncs_per_token"] <= budget
+        speedup = f["tok_s"] / b["tok_s"]
+        if slots >= 4 and not fast:
+            # wall-clock gate only at full scale — the --fast CI smoke keeps
+            # the deterministic syncs/token check (tiny workloads on shared
+            # runners make timing comparisons flaky)
+            ok = ok and speedup > 1.0
+        ok_all = ok_all and ok
+        print(f"acceptance slots={slots}: "
+              f"{b['syncs_per_token']:.3f} → {f['syncs_per_token']:.3f} "
+              f"syncs/token ({'PASS' if ok else 'FAIL'} <= {budget:.3f}), "
+              f"tok/s {b['tok_s']:.0f} → {f['tok_s']:.0f} "
+              f"({speedup:.2f}x)")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+    if not ok_all:
+        raise SystemExit("bench_engine acceptance FAILED")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--chunk", type=int, default=8)
+    a = ap.parse_args()
+    main(fast=a.fast, chunk=a.chunk)

@@ -9,19 +9,20 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: calibration,groupsize,methods,runtime,"
-                         "kvcache,overhead,roofline")
+                         "kvcache,engine,overhead,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_ablations, bench_calibration, bench_groupsize,
-                   bench_kvcache, bench_methods, bench_overhead,
-                   bench_runtime, roofline)
+    from . import (bench_ablations, bench_calibration, bench_engine,
+                   bench_groupsize, bench_kvcache, bench_methods,
+                   bench_overhead, bench_runtime, roofline)
 
     sections = [
         ("overhead", bench_overhead.main),        # cheap first
         ("runtime", bench_runtime.main),
         ("kvcache", bench_kvcache.main),
+        ("engine", bench_engine.main),
         ("ablations", bench_ablations.main),
         ("calibration", bench_calibration.main),
         ("groupsize", bench_groupsize.main),

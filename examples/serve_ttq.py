@@ -33,7 +33,10 @@ def main():
     eng = TTQEngine(
         cfg, params,
         ttq_policy(bits=4, group_size=32, rank=8, kv_dtype="int8"),
-        EngineConfig(max_slots=4, max_len=96, recalibrate_every=2),
+        # decode_chunk=2: each engine step fuses 2 decode tokens on device
+        # (lm.decode_many) — one host sync per block instead of per token
+        EngineConfig(max_slots=4, max_len=96, recalibrate_every=2,
+                     decode_chunk=2),
     )
     kv = eng.kvcfg
     cache_rows = cfg.n_layers * cfg.n_kv_heads
@@ -73,7 +76,8 @@ def main():
     print(f"\n{len(eng.finished)} requests, {total_tokens} tokens, "
           f"{steps} engine steps, {dt:.1f}s wall "
           f"({total_tokens/dt:.1f} tok/s on 1 CPU core — see "
-          f"benchmarks/bench_runtime.py for the v5e roofline projection)")
+          f"benchmarks/bench_runtime.py for the v5e roofline projection), "
+          f"{eng.host_syncs/max(total_tokens,1):.2f} host syncs/token")
     print(f"requantizations: {eng.n_requants}")
 
 

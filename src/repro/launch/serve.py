@@ -9,6 +9,11 @@ Mixed precision is declared through policy overrides (repro.quant), e.g.
 ``--kv-dtype int8|int4`` switches the engine's KV-cache memory layout to
 quantized codes + per-(head, token) scales, read by the fused Pallas
 dequant-attention kernel (``--kv-no-pallas`` forces the jnp fallback).
+
+``--decode-chunk K`` fuses K decode steps into one on-device block
+(``lm.decode_many``) — one host sync per K tokens instead of one per token;
+``--recal-tokens N`` drives the requantization cadence by a token budget
+instead of per-admission (DESIGN.md §"Serving architecture").
 """
 import argparse
 import time
@@ -44,6 +49,14 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="K fused on-device decode steps per host sync "
+                         "(lm.decode_many; 1 = per-token round trips)")
+    ap.add_argument("--recal-tokens", type=int, default=0,
+                    help="requantize every N processed tokens instead of "
+                         "every --recal-every admissions (0 = off)")
+    ap.add_argument("--recal-every", type=int, default=1,
+                    help="requantize after every N admissions")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--attn-bits", type=int, default=0,
                     help="override bits for attention projections (0 = base)")
@@ -69,10 +82,17 @@ def main():
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     policy = build_policy(args)
     eng = TTQEngine(cfg, params, policy,
-                    EngineConfig(max_slots=args.slots, max_len=args.max_len))
+                    EngineConfig(max_slots=args.slots, max_len=args.max_len,
+                                 decode_chunk=args.decode_chunk,
+                                 recalibrate_every=args.recal_every,
+                                 recalibrate_tokens=args.recal_tokens))
     print(f"kv-cache: dtype={eng.kvcfg.dtype} "
           f"group_size={eng.kvcfg.group_size or 'per-head-token'} "
           f"pallas={eng.kvcfg.use_pallas}")
+    cadence = (f"every {args.recal_tokens} tokens" if args.recal_tokens
+               else f"every {args.recal_every} admissions")
+    print(f"decode-chunk: {args.decode_chunk} tokens/dispatch, "
+          f"requant cadence: {cadence}")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -87,7 +107,8 @@ def main():
     dt = time.time() - t0
     toks = sum(len(v) for v in outs.values())
     print(f"arch={cfg.name} requests={len(outs)} tokens={toks} "
-          f"wall={dt:.1f}s requants={eng.n_requants}")
+          f"wall={dt:.1f}s requants={eng.n_requants} "
+          f"host_syncs/token={eng.host_syncs / max(toks, 1):.2f}")
     for rid, v in sorted(outs.items())[:4]:
         print(f"  rid={rid}: {v[:10]}{'…' if len(v) > 10 else ''}")
 

@@ -359,3 +359,24 @@ def cache_update(cache: Array, new: Array, pos: Array) -> Array:
 def vocab_logits(x: Array, w_head, stats=None) -> Array:
     """LM head in f32 accumulation (w: (V, D))."""
     return linear(x, w_head, stats, "lm_head").astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def sample_logits(logits: Array, key=None, temperature: float = 0.0,
+                  top_k: int = 0) -> Array:
+    """logits (B, V) → (B,) int32. temperature 0 → greedy.
+
+    Lives here (not in ``repro.serving``) so the on-device decode loop
+    (``lm.decode_many``) can sample inside its scan; ``serving.sampling``
+    re-exports it as the public ``sample``.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        lg = jnp.where(lg < vals[..., -1:], -jnp.inf, lg)
+    return jax.random.categorical(key, lg).astype(jnp.int32)

@@ -8,6 +8,8 @@ Uniform API across all 10 assigned families:
     init_decode_state(cfg, batch, max_len)      → DecodeState
     prefill(cfg, params, batch, max_len, ...)   → (last_logits, state, stats)
     decode_step(cfg, params, state, token, pos) → (logits, state)
+    decode_many(cfg, params, state, token, pos, done, remaining, key, K=...)
+                                                → ((tokens, valid), carry)
 
 ``batch`` is a dict: {'tokens': (B,S) int32} and, for encdec, also
 {'frames': (B, n_frames, d_model)} — the spec'd stub modality frontend.
@@ -20,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import stack as S
-from .common import linear, norm, init_norm, sinusoidal_pos
+from .common import linear, norm, init_norm, sample_logits, sinusoidal_pos
 from .config import ModelConfig
 
 P = jax.sharding.PartitionSpec
@@ -186,3 +188,50 @@ def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
     new_state = dict(state)
     new_state["stack"] = new_states
     return logits[:, 0], new_state
+
+
+def decode_many(cfg: ModelConfig, params, state, token, pos, done, remaining,
+                key, *, K: int, max_len: int, temperature: float = 0.0,
+                eos_token: int = -1, pctx=None, kvcfg=None):
+    """Fused multi-token decode: ``lax.scan`` over ``K`` decode steps keeping
+    sampling, EOS detection, per-slot done-masking, budget accounting, and
+    position advance entirely on device — one host transfer per K tokens
+    instead of one per token per slot.
+
+    Inputs (all device arrays; B = slot count):
+      token     (B, 1) int32  current token per slot
+      pos       (B,)   int32  cache write position per slot
+      done      (B,)   bool   True = inactive/finished lane (computes but
+                              emits nothing; pos/token held)
+      remaining (B,)   int32  generation budget left per slot
+      key       PRNG key — split once per step, mirroring the host loop
+
+    A live slot finishes when it emits ``eos_token``, exhausts ``remaining``,
+    or its cache fills (``pos`` reaching ``max_len``): the request *ends* at
+    capacity rather than clipping ``pos`` and silently overwriting the last
+    KV row.  Done lanes keep stepping with ``pos`` clamped in-bounds; their
+    garbage writes land in slots the next admission fully overwrites.
+
+    Returns ``((tokens (B, K) int32, valid (B, K) bool), (state, token, pos,
+    done, remaining, key))``.  ``valid[b, k]`` marks tokens actually emitted
+    by a live slot; with greedy sampling those tokens are identical to ``K``
+    repeated :func:`decode_step` calls.
+    """
+    def step_fn(carry, _):
+        st, tok, p, dn, rem, k = carry
+        p_in = jnp.minimum(p, max_len - 1)      # done lanes: in-bounds writes
+        logits, st = decode_step(cfg, params, st, tok, p_in, pctx=pctx,
+                                 kvcfg=kvcfg)
+        k, sk = jax.random.split(k)
+        nxt = sample_logits(logits, sk, temperature)
+        live = ~dn
+        nxt = jnp.where(live, nxt, tok[:, 0])
+        rem = rem - live.astype(jnp.int32)
+        p = p + live.astype(jnp.int32)
+        stop = (nxt == eos_token) | (p >= max_len) | (rem <= 0)
+        dn = dn | (live & stop)
+        return (st, nxt[:, None], p, dn, rem, k), (nxt, live)
+
+    carry = (state, token, pos, done, remaining, key)
+    carry, (toks, valid) = jax.lax.scan(step_fn, carry, None, length=K)
+    return (toks.T, valid.T), carry

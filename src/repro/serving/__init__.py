@@ -1,4 +1,7 @@
-from .engine import EngineConfig, Request, TTQEngine
+from .engine import EngineConfig, TTQEngine
+from .runner import DeviceRunner
 from .sampling import sample
+from .scheduler import GenResult, Request, Scheduler
 
-__all__ = ["EngineConfig", "Request", "TTQEngine", "sample"]
+__all__ = ["DeviceRunner", "EngineConfig", "GenResult", "Request",
+           "Scheduler", "TTQEngine", "sample"]

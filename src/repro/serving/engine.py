@@ -6,80 +6,60 @@ The paper's lifecycle (Fig. 1b) as a slot-based engine:
                             (Σ_t x² per linear input feature, additive)
                      → aggregate stats across active prompts
                      → (re)QUANTIZE: D = f(stats); W_int,S,Z = G[(W−BA)∘D]
-                     → DECODE loop over all active slots with the quantized
-                       weights (4-bit packed path hits the Pallas ttq_gemm)
+                     → DECODE with the quantized weights in fused K-step
+                       blocks (4-bit packed path hits the Pallas ttq_gemm)
 
-Per-prompt calibration (the paper's setting) is the ``max_slots=1`` case; with
-batched serving the engine self-calibrates on the aggregate of the *current*
-prompts — the statistics are additive sufficient statistics, so this is the
-natural generalization (DESIGN.md §"CalibrationSession").  Quantization state
-(stats accumulation/decay, low-rank factors computed once, the quantized
-tree) is owned by :class:`repro.quant.QuantizedModel`; the engine only
-drives the lifecycle.
+The engine is a thin facade over three parts (DESIGN.md §"Serving
+architecture"):
 
-Per-slot positions everywhere → true continuous batching: a new request can be
-admitted while other slots are mid-generation.
+* :class:`~repro.serving.scheduler.Scheduler` — host policy: FIFO queue,
+  slot admission (bucketed groups → one batched prefill dispatch each),
+  requantization cadence (per-admission or token-budget);
+* :class:`~repro.serving.runner.DeviceRunner` — jitted device execution:
+  batched prefill and ``lm.decode_many`` (a ``lax.scan`` over
+  ``decode_chunk`` decode steps with on-device sampling / EOS / budget /
+  capacity masking — one host transfer per K tokens per batch, not one per
+  token per slot);
+* :class:`repro.quant.QuantizedModel` — TTQ state: stats session (decay),
+  low-rank factors computed once, the quantized tree.
 
-The slot caches' memory layout is policy-driven (``policy.kvcache`` /
-``EngineConfig.kv_dtype``): bf16, or int8 / packed-int4 codes with
-per-(head, token) f32 scales written at prefill and per-decode-step append
-and read by the fused Pallas dequant-attention kernel (DESIGN.md §"KV-cache
-layout", EXPERIMENTS.md §Roofline for the traffic numbers).
+Per-prompt calibration (the paper's setting) is the ``max_slots=1`` case;
+with batched serving the engine self-calibrates on the aggregate of the
+*current* prompts — the statistics are additive sufficient statistics, so
+this is the natural generalization (DESIGN.md §"CalibrationSession").
+
+Per-slot positions everywhere → true continuous batching: a new request can
+be admitted while other slots are mid-generation (at decode-chunk
+boundaries).  The slot caches' memory layout is policy-driven
+(``policy.kvcache`` / ``EngineConfig.kv_dtype``): bf16, or int8 /
+packed-int4 codes + per-(head, token) f32 scales (DESIGN.md §"KV-cache
+layout").
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from collections import deque
-from functools import partial
-from typing import Any, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Dict
 
 from repro.core import QuantPolicy
-from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.quant import QuantizedModel
-from repro.quant.api import _path_str
 
-from .sampling import sample
+from .runner import DeviceRunner
+from .scheduler import GenResult, Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_slots: int = 4
     max_len: int = 256
+    decode_chunk: int = 1           # K: fused decode steps per host sync
     recalibrate_every: int = 1      # re-quantize after every N admissions
-    stats_halflife: int = 0         # >0: exponential decay of stats (admissions)
+    recalibrate_tokens: int = 0     # >0: token-budget cadence instead
+    stats_halflife: int = 0         # >0: exponential decay of stats (updates)
     temperature: float = 0.0
     eos_token: int = -1             # -1 → run to max_new
     prompt_buckets: tuple = (16, 32, 64, 128, 256)
     kv_dtype: str = ""              # "" → policy.kvcache; else bf16|int8|int4
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
-    frames: Any = None              # encdec stub modality input
-
-
-def _write_slot(batched, single, slot: int):
-    """Write a B=1 state into slot ``slot`` of the batched decode state."""
-    def per(path, bl, sl):
-        ps = _path_str(path)
-        if ps.startswith("stack"):
-            # leaves (R, B, ...) ← (R, 1, ...)
-            idx = (slice(None), slice(slot, slot + 1))
-        else:
-            idx = (slice(slot, slot + 1),)
-        return bl.at[idx].set(sl.astype(bl.dtype))
-
-    return jax.tree_util.tree_map_with_path(per, batched, single)
 
 
 class TTQEngine:
@@ -87,42 +67,25 @@ class TTQEngine:
                  ecfg: EngineConfig = EngineConfig(), pctx=None, key=None):
         self.cfg, self.params, self.policy, self.ecfg = cfg, params, policy, ecfg
         self.pctx = pctx
-        self.key = key if key is not None else jax.random.PRNGKey(0)
         # KV-cache memory layout: policy-driven, EngineConfig.kv_dtype wins
         # when set.  Static across the engine's lifetime — every slot cache,
         # the prefill write and the decode read share one layout.
         self.kvcfg = policy.kvcache
         if ecfg.kv_dtype:
             self.kvcfg = dataclasses.replace(self.kvcfg, dtype=ecfg.kv_dtype)
-        B, ML = ecfg.max_slots, ecfg.max_len
-        self.state = lm.init_decode_state(cfg, B, ML, kvcfg=self.kvcfg)
-        self.pos = jnp.zeros((B,), jnp.int32)
-        self.cur_tok = jnp.zeros((B, 1), jnp.int32)
-        self.slot_req: List[Optional[Request]] = [None] * B
-        self.queue: deque = deque()
-        self.finished: Dict[int, Request] = {}
-        self._rid = itertools.count()
-        # TTQ state: session + low-rank factors + quantized tree, all owned
-        # by the facade (factors are computed once, here — requantization
-        # reuses them, no per-requant SVD).
         self.qmodel = QuantizedModel(params, policy,
                                      halflife=ecfg.stats_halflife)
-        self.admits_since_cal = 0
-        self._decode_jit = jax.jit(partial(lm.decode_step, cfg, pctx=pctx,
-                                           kvcfg=self.kvcfg))
-        self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
-                                            collect_stats=True,
-                                            full_logits=True,
-                                            kvcfg=self.kvcfg),
-                                    static_argnames=("max_len",))
+        self.scheduler = Scheduler(
+            ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"))
+        self.runner = DeviceRunner(cfg, ecfg, self.kvcfg, pctx=pctx, key=key)
 
-    # ------------------------------------------------------------------ TTQ
+    # ------------------------------------------------------------------- TTQ
 
     def _requantize(self):
         if self.qmodel.requantize() is not None:
-            self.admits_since_cal = 0
+            self.scheduler.note_requant()
 
-    # back-compat views of the facade's state (tests/benchmarks use these)
+    # back-compat views of the parts' state (tests/benchmarks/examples)
     @property
     def decode_params(self):
         return self.qmodel.decode_params
@@ -147,85 +110,96 @@ class TTQEngine:
     def stat_count(self):
         return self.qmodel.session.count
 
-    # -------------------------------------------------------------- serving
+    @property
+    def admits_since_cal(self):
+        return self.scheduler.admits_since_cal
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def slot_req(self):
+        return self.scheduler.slot_req
+
+    @property
+    def finished(self):
+        return self.scheduler.finished
+
+    @property
+    def state(self):
+        return self.runner.state
+
+    @property
+    def pos(self):
+        return self.runner.pos
+
+    @property
+    def cur_tok(self):
+        return self.runner.cur_tok
+
+    @property
+    def host_syncs(self):
+        return self.runner.host_syncs
+
+    # --------------------------------------------------------------- serving
 
     def submit(self, prompt, max_new: int = 16, frames=None) -> int:
-        rid = next(self._rid)
-        self.queue.append(Request(rid, list(prompt), max_new, frames=frames))
-        return rid
-
-    def _free_slots(self):
-        return [i for i, r in enumerate(self.slot_req) if r is None]
-
-    def _bucket(self, n: int) -> int:
-        for b in self.ecfg.prompt_buckets:
-            if n <= b:
-                return b
-        return self.ecfg.prompt_buckets[-1]
-
-    def _admit_one(self, slot: int, req: Request):
-        plen = len(req.prompt)
-        if self.cfg.family in ("hybrid", "ssm"):
-            # recurrent state would absorb pad tokens — use exact length
-            bucket = plen
-        else:
-            bucket = min(self._bucket(plen), self.ecfg.max_len)
-        # right-pad: causal masking keeps real tokens clean; pad positions
-        # beyond the prompt end are never attended at decode (ki ≤ pos mask)
-        toks = jnp.zeros((1, bucket), jnp.int32)
-        toks = toks.at[0, :plen].set(jnp.asarray(req.prompt))
-        batch = {"tokens": toks}
-        if self.cfg.family == "encdec":
-            batch["frames"] = req.frames[None] if req.frames.ndim == 2 else req.frames
-        logits, sstate, stats = self._prefill_jit(
-            self.params, batch, max_len=self.ecfg.max_len)
-        last_logits = logits[:, plen - 1]
-        self.qmodel.calibrate(stats, tokens=float(bucket))
-        self.state = _write_slot(self.state, sstate, slot)
-        self.key, sk = jax.random.split(self.key)
-        nxt = sample(last_logits, sk, self.ecfg.temperature)
-        req.out.append(int(nxt[0]))
-        self.cur_tok = self.cur_tok.at[slot, 0].set(nxt[0])
-        self.pos = self.pos.at[slot].set(plen)   # decode overwrites pads
-        self.slot_req[slot] = req
-        self.admits_since_cal += 1
-        if self.admits_since_cal >= self.ecfg.recalibrate_every:
-            self._requantize()
+        """Queue a request; rejects prompts the engine cannot admit."""
+        return self.scheduler.submit(prompt, max_new, frames=frames)
 
     def admit(self):
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._admit_one(slot, self.queue.popleft())
+        """Admit queued requests into free slots: one batched prefill per
+        bucket group, calibrate on its stats, requantize per cadence.
 
-    def step(self):
-        """One engine iteration: admit waiting requests, decode one token."""
+        Loops until the queue or the free slots run out: a request that
+        finishes *at admission* (budget of 1, EOS or capacity on its first
+        token) frees its slot immediately, and the next planning round hands
+        that slot to the next queued request instead of stranding it."""
+        import jax.numpy as jnp
+
+        while True:
+            groups = self.scheduler.plan_admissions()
+            if not groups:
+                break
+            for group in groups:
+                frames = None
+                if self.cfg.family == "encdec":
+                    frames = jnp.stack([
+                        jnp.asarray(r.frames) if r.frames.ndim == 2
+                        else jnp.asarray(r.frames)[0] for r in group.requests])
+                first, fin, stats = self.runner.admit_group(self.params, group,
+                                                            frames=frames)
+                self.qmodel.calibrate(stats, tokens=group.tokens)
+                self.scheduler.note_admitted(len(group.requests), group.tokens)
+                for i, (slot, req) in enumerate(zip(group.slots,
+                                                    group.requests)):
+                    req.out.append(int(first[i]))
+                    if fin[i]:
+                        self.scheduler.finish(slot)
+        if self.scheduler.should_requant():
+            self._requantize()
+
+    def step(self) -> bool:
+        """One engine iteration: admit waiting requests, decode one fused
+        block of ``decode_chunk`` tokens per active slot."""
         self.admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+        if not self.scheduler.active_slots():
             return False
-        logits, self.state = self._decode_jit(self.decode_params, self.state,
-                                              self.cur_tok, self.pos)
-        self.key, sk = jax.random.split(self.key)
-        nxt = sample(logits, sk, self.ecfg.temperature)
-        self.pos = jnp.clip(self.pos + 1, 0, self.ecfg.max_len - 1)
-        self.cur_tok = nxt[:, None]
-        for i in active:
-            req = self.slot_req[i]
-            tok = int(nxt[i])
-            req.out.append(tok)
-            if len(req.out) >= req.max_new or tok == self.ecfg.eos_token:
-                req.done = True
-                self.finished[req.rid] = req
-                self.slot_req[i] = None
+        toks, valid, done = self.runner.decode_block(self.decode_params)
+        self.scheduler.record_block(toks, valid, done)
+        if self.scheduler.should_requant():
+            self._requantize()
         return True
 
-    def run_all(self, max_iters: int = 10_000) -> Dict[int, list]:
-        """Drive until all submitted requests finish; returns {rid: tokens}."""
+    def run_all(self, max_iters: int = 10_000) -> Dict[int, GenResult]:
+        """Drive until all submitted requests finish; returns {rid: tokens}.
+
+        Hitting ``max_iters`` no longer drops in-flight work: partial
+        outputs are returned with ``result.unfinished == True``."""
         it = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and it < max_iters:
+        while self.scheduler.has_work() and it < max_iters:
             if not self.step():
                 break
             it += 1
-        return {rid: req.out for rid, req in self.finished.items()}
+        return self.scheduler.results()

@@ -1,0 +1,123 @@
+"""DeviceRunner — the jitted device half of the serving engine.
+
+Owns the batched decode state (slot caches, positions, per-slot done flags
+and generation budgets) plus the two compiled programs:
+
+* a bucketed batched prefill — one dispatch per admission group with the
+  stats tap on, instead of B=1 sequential prefills;
+* ``lm.decode_many`` — a ``lax.scan`` over ``decode_chunk`` decode steps
+  with on-device sampling / EOS / budget / capacity masking, so the host
+  sees ONE blocking transfer per chunk (a (B, K) token block + flags)
+  instead of one per token per slot.
+
+``host_syncs`` counts blocking device→host transfers — the number
+``benchmarks/bench_engine.py`` reports per generated token.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.quant.api import _path_str
+
+from .sampling import sample
+
+
+def _write_slots(batched, src, slots):
+    """Write the rows of a batch-``n`` prefill state into slots ``slots`` of
+    the batched decode state (stack leaves carry (R, B, ...); other leaves
+    (B, ...)) — codes and scales alike for quantized cache layouts."""
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def per(path, bl, sl):
+        if _path_str(path).startswith("stack"):
+            return bl.at[:, idx].set(sl.astype(bl.dtype))
+        return bl.at[idx].set(sl.astype(bl.dtype))
+
+    return jax.tree_util.tree_map_with_path(per, batched, src)
+
+
+class DeviceRunner:
+    def __init__(self, cfg, ecfg, kvcfg, *, pctx=None, key=None):
+        self.cfg, self.ecfg, self.kvcfg, self.pctx = cfg, ecfg, kvcfg, pctx
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        B, ML = ecfg.max_slots, ecfg.max_len
+        self.state = lm.init_decode_state(cfg, B, ML, kvcfg=kvcfg)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.cur_tok = jnp.zeros((B, 1), jnp.int32)
+        self.done = jnp.ones((B,), bool)        # empty slot = done lane
+        self.remaining = jnp.zeros((B,), jnp.int32)
+        self.host_syncs = 0                     # blocking device→host copies
+        self._decode_jit = jax.jit(partial(
+            lm.decode_many, cfg, pctx=pctx, kvcfg=kvcfg,
+            K=ecfg.decode_chunk, max_len=ML,
+            temperature=ecfg.temperature, eos_token=ecfg.eos_token))
+        self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
+                                            collect_stats=True,
+                                            full_logits=True, kvcfg=kvcfg),
+                                    static_argnames=("max_len",))
+
+    # -------------------------------------------------------------- admission
+
+    def admit_group(self, params, group, frames=None):
+        """One bucketed prefill dispatch for ``len(group.slots)`` prompts.
+
+        Right-pads every prompt to ``group.bucket`` (causal masking keeps the
+        real tokens clean; pad positions beyond a prompt's end are never
+        attended at decode — decode overwrites them), runs ONE batched
+        prefill with the stats tap on, samples each row's first token, and
+        writes each row's cache into its slot.
+
+        Returns ``(first_tokens (n,), finished (n,), stats)`` — the first two
+        as host arrays (one sync for the whole group); ``finished[i]`` marks
+        a request already over at admission (budget of 1, EOS on the first
+        token, or a prompt that fills the cache exactly).
+        """
+        import numpy as np
+
+        ecfg = self.ecfg
+        slots, reqs = group.slots, group.requests
+        n, bucket = len(reqs), group.bucket
+        toks_h = np.zeros((n, bucket), np.int32)   # assemble on host: one
+        for i, req in enumerate(reqs):             # transfer, not n dispatches
+            toks_h[i, :len(req.prompt)] = req.prompt
+        batch = {"tokens": jnp.asarray(toks_h)}
+        if frames is not None:
+            batch["frames"] = frames
+        logits, sstate, stats = self._prefill_jit(params, batch,
+                                                  max_len=ecfg.max_len)
+        plens = jnp.asarray([len(r.prompt) for r in reqs], jnp.int32)
+        last = jnp.take_along_axis(logits, (plens - 1)[:, None, None],
+                                   axis=1)[:, 0]
+        self.key, sk = jax.random.split(self.key)
+        first = sample(last, sk, ecfg.temperature)
+        idx = jnp.asarray(slots, jnp.int32)
+        self.state = _write_slots(self.state, sstate, slots)
+        self.pos = self.pos.at[idx].set(plens)  # decode overwrites pads
+        self.cur_tok = self.cur_tok.at[idx].set(first[:, None])
+        budget = jnp.asarray([r.max_new for r in reqs], jnp.int32) - 1
+        fin = ((plens >= ecfg.max_len) | (budget <= 0)
+               | (first == ecfg.eos_token))
+        self.remaining = self.remaining.at[idx].set(budget)
+        self.done = self.done.at[idx].set(fin)
+        self.host_syncs += 1
+        first_h, fin_h = jax.device_get((first, fin))
+        return first_h, fin_h, stats
+
+    # ----------------------------------------------------------------- decode
+
+    def decode_block(self, params):
+        """Run ``decode_chunk`` fused decode steps over every slot.
+
+        Returns host copies ``(tokens (B, K), valid (B, K), done (B,))`` —
+        one blocking transfer for the whole block."""
+        (toks, valid), carry = self._decode_jit(
+            params, self.state, self.cur_tok, self.pos, self.done,
+            self.remaining, self.key)
+        (self.state, self.cur_tok, self.pos, self.done, self.remaining,
+         self.key) = carry
+        self.host_syncs += 1
+        return jax.device_get((toks, valid, self.done))

@@ -1,16 +1,11 @@
-"""Token sampling."""
+"""Token sampling — public re-export.
+
+The implementation lives in :mod:`repro.models.common` (``sample_logits``)
+so the fused on-device decode loop (``lm.decode_many``) can sample inside
+its ``lax.scan`` without a models → serving import cycle.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.models.common import sample_logits as sample
 
-
-def sample(logits, key=None, temperature: float = 0.0, top_k: int = 0):
-    """logits (B, V) → (B,) int32. temperature 0 → greedy."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lg = logits / temperature
-    if top_k > 0:
-        vals, _ = jax.lax.top_k(lg, top_k)
-        lg = jnp.where(lg < vals[..., -1:], -jnp.inf, lg)
-    return jax.random.categorical(key, lg).astype(jnp.int32)
+__all__ = ["sample"]

@@ -1,0 +1,190 @@
+"""Scheduler — the host half of the serving engine: requests and policy.
+
+Owns everything that is bookkeeping rather than device math: the FIFO queue,
+the slot table, admission planning (free slots are filled in submission
+order, then the round's admissions are grouped by padded prompt bucket so
+each group is ONE batched prefill dispatch), and the requantization cadence.
+
+Cadence is a policy, not a side effect of admission (the paper's Fig. 1b
+lifecycle): with ``EngineConfig.recalibrate_tokens > 0`` the engine
+requantizes once the token budget (prefill + generated tokens since the last
+requant) is exhausted *and* fresh statistics have arrived; otherwise it
+falls back to the per-admission counter (``recalibrate_every``).
+
+No jax arrays live here — the device side is :class:`~repro.serving.runner.
+DeviceRunner` and the two are composed by :class:`~repro.serving.engine.
+TTQEngine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    frames: Any = None              # encdec stub modality input
+
+
+class GenResult(list):
+    """A request's generated tokens.  Compares and prints as a plain list;
+    ``unfinished`` marks a partial output (the engine stopped at
+    ``max_iters`` with the request still queued or mid-generation)."""
+
+    def __init__(self, tokens=(), unfinished: bool = False):
+        super().__init__(tokens)
+        self.unfinished = unfinished
+
+
+@dataclasses.dataclass
+class AdmissionGroup:
+    """One bucketed prefill dispatch: requests padded to a shared length."""
+    bucket: int
+    slots: List[int] = dataclasses.field(default_factory=list)
+    requests: List[Request] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens(self) -> float:
+        return float(len(self.requests) * self.bucket)
+
+
+class Scheduler:
+    def __init__(self, ecfg, exact_buckets: bool = False):
+        self.ecfg = ecfg
+        # recurrent state would absorb pad tokens — prefill at exact length
+        self.exact_buckets = exact_buckets
+        self.queue: deque = deque()
+        self.slot_req: List[Optional[Request]] = [None] * ecfg.max_slots
+        self.finished: Dict[int, Request] = {}
+        self._rid = itertools.count()
+        self.admits_since_cal = 0
+        self.tokens_since_cal = 0.0
+        self._fresh_stats = False
+
+    # ---------------------------------------------------------------- intake
+
+    @property
+    def max_prompt_len(self) -> int:
+        """Longest admissible prompt: the cache must hold it and (for
+        bucketed families) the largest bucket must fit it."""
+        if self.exact_buckets:
+            return self.ecfg.max_len
+        return min(max(self.ecfg.prompt_buckets), self.ecfg.max_len)
+
+    def submit(self, prompt, max_new: int = 16, frames=None) -> int:
+        prompt = list(prompt)
+        limit = self.max_prompt_len
+        if len(prompt) > limit:
+            detail = f"max_len={self.ecfg.max_len}"
+            if not self.exact_buckets:
+                detail += (f", largest prompt bucket "
+                           f"{max(self.ecfg.prompt_buckets)}")
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the engine's "
+                f"admissible length {limit} ({detail}); raise max_len / "
+                f"prompt_buckets or truncate the prompt")
+        rid = next(self._rid)
+        self.queue.append(Request(rid, prompt, max_new, frames=frames))
+        return rid
+
+    # ------------------------------------------------------------- admission
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def bucket(self, n: int) -> int:
+        if self.exact_buckets:
+            return n
+        for b in self.ecfg.prompt_buckets:
+            if n <= b:
+                return min(b, self.ecfg.max_len)
+        return min(self.ecfg.prompt_buckets[-1], self.ecfg.max_len)
+
+    def plan_admissions(self) -> List[AdmissionGroup]:
+        """Pop queued requests into free slots in FIFO order, then group the
+        round's admissions by bucket — each group is one prefill dispatch."""
+        picked = []
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            picked.append((slot, self.queue.popleft()))
+        groups: Dict[int, AdmissionGroup] = {}
+        for slot, req in picked:
+            g = groups.setdefault(self.bucket(len(req.prompt)),
+                                  AdmissionGroup(self.bucket(len(req.prompt))))
+            g.slots.append(slot)
+            g.requests.append(req)
+            self.slot_req[slot] = req
+        return list(groups.values())
+
+    # -------------------------------------------------------- requant cadence
+
+    def note_admitted(self, n: int, tokens: float):
+        """n requests prefilled (fresh statistics folded into the session)."""
+        self.admits_since_cal += n
+        self.tokens_since_cal += tokens
+        self._fresh_stats = True
+
+    def note_decoded(self, tokens: int):
+        self.tokens_since_cal += tokens
+
+    def should_requant(self) -> bool:
+        if self.ecfg.recalibrate_tokens > 0:
+            return (self._fresh_stats
+                    and self.tokens_since_cal >= self.ecfg.recalibrate_tokens)
+        return self.admits_since_cal >= self.ecfg.recalibrate_every
+
+    def note_requant(self):
+        self.admits_since_cal = 0
+        self.tokens_since_cal = 0.0
+        self._fresh_stats = False
+
+    # --------------------------------------------------------------- results
+
+    def finish(self, slot: int):
+        req = self.slot_req[slot]
+        req.done = True
+        self.finished[req.rid] = req
+        self.slot_req[slot] = None
+
+    def record_block(self, tokens, valid, done) -> int:
+        """Fold one decode block's host copies into per-request outputs.
+
+        ``tokens``/``valid``: (B, K) host arrays; ``done``: (B,) final flags.
+        Returns the number of accepted tokens (token-budget cadence)."""
+        accepted = 0
+        K = tokens.shape[1]
+        for slot in self.active_slots():
+            req = self.slot_req[slot]
+            for k in range(K):
+                if valid[slot, k]:
+                    req.out.append(int(tokens[slot, k]))
+                    accepted += 1
+            if done[slot]:
+                self.finish(slot)
+        self.note_decoded(accepted)
+        return accepted
+
+    def results(self, include_partials: bool = True) -> Dict[int, GenResult]:
+        """Finished outputs, plus (by default) in-flight/queued partials
+        flagged ``unfinished=True`` — nothing submitted is silently dropped."""
+        out = {rid: GenResult(req.out) for rid, req in self.finished.items()}
+        if include_partials:
+            pending = [r for r in self.slot_req if r is not None]
+            pending += list(self.queue)
+            for req in pending:
+                out[req.rid] = GenResult(req.out, unfinished=True)
+        return out

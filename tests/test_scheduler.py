@@ -1,0 +1,193 @@
+"""Scheduler/runner split: FIFO fairness, requant cadence, fused decode.
+
+The engine-behaviour tests (greedy exactness, continuous batching, TTQ
+lifecycle) live in test_serving.py; this file covers the pieces the split
+introduced — admission planning, the token-budget requantization cadence,
+and ``lm.decode_many``'s equivalence with repeated single-step decode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KVCacheConfig, NO_QUANT, ttq_policy
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, Scheduler, TTQEngine
+
+CFG = ModelConfig(name="t", family="dense", n_layers=3, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def ref_greedy(params, prompt, n):
+    toks = list(prompt)
+    for _ in range(n):
+        lg, _, _ = lm.forward(CFG, params, {"tokens": jnp.asarray(toks)[None]})
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    return toks[len(prompt):]
+
+
+# ---------------------------------------------------------------------------
+# lm.decode_many — the fused on-device decode block
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8", "int4"])
+def test_decode_many_matches_repeated_decode_step(params, kv_dtype):
+    """K fused steps emit the exact greedy tokens of K single decode_step
+    calls, with identical position advance, for every KV-cache layout."""
+    K = 5
+    kvcfg = KVCacheConfig(dtype=kv_dtype)
+    toks = jnp.asarray([[5, 9, 17, 3], [100, 50, 25, 12]], jnp.int32)
+    lg, state, _ = lm.prefill(CFG, params, {"tokens": toks}, max_len=32,
+                              kvcfg=kvcfg)
+    tok0 = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    pos0 = jnp.asarray([4, 4], jnp.int32)
+
+    # reference: K repeated single-token decode steps
+    ref, st, tok, pos = [], state, tok0, pos0
+    for _ in range(K):
+        lg1, st = lm.decode_step(CFG, params, st, tok, pos, kvcfg=kvcfg)
+        tok = jnp.argmax(lg1, axis=-1)[:, None].astype(jnp.int32)
+        ref.append(tok[:, 0])
+        pos = pos + 1
+    ref = jnp.stack(ref, axis=1)                         # (B, K)
+
+    (blk, valid), (st2, tok2, pos2, done2, rem2, _) = lm.decode_many(
+        CFG, params, state, tok0, pos0,
+        jnp.zeros((2,), bool), jnp.full((2,), 100, jnp.int32),
+        jax.random.PRNGKey(1), K=K, max_len=32, kvcfg=kvcfg)
+    np.testing.assert_array_equal(np.asarray(blk), np.asarray(ref))
+    assert bool(valid.all())
+    np.testing.assert_array_equal(np.asarray(pos2), np.asarray(pos0) + K)
+    assert not bool(done2.any())
+    # final carried token continues the sequence
+    np.testing.assert_array_equal(np.asarray(tok2), np.asarray(tok))
+
+
+def test_decode_many_budget_and_done_masking(params):
+    """Slots stop at their per-slot budget; done lanes emit nothing and hold
+    their position."""
+    toks = jnp.asarray([[5, 9, 17, 3], [8, 8, 1, 2]], jnp.int32)
+    lg, state, _ = lm.prefill(CFG, params, {"tokens": toks}, max_len=32)
+    tok0 = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    (blk, valid), (_, _, pos2, done2, _, _) = lm.decode_many(
+        CFG, params, state, tok0, jnp.asarray([4, 4], jnp.int32),
+        jnp.zeros((2,), bool), jnp.asarray([2, 6], jnp.int32),
+        jax.random.PRNGKey(1), K=4, max_len=32)
+    v = np.asarray(valid)
+    assert v[0].tolist() == [True, True, False, False]   # budget 2
+    assert v[1].tolist() == [True] * 4
+    assert bool(done2[0]) and not bool(done2[1])
+    assert int(pos2[0]) == 6 and int(pos2[1]) == 8       # held after done
+
+
+# ---------------------------------------------------------------------------
+# engine: chunked decode equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_engine_chunked_matches_per_token(params, kv_dtype):
+    """decode_chunk > 1 (fused blocks, re-admission at chunk boundaries)
+    produces the same greedy outputs as the per-token engine."""
+    pol = NO_QUANT.with_(kvcache=KVCacheConfig(dtype=kv_dtype))
+    prompts = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12, 6, 3],
+               [7, 7, 7, 2]]
+    outs = {}
+    for K in (1, 3):
+        eng = TTQEngine(CFG, params, pol,
+                        EngineConfig(max_slots=2, max_len=64, decode_chunk=K))
+        rids = [eng.submit(p, max_new=9) for p in prompts]
+        o = eng.run_all()
+        outs[K] = [o[r] for r in rids]
+    assert outs[1] == outs[3]
+
+
+def test_engine_chunked_fewer_host_syncs(params):
+    """The point of the split: host transfers per generated token drop from
+    ~1 (per-token blocks) towards 1/K."""
+    prompts = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12]]
+    syncs, toks = {}, {}
+    for K in (1, 4):
+        eng = TTQEngine(CFG, params, NO_QUANT,
+                        EngineConfig(max_slots=4, max_len=64, decode_chunk=K))
+        for p in prompts:
+            eng.submit(p, max_new=12)
+        o = eng.run_all()
+        syncs[K] = eng.host_syncs
+        toks[K] = sum(len(v) for v in o.values())
+    assert toks[1] == toks[4]
+    assert syncs[4] < syncs[1]
+    assert syncs[4] / toks[4] <= 1.0 / 4 + 0.1   # ≤ ~1/K (+admission syncs)
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy: FIFO fairness, bucketing, requant cadence
+# ---------------------------------------------------------------------------
+
+def test_fifo_fairness_across_slots(params):
+    """Requests are admitted and completed in submission order when their
+    generation lengths are equal — no slot starves the queue."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=2, max_len=64))
+    prompts = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12], [7, 7, 7, 2]]
+    rids = [eng.submit(p, max_new=6) for p in prompts]
+    outs = eng.run_all()
+    assert list(eng.finished.keys()) == rids          # completion order
+    for rid, p in zip(rids, prompts):
+        assert outs[rid] == ref_greedy(params, p, 6)
+
+
+def test_admission_groups_batch_compatible_prompts(params):
+    """Same-bucket prompts admitted in one round share ONE prefill dispatch;
+    distinct buckets dispatch separately."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=4, max_len=64))
+    calls = []
+    real = eng.runner._prefill_jit
+    eng.runner._prefill_jit = \
+        lambda *a, **kw: calls.append(kw["max_len"]) or real(*a, **kw)
+    for p in ([5, 9, 17, 3], [8, 8, 1], [1] * 20):    # buckets 16, 16, 32
+        eng.submit(p, max_new=2)
+    eng.admit()
+    assert len(calls) == 2
+
+
+def test_scheduler_unit_plan_and_buckets():
+    sch = Scheduler(EngineConfig(max_slots=3, max_len=64,
+                                 prompt_buckets=(8, 16, 32)))
+    for n in (4, 5, 20, 7):
+        sch.submit(list(range(1, n + 1)), max_new=2)
+    groups = sch.plan_admissions()
+    by_bucket = {g.bucket: [r.rid for r in g.requests] for g in groups}
+    assert by_bucket == {8: [0, 1], 32: [2]}          # rid 3 waits (FIFO)
+    assert [r.rid for r in sch.queue] == [3]
+    assert sch.slot_req[0].rid == 0 and sch.slot_req[1].rid == 1 \
+        and sch.slot_req[2].rid == 2
+
+
+def test_requant_cadence_token_budget(params):
+    """recalibrate_tokens switches the cadence from per-admission to a token
+    budget: 3 admissions processing 19 tokens each (16 prefill-bucket + 3
+    decoded) trip a 20-token budget twice (at 35 and again at 22 tokens
+    since the last requant), not once per admission."""
+    pol = ttq_policy(bits=8, group_size=32, rank=0)
+    prompts = ([3, 1, 4], [1, 5, 9, 2], [6, 5, 3, 5])
+    eng = TTQEngine(CFG, params, pol,
+                    EngineConfig(max_slots=1, max_len=64,
+                                 recalibrate_tokens=20, decode_chunk=4))
+    for p in prompts:
+        eng.submit(p, max_new=4)
+    eng.run_all()
+    assert eng.n_requants == 2
+    # control: per-admission cadence requantizes every admission
+    eng2 = TTQEngine(CFG, params, pol,
+                     EngineConfig(max_slots=1, max_len=64,
+                                  recalibrate_every=1, decode_chunk=4))
+    for p in prompts:
+        eng2.submit(p, max_new=4)
+    eng2.run_all()
+    assert eng2.n_requants == 3

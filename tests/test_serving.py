@@ -77,6 +77,75 @@ def test_engine_quantized_outputs_reasonable(params):
     assert np.isfinite(np.asarray(W)).all()
 
 
+def test_submit_rejects_oversized_prompt(params):
+    """A prompt longer than min(largest bucket, max_len) is rejected at
+    submit() with a clear error instead of crashing admission with a shape
+    error; a boundary-length prompt is accepted."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=1, max_len=32,
+                                 prompt_buckets=(16, 32)))
+    with pytest.raises(ValueError, match="exceeds the engine's admissible"):
+        eng.submit(list(range(1, 34)), max_new=2)      # 33 > max_len=32
+    rid = eng.submit(list(range(1, 33)), max_new=2)    # exactly at the limit
+    outs = eng.run_all()
+    assert rid in outs and not outs[rid].unfinished
+    # bucket ceiling binds too, independent of max_len
+    eng2 = TTQEngine(CFG, params, NO_QUANT,
+                     EngineConfig(max_slots=1, max_len=64,
+                                  prompt_buckets=(8, 16)))
+    with pytest.raises(ValueError, match="largest prompt bucket"):
+        eng2.submit(list(range(1, 19)), max_new=2)     # 18 > bucket 16
+
+
+def test_run_all_max_iters_returns_partials(params):
+    """Hitting max_iters returns every submitted request: finished outputs
+    plus in-flight/queued partials flagged ``unfinished``."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=1, max_len=64))
+    r1 = eng.submit([1, 2, 3], max_new=50)
+    r2 = eng.submit([4, 5, 6], max_new=5)
+    outs = eng.run_all(max_iters=3)
+    assert outs[r1].unfinished and len(outs[r1]) == 4   # prefill + 3 steps
+    assert outs[r2].unfinished and len(outs[r2]) == 0   # still queued
+    # draining the engine completes both; results compare as plain lists
+    done = eng.run_all()
+    assert not done[r1].unfinished and not done[r2].unfinished
+    assert done[r1][:4] == outs[r1]
+    assert done[r2] == ref_greedy(params, [4, 5, 6], 5)
+
+
+def test_requests_finishing_at_admission_do_not_strand_queue(params):
+    """A request over at admission (max_new=1: the prefill-sampled token is
+    the whole output) frees its slot for the next queued request in the same
+    round — run_all must not break with the queue non-empty."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=1, max_len=64))
+    r1 = eng.submit([5, 9, 17], max_new=1)
+    r2 = eng.submit([8, 8, 1], max_new=1)
+    r3 = eng.submit([4, 2], max_new=3)
+    outs = eng.run_all()
+    assert len(outs[r1]) == 1 and not outs[r1].unfinished
+    assert len(outs[r2]) == 1 and not outs[r2].unfinished
+    assert outs[r3] == ref_greedy(params, [4, 2], 3)
+    assert not outs[r3].unfinished
+
+
+def test_slot_at_capacity_finishes_request(params):
+    """A slot whose cache fills ends its request instead of clipping pos and
+    overwriting the last KV row: the emitted tokens stay exactly greedy (an
+    overwrite would corrupt the attention read for the final tokens)."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=1, max_len=16))
+    prompt = [5, 9, 17, 3]
+    rid = eng.submit(prompt, max_new=100)               # wants 100, fits 13
+    outs = eng.run_all()
+    want = eng.ecfg.max_len - len(prompt) + 1           # 12 cached + final
+    assert len(outs[rid]) == want
+    assert not outs[rid].unfinished                     # finished, not dropped
+    assert outs[rid] == ref_greedy(params, prompt, want)
+    assert int(eng.pos[0]) == eng.ecfg.max_len          # never clipped back
+
+
 def test_engine_lowrank_policy(params):
     eng = TTQEngine(CFG, params, ttq_policy(bits=4, group_size=32, rank=8),
                     EngineConfig(max_slots=1, max_len=64))
