@@ -5,8 +5,17 @@ Measured with XLA cost_analysis FLOPs of the actual jitted computations:
     projection = flops(x @ Wᵀ)
 ρ → 0 as d', T grow — the paper's negligible-overhead claim, verified on the
 real compiled graphs rather than the analytic count alone.
+
+Alongside the FLOP ratio, each case now reports the **measured wall-clock
+latency** of one weight's online requantization (stats→D + scale+quantize,
+jit-compiled, steady-state): FLOP ratios say the overhead vanishes
+asymptotically, the milliseconds say what one recalibration actually costs
+at each scale — the number `bench_requant.py` then drives down with the
+fused whole-tree dispatch.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +31,16 @@ def _flops(fn, *sds):
     return float(ca.get("flops", 0.0))
 
 
+def _wall_ms(fn, *args, reps: int = 5) -> float:
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))           # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
 def measure(d: int, dp: int, T: int, g: int = 32):
     x = jax.ShapeDtypeStruct((T, d), jnp.float32)
     W = jax.ShapeDtypeStruct((dp, d), jnp.float32)
@@ -33,7 +52,18 @@ def measure(d: int, dp: int, T: int, g: int = 32):
     f_scale = _flops(lambda xx, dd: xx * (1.0 / dd), x, D)
     rho = (f_stats + f_quant + f_scale) / max(f_proj, 1.0)
     rho_theory = 1.0 / dp + 3.0 / T
-    return rho, rho_theory, f_proj, f_stats + f_quant + f_scale
+
+    # measured wall clock of one online requantization (stats→D, quantize)
+    key = jax.random.PRNGKey(0)
+    xv = jax.random.normal(key, (T, d), jnp.float32)
+    Wv = jax.random.normal(jax.random.fold_in(key, 1), (dp, d), jnp.float32)
+
+    def requant(xx, ww):
+        dd = activation_diag(xx, AWQConfig())
+        return awq_quantize(ww, dd, qcfg)
+
+    wall = _wall_ms(requant, xv, Wv)
+    return rho, rho_theory, f_proj, f_stats + f_quant + f_scale, wall
 
 
 def run(fast: bool = True):
@@ -43,17 +73,17 @@ def run(fast: bool = True):
         cases += [(8192, 8192, 8192)]
     rows = []
     for d, dp, T in cases:
-        rho, rho_t, fp, fo = measure(d, dp, T)
-        rows.append((d, dp, T, rho, rho_t))
+        rho, rho_t, fp, fo, wall = measure(d, dp, T)
+        rows.append((d, dp, T, rho, rho_t, wall))
     return rows
 
 
 def main(fast: bool = True):
     rows = run(fast)
     print("# eq.(3) analogue: measured online-quantization overhead fraction")
-    print("d,dprime,T,rho_measured,rho_theory")
-    for d, dp, T, rho, rho_t in rows:
-        print(f"{d},{dp},{T},{rho:.5f},{rho_t:.5f}")
+    print("d,dprime,T,rho_measured,rho_theory,requant_wall_ms")
+    for d, dp, T, rho, rho_t, wall in rows:
+        print(f"{d},{dp},{T},{rho:.5f},{rho_t:.5f},{wall:.2f}")
     assert rows[-1][3] < rows[0][3], "overhead must vanish with scale"
     return rows
 

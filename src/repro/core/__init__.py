@@ -6,13 +6,14 @@ from .awq import AWQConfig, accumulate_stats, activation_diag, awq_qdq, awq_quan
 from .gptq import gptq_qdq
 from .kvquant import BF16_KV, KVCacheConfig, dequantize_kv, quantize_kv
 from .lowrank import alternating_refine, svd_factors, ttq_lowrank_qdq, ttq_lowrank_quantize
-from .policy import NO_QUANT, QuantPolicy, ttq_policy
+from .policy import FUSED_KERNELS, KernelConfig, NO_QUANT, QuantPolicy, ttq_policy
 from .qdq import QuantConfig, dequantize, pack_bits, pack_int4, qdq, quantize, rtn, unpack_bits, unpack_int4
 from .ttq import (QuantizedTensor, calibrate, dequant, quantize_params,
                   quantize_weight, ttq_linear, ttq_matmul)
 
 __all__ = [
-    "AWQConfig", "BF16_KV", "KVCacheConfig", "QuantConfig", "QuantPolicy",
+    "AWQConfig", "BF16_KV", "FUSED_KERNELS", "KVCacheConfig", "KernelConfig",
+    "QuantConfig", "QuantPolicy",
     "QuantizedTensor", "NO_QUANT",
     "accumulate_stats", "activation_diag", "alternating_refine", "awq_qdq",
     "awq_quantize", "calibrate", "dequant", "dequantize", "dequantize_kv",

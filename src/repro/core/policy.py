@@ -40,6 +40,42 @@ _QCFG_FIELDS = {f.name for f in dataclasses.fields(QuantConfig)}
 _ACFG_FIELDS = {f.name for f in dataclasses.fields(AWQConfig)}
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Static weight-kernel dispatch config (hashable → usable as a jit
+    static arg, threaded like :class:`~repro.core.kvquant.KVCacheConfig`).
+
+    ``use_pallas=True`` routes every decode matmul over a *packed*
+    :class:`~repro.core.ttq.QuantizedTensor` through the fused Pallas
+    ``ttq_gemm`` (in-kernel unpack + dequant + D⁻¹ prologue) instead of the
+    jnp dequantize-then-einsum fallback.  Weights without a packed payload
+    (``policy.packed=False``, unpackable bit-widths) always take the
+    fallback, so the flag is a pure opt-in.
+
+    Block sizes map onto the kernel grids: ``bm/bn/bk`` tile the GEMM
+    (T/d'/d axes), ``qbm/qbk`` tile the online-quantize kernel (d'/d axes).
+    Defaults are the kernels' MXU-aligned defaults.
+    """
+
+    use_pallas: bool = False
+    bm: int = 128
+    bn: int = 128
+    bk: int = 256
+    qbm: int = 256
+    qbk: int = 512
+
+    @property
+    def gemm_kw(self) -> dict:
+        return {"bm": self.bm, "bn": self.bn, "bk": self.bk}
+
+    @property
+    def quant_kw(self) -> dict:
+        return {"bm": self.qbm, "bk": self.qbk}
+
+
+FUSED_KERNELS = KernelConfig(use_pallas=True)
+
+
 def override(pattern: str, **delta) -> tuple:
     """Normalize one override to a hashable (pattern, ((key, value), ...))."""
     known = _QCFG_FIELDS | _ACFG_FIELDS | {
@@ -67,6 +103,10 @@ class QuantPolicy:
     # once per engine — see DESIGN.md §"KV-cache layout").  Orthogonal to the
     # weight method: NO_QUANT weights + int8 cache is a valid combination.
     kvcache: KVCacheConfig = KVCacheConfig()
+    # weight-kernel dispatch (global, like kvcache: one decode program per
+    # engine) — Pallas ttq_gemm on packed weights vs the jnp fallback, plus
+    # the fused single-dispatch requantization kernel (DESIGN.md §7).
+    kernel: KernelConfig = KernelConfig()
 
     @property
     def quantizer(self):

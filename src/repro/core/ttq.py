@@ -40,10 +40,14 @@ class QuantizedTensor:
     """Groupwise-quantized weight (row layout): y = deq(Wint)·(x/D) [+ B(Ax)].
 
     ``packed`` holds int32 nibble-packed data (d', d·bits/32) when the policy's
-    packed path is on, else ``wint`` holds int8.  Exactly one of the two is set.
+    packed path is on, else ``wint`` holds **uint8** codes in [0, 2^bits−1].
+    Exactly one of the two is set.  Codes are unsigned on purpose: 8-bit
+    codes span 0..255, which a signed int8 store would wrap — unpacked-on-
+    the-fly codes stay int32 for the same reason (bits=8 round-trip
+    regression in tests/test_fused_path.py).
     """
 
-    wint: Optional[jnp.ndarray]      # (d', d) int8 | None
+    wint: Optional[jnp.ndarray]      # (d', d) uint8 | None
     packed: Optional[jnp.ndarray]    # (d', d*bits//32) int32 | None
     scale: jnp.ndarray               # (d', d//g) f32
     zero: jnp.ndarray                # (d', d//g) f32
@@ -123,7 +127,10 @@ def dequant(qt: QuantizedTensor) -> jnp.ndarray:
     """Effective fp weight  Ŵ = deq(Wint)∘D⁻¹ [+ BA]  — reference/debug path."""
     wint = qt.wint
     if wint is None:
-        wint = unpack_bits(qt.packed, qt.in_features, qt.bits).astype(jnp.uint8)
+        # keep unpacked codes in int32: 8-bit codes span 0..255, which
+        # overflows a signed int8 cast (the historical hazard) — int32 is
+        # what unpack_bits yields and dequantize only needs a float cast
+        wint = unpack_bits(qt.packed, qt.in_features, qt.bits)
     Wd = dequantize(wint, qt.scale, qt.zero, qt.qcfg)
     W = Wd * qt.dinv[None, :]
     if qt.B is not None:
@@ -132,23 +139,40 @@ def dequant(qt: QuantizedTensor) -> jnp.ndarray:
 
 
 def ttq_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
-               use_kernel: bool = False, precision=None) -> jnp.ndarray:
+               use_kernel: bool = False, kcfg=None,
+               precision=None) -> jnp.ndarray:
     """y = x @ Ŵᵀ for x: (..., d).  Kernel path uses the Pallas ttq_gemm.
 
-    The prescale x∘D⁻¹ happens on the (small) activation; the low-rank branch
-    runs in fp on the *unscaled* x (BA was subtracted before scaling).
+    ``kcfg`` (:class:`~repro.core.policy.KernelConfig`) is the policy-driven
+    dispatch switch threaded by the model stack: ``use_pallas=True`` (or the
+    legacy ``use_kernel`` flag) sends packed weights through ``ttq_gemm``
+    with the D⁻¹ prescale fused into the kernel prologue.  The jnp fallback
+    prescales x∘D⁻¹ on the (small) activation; the low-rank branch runs in
+    fp on the *unscaled* x either way (BA was subtracted before scaling).
     """
-    xs = x * qt.dinv.astype(x.dtype)
+    if kcfg is not None and kcfg.use_pallas:
+        use_kernel = True
     if use_kernel and qt.packed is not None:
         from repro.kernels import ops as kops  # local import: kernels are optional
-        y = kops.ttq_gemm(xs, qt.packed, qt.scale, qt.zero,
-                          bits=qt.bits, group_size=qt.group_size)
+        kw = kcfg.gemm_kw if kcfg is not None else {}
+        y = kops.ttq_gemm(x, qt.packed, qt.scale, qt.zero, qt.dinv,
+                          bits=qt.bits, group_size=qt.group_size, **kw)
     else:
+        # f32 prescale + accumulation over the same flattened (T, d)×(d, d')
+        # gemm shape the kernel presents, so both paths hit the same backend
+        # micro-kernel and the same f32 reduction order (the greedy-equality
+        # contract: flipping the kernel on must not move a single token);
+        # the cast back to x.dtype mirrors ttq_gemm's epilogue
+        lead = x.shape[:-1]
+        xs = x.reshape(-1, x.shape[-1]).astype(jnp.float32) * qt.dinv
         wint = qt.wint
         if wint is None:
             wint = unpack_bits(qt.packed, qt.in_features, qt.bits)
-        Wd = dequantize(wint, qt.scale, qt.zero, qt.qcfg).astype(x.dtype)
-        y = jnp.einsum("...d,od->...o", xs, Wd, precision=precision)
+        Wd = dequantize(wint, qt.scale, qt.zero, qt.qcfg)
+        y = jax.lax.dot_general(xs, Wd, (((1,), (1,)), ((), ())),
+                                precision=precision,
+                                preferred_element_type=jnp.float32)
+        y = y.reshape(*lead, -1).astype(x.dtype)
     if qt.B is not None:
         y = y + jnp.einsum("...r,or->...o", jnp.einsum("...d,rd->...r", x, qt.A.astype(x.dtype)),
                            qt.B.astype(x.dtype))

@@ -88,7 +88,11 @@ def ttq_gemm(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     x2 = x.reshape(-1, d)
     T = x2.shape[0]
 
-    bm = min(bm, max(8, ((T + 7) // 8) * 8))
+    # MXU path needs 8-row alignment; interpret mode takes T exactly so the
+    # emulated dot presents the same (M, K)×(K, N) shape as the jnp fallback
+    # (padding rows changes the backend's gemm micro-kernel choice, which
+    # perturbs f32 accumulation order → bf16 rounding-boundary flips)
+    bm = min(bm, T if interpret else max(8, ((T + 7) // 8) * 8))
     bk = min(bk, d)
     assert d % bk == 0 or bk >= d, "d must tile by bk"
     if bk % group_size or bk % per:

@@ -11,9 +11,18 @@ quantized codes + per-(head, token) scales, read by the fused Pallas
 dequant-attention kernel (``--kv-no-pallas`` forces the jnp fallback).
 
 ``--decode-chunk K`` fuses K decode steps into one on-device block
-(``lm.decode_many``) — one host sync per K tokens instead of one per token;
+(``lm.decode_many``) — one host sync per K tokens instead of one per token
+(``0`` picks the bench-calibrated default per slot count);
 ``--recal-tokens N`` drives the requantization cadence by a token budget
 instead of per-admission (DESIGN.md §"Serving architecture").
+
+``--use-kernels`` turns on the packed-weight fast path end to end: weights
+quantize to packed int codes and every decode matmul dispatches the Pallas
+``ttq_gemm``; ``--requant-threshold T`` arms the delta gate — only layers
+whose activation diagonal drifted ≥ T (relative L2) re-quantize, the rest
+reuse their previous packed tensors.  The end-of-run summary reports the
+gate's skip counts and the requantization wall time next to
+``host_syncs/token``.
 """
 import argparse
 import time
@@ -21,15 +30,18 @@ import time
 
 def build_policy(args):
     """CLI flags → QuantPolicy with per-layer mixed-precision overrides."""
-    from repro.quant import KVCacheConfig, NO_QUANT, override, ttq_policy
+    from repro.quant import (KVCacheConfig, KernelConfig, NO_QUANT, override,
+                             ttq_policy)
 
     kvcache = KVCacheConfig(dtype=args.kv_dtype,
                             group_size=args.kv_group_size,
                             use_pallas=not args.kv_no_pallas)
+    kernel = KernelConfig(use_pallas=args.use_kernels)
     if args.no_quant:
-        return NO_QUANT.with_(kvcache=kvcache)
+        return NO_QUANT.with_(kvcache=kvcache, kernel=kernel)
     policy = ttq_policy(bits=args.bits, group_size=args.group_size,
-                        rank=args.rank, kvcache=kvcache)
+                        rank=args.rank, kvcache=kvcache, kernel=kernel,
+                        packed=args.use_kernels or args.packed)
     ovr = []
     if args.attn_bits:
         ovr.append(override("*.mix.*", bits=args.attn_bits))
@@ -49,14 +61,28 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--decode-chunk", type=int, default=8,
+    ap.add_argument("--decode-chunk", type=int, default=0,
                     help="K fused on-device decode steps per host sync "
-                         "(lm.decode_many; 1 = per-token round trips)")
+                         "(lm.decode_many; 1 = per-token round trips; "
+                         "0 = auto per slot count, bench_engine crossover)")
     ap.add_argument("--recal-tokens", type=int, default=0,
                     help="requantize every N processed tokens instead of "
                          "every --recal-every admissions (0 = off)")
     ap.add_argument("--recal-every", type=int, default=1,
                     help="requantize after every N admissions")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="packed int weights + Pallas ttq_gemm on every "
+                         "decode matmul (the paper's fast path end to end)")
+    ap.add_argument("--packed", action="store_true",
+                    help="pack weight codes (implied by --use-kernels)")
+    ap.add_argument("--requant-threshold", type=float, default=-1.0,
+                    help="delta gate: requantize only layers whose "
+                         "activation diagonal drifted >= T in relative L2 "
+                         "(<0 = always requantize everything)")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="readiness-gated requant swap: decode keeps the "
+                         "previous tree until the new one is device-ready "
+                         "(tokens become device-timing-dependent)")
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--attn-bits", type=int, default=0,
                     help="override bits for attention projections (0 = base)")
@@ -85,13 +111,19 @@ def main():
                     EngineConfig(max_slots=args.slots, max_len=args.max_len,
                                  decode_chunk=args.decode_chunk,
                                  recalibrate_every=args.recal_every,
-                                 recalibrate_tokens=args.recal_tokens))
+                                 recalibrate_tokens=args.recal_tokens,
+                                 requant_threshold=args.requant_threshold,
+                                 double_buffer=args.double_buffer))
     print(f"kv-cache: dtype={eng.kvcfg.dtype} "
           f"group_size={eng.kvcfg.group_size or 'per-head-token'} "
           f"pallas={eng.kvcfg.use_pallas}")
+    gate = (f"delta-gate >= {args.requant_threshold}"
+            if args.requant_threshold >= 0 else "always-full")
+    print(f"weight kernels: pallas={eng.kncfg.use_pallas} "
+          f"packed={policy.packed}, requant: {gate}")
     cadence = (f"every {args.recal_tokens} tokens" if args.recal_tokens
                else f"every {args.recal_every} admissions")
-    print(f"decode-chunk: {args.decode_chunk} tokens/dispatch, "
+    print(f"decode-chunk: {eng.ecfg.decode_chunk} tokens/dispatch, "
           f"requant cadence: {cadence}")
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -106,9 +138,13 @@ def main():
     outs = eng.run_all()
     dt = time.time() - t0
     toks = sum(len(v) for v in outs.values())
+    skipped = eng.layers_skipped
+    total_layers = eng.layers_skipped + eng.layers_requantized
     print(f"arch={cfg.name} requests={len(outs)} tokens={toks} "
           f"wall={dt:.1f}s requants={eng.n_requants} "
-          f"host_syncs/token={eng.host_syncs / max(toks, 1):.2f}")
+          f"host_syncs/token={eng.host_syncs / max(toks, 1):.2f} "
+          f"requant_wall={eng.requant_wall_s:.2f}s "
+          f"gate_skipped_layers={skipped}/{total_layers}")
     for rid, v in sorted(outs.items())[:4]:
         print(f"  rid={rid}: {v[:10]}{'…' if len(v) > 10 else ''}")
 

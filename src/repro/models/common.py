@@ -27,14 +27,18 @@ ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 # linear + stats tap
 # ---------------------------------------------------------------------------
 
-def linear(x: Array, w, stats: Optional[dict] = None, name: str = "") -> Array:
-    """y = x @ wᵀ (w: (out,in) array or QuantizedTensor). Taps Σx² if stats dict given."""
+def linear(x: Array, w, stats: Optional[dict] = None, name: str = "",
+           kcfg=None) -> Array:
+    """y = x @ wᵀ (w: (out,in) array or QuantizedTensor). Taps Σx² if stats dict given.
+
+    ``kcfg`` (:class:`~repro.core.policy.KernelConfig`) selects the Pallas
+    ``ttq_gemm`` path for packed QuantizedTensors (None → jnp fallback)."""
     if stats is not None:
         xf = x.astype(jnp.float32)
         s = jnp.sum(xf * xf, axis=tuple(range(x.ndim - 1)))
         stats[name] = stats.get(name, 0.0) + s
     if isinstance(w, QuantizedTensor):
-        return ttq_matmul(x, w).astype(x.dtype)
+        return ttq_matmul(x, w, kcfg=kcfg).astype(x.dtype)
     return jnp.einsum("...d,od->...o", x, w.astype(x.dtype))
 
 
@@ -319,18 +323,18 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, cur_pos: Array,
 # MLPs
 # ---------------------------------------------------------------------------
 
-def glu_mlp(x, p, stats=None, prefix="mlp", act="silu"):
+def glu_mlp(x, p, stats=None, prefix="mlp", act="silu", kcfg=None):
     """Gated MLP (SwiGLU/GeGLU): (act(x@Wg) * (x@Wu)) @ Wd."""
-    g = linear(x, p["wg"], stats, f"{prefix}.wg")
-    u = linear(x, p["wu"], None)  # same input stats as wg — tap once
+    g = linear(x, p["wg"], stats, f"{prefix}.wg", kcfg)
+    u = linear(x, p["wu"], None, kcfg=kcfg)  # same input stats as wg — tap once
     h = ACT[act](g.astype(jnp.float32)).astype(x.dtype) * u
-    return linear(h, p["wd"], stats, f"{prefix}.wd")
+    return linear(h, p["wd"], stats, f"{prefix}.wd", kcfg)
 
 
-def plain_mlp(x, p, stats=None, prefix="mlp", act="gelu"):
-    h = linear(x, p["w1"], stats, f"{prefix}.w1")
+def plain_mlp(x, p, stats=None, prefix="mlp", act="gelu", kcfg=None):
+    h = linear(x, p["w1"], stats, f"{prefix}.w1", kcfg)
     h = ACT[act](h.astype(jnp.float32)).astype(x.dtype)
-    return linear(h, p["w2"], stats, f"{prefix}.w2")
+    return linear(h, p["w2"], stats, f"{prefix}.w2", kcfg)
 
 
 def init_glu_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16):

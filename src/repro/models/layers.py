@@ -44,12 +44,13 @@ def init_attn(key, cfg: ModelConfig, cross: bool = False):
     return p
 
 
-def _qkv(cfg: ModelConfig, p, xq: Array, xkv: Array, stats, prefix: str):
+def _qkv(cfg: ModelConfig, p, xq: Array, xkv: Array, stats, prefix: str,
+         kcfg=None):
     B = xq.shape[0]
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = linear(xq, p["wq"], stats, prefix + "wq").reshape(B, -1, H, hd)
-    k = linear(xkv, p["wk"], None).reshape(B, -1, Hkv, hd)
-    v = linear(xkv, p["wv"], None).reshape(B, -1, Hkv, hd)
+    q = linear(xq, p["wq"], stats, prefix + "wq", kcfg).reshape(B, -1, H, hd)
+    k = linear(xkv, p["wk"], None, kcfg=kcfg).reshape(B, -1, Hkv, hd)
+    v = linear(xkv, p["wv"], None, kcfg=kcfg).reshape(B, -1, Hkv, hd)
     if cfg.qk_norm:
         q = rmsnorm(q, p["qnorm"]["gamma"])
         k = rmsnorm(k, p["knorm"]["gamma"])
@@ -59,10 +60,11 @@ def _qkv(cfg: ModelConfig, p, xq: Array, xkv: Array, stats, prefix: str):
 
 def attn_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
                causal: bool = True, window: int = 0, pos0: int = 0,
-               x_cross: Optional[Array] = None, return_kv: bool = False):
+               x_cross: Optional[Array] = None, return_kv: bool = False,
+               kcfg=None):
     """Sequence-mode attention. x: (B,S,D). Cross-attn if x_cross given."""
     xkv = x_cross if x_cross is not None else x
-    q, k, v = _qkv(cfg, p, x, xkv, stats, prefix)
+    q, k, v = _qkv(cfg, p, x, xkv, stats, prefix, kcfg)
     S = x.shape[1]
     pos = jnp.arange(S) + pos0
     if cfg.pos == "rope" and x_cross is None:
@@ -71,7 +73,7 @@ def attn_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
     o = attention(q, k, v, causal=causal and x_cross is None, window=window,
                   soft_cap=cfg.attn_soft_cap)
     y = linear(o.transpose(0, 2, 1, 3).reshape(x.shape[0], S, -1), p["wo"],
-               stats, prefix + "wo")
+               stats, prefix + "wo", kcfg)
     if return_kv:
         return y, (k, v)
     return y
@@ -142,21 +144,21 @@ def _kv_attention(q: Array, state, cur, kvcfg, *, soft_cap: float = 0.0,
 
 
 def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
-                cross_kv=None, kvcfg=None):
+                cross_kv=None, kvcfg=None, kcfg=None):
     """x: (B,1,D); state: bf16 {'k','v'} or quantized {'k_q','k_s','v_q',
     'v_s'} caches (``kvcfg`` selects); pos: (B,) per-slot positions."""
     if cross_kv is not None:
         k, v = cross_kv
         B = x.shape[0]
         H, hd = cfg.n_heads, cfg.hd
-        q = linear(x, p["wq"]).reshape(B, 1, H, hd)
+        q = linear(x, p["wq"], kcfg=kcfg).reshape(B, 1, H, hd)
         if cfg.qk_norm:
             q = rmsnorm(q, p["qnorm"]["gamma"])
         q = q.transpose(0, 2, 1, 3)
         o = attention(q, k, v, causal=False, soft_cap=cfg.attn_soft_cap)
-        y = linear(o.transpose(0, 2, 1, 3).reshape(B, 1, -1), p["wo"])
+        y = linear(o.transpose(0, 2, 1, 3).reshape(B, 1, -1), p["wo"], kcfg=kcfg)
         return y, state
-    q, k, v = _qkv(cfg, p, x, x, None, "")
+    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg)
     if cfg.pos == "rope":
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
@@ -164,24 +166,24 @@ def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
         st = _kv_append(state, k, v, pos, kvcfg)
         o = _kv_attention(q, st, pos, kvcfg, soft_cap=cfg.attn_soft_cap,
                           window=window)
-        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
         return y, st
     kc = cache_update_batched(state["k"], k, pos)
     vc = cache_update_batched(state["v"], v, pos)
     o = decode_attention(q, kc, vc, pos, window=window,
                          soft_cap=cfg.attn_soft_cap)
-    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
+    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
     return y, {"k": kc, "v": vc}
 
 
 def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
-                        window: int, kvcfg=None):
+                        window: int, kvcfg=None, kcfg=None):
     """Windowed decode with a rolling (B,Hkv,W,hd) cache — O(W) per step.
 
     Slot validity needs no ordering (softmax is set-wise): slot i is valid iff
     i ≤ pos (cache fills left-to-right before wrapping). pos: (B,).
     """
-    q, k, v = _qkv(cfg, p, x, x, None, "")
+    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg)
     if cfg.pos == "rope":
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
@@ -191,12 +193,12 @@ def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
     if kvcfg is not None and kvcfg.quantized:
         st = _kv_append(state, k, v, wpos, kvcfg)
         o = _kv_attention(q, st, cur, kvcfg, soft_cap=cfg.attn_soft_cap)
-        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
         return y, st
     kc = cache_update_batched(state["k"], k, wpos)
     vc = cache_update_batched(state["v"], v, wpos)
     o = decode_attention(q, kc, vc, cur, soft_cap=cfg.attn_soft_cap)
-    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"])
+    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
     return y, {"k": kc, "v": vc}
 
 
@@ -217,33 +219,34 @@ def init_mla(key, cfg: ModelConfig):
     }
 
 
-def _mla_expand(cfg, p, latent, stats=None, prefix=""):
+def _mla_expand(cfg, p, latent, stats=None, prefix="", kcfg=None):
     """latent (B,S,r) → k_nope (B,H,S,nope), v (B,H,S,vd)."""
     m, H = cfg.mla, cfg.n_heads
-    kv = linear(latent, p["wkv_b"], stats, prefix + "wkv_b")
+    kv = linear(latent, p["wkv_b"], stats, prefix + "wkv_b", kcfg)
     B, S = kv.shape[0], kv.shape[1]
     kv = kv.reshape(B, S, H, m.qk_nope_dim + m.v_head_dim).transpose(0, 2, 1, 3)
     return kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
 
 
 def mla_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
-              pos0: int = 0, return_cache: bool = False):
+              pos0: int = 0, return_cache: bool = False, kcfg=None):
     m, H = cfg.mla, cfg.n_heads
     B, S, _ = x.shape
     qd = m.qk_nope_dim + m.qk_rope_dim
-    q = linear(x, p["wq"], stats, prefix + "wq").reshape(B, S, H, qd).transpose(0, 2, 1, 3)
+    q = linear(x, p["wq"], stats, prefix + "wq", kcfg).reshape(B, S, H, qd).transpose(0, 2, 1, 3)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
-    a = linear(x, p["wkv_a"], None)                       # shares input with wq
+    a = linear(x, p["wkv_a"], None, kcfg=kcfg)            # shares input with wq
     latent = rmsnorm(a[..., : m.kv_lora_rank], p["kv_norm"]["gamma"])
     k_rope = a[..., m.kv_lora_rank:][:, None]             # (B,1,S,rope) shared head
     pos = jnp.arange(S) + pos0
     q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
     k_rope = apply_rope(k_rope, pos, cfg.rope_theta)
-    k_nope, v = _mla_expand(cfg, p, latent, stats, prefix)
+    k_nope, v = _mla_expand(cfg, p, latent, stats, prefix, kcfg)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, H, S, m.qk_rope_dim))], axis=-1)
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     o = attention(qf, k, v, causal=True, scale=qd ** -0.5)
-    y = linear(o.transpose(0, 2, 1, 3).reshape(B, S, -1), p["wo"], stats, prefix + "wo")
+    y = linear(o.transpose(0, 2, 1, 3).reshape(B, S, -1), p["wo"], stats,
+               prefix + "wo", kcfg)
     if return_cache:
         return y, {"latent": latent, "k_rope": k_rope[:, 0]}
     return y
@@ -255,7 +258,7 @@ def mla_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), DTYPE)}
 
 
-def mla_decode(cfg: ModelConfig, p, x: Array, state, pos):
+def mla_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
     """Decode with the compressed cache (latent+rope per token — the MLA win).
 
     pos: (B,) per-slot positions.
@@ -263,9 +266,9 @@ def mla_decode(cfg: ModelConfig, p, x: Array, state, pos):
     m, H = cfg.mla, cfg.n_heads
     B = x.shape[0]
     qd = m.qk_nope_dim + m.qk_rope_dim
-    q = linear(x, p["wq"]).reshape(B, 1, H, qd).transpose(0, 2, 1, 3)
+    q = linear(x, p["wq"], kcfg=kcfg).reshape(B, 1, H, qd).transpose(0, 2, 1, 3)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
-    a = linear(x, p["wkv_a"])
+    a = linear(x, p["wkv_a"], kcfg=kcfg)
     latent_t = rmsnorm(a[..., : m.kv_lora_rank], p["kv_norm"]["gamma"])
     k_rope_t = a[..., m.kv_lora_rank:]
     q_rope = rope_decode(q_rope, pos, cfg.rope_theta)
@@ -273,13 +276,13 @@ def mla_decode(cfg: ModelConfig, p, x: Array, state, pos):
     latent = seq_update_batched(state["latent"], latent_t, pos)
     k_rope = seq_update_batched(state["k_rope"], k_rope_t[:, None]
                                 if k_rope_t.ndim == 2 else k_rope_t, pos)
-    k_nope, v = _mla_expand(cfg, p, latent)               # expand full cache
+    k_nope, v = _mla_expand(cfg, p, latent, kcfg=kcfg)    # expand full cache
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, None], (B, H, k_rope.shape[1], m.qk_rope_dim))],
         axis=-1)
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     o = decode_attention(qf, k, v, pos, scale=qd ** -0.5)
-    y = linear(o.reshape(B, 1, -1), p["wo"])
+    y = linear(o.reshape(B, 1, -1), p["wo"], kcfg=kcfg)
     return y, {"latent": latent, "k_rope": k_rope}
 
 
@@ -341,10 +344,12 @@ def _causal_conv(u: Array, w: Array, state: Optional[Array] = None):
 
 
 def rec_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
-              h0: Optional[Array] = None, return_state: bool = False):
+              h0: Optional[Array] = None, return_state: bool = False,
+              kcfg=None):
     """Sequence mode via associative scan (O(log S) depth — SP/long-context safe)."""
-    br = jax.nn.gelu(linear(x, p["w_branch"], stats, prefix + "w_branch").astype(jnp.float32))
-    u = linear(x, p["w_in"], None)
+    br = jax.nn.gelu(linear(x, p["w_branch"], stats, prefix + "w_branch",
+                            kcfg).astype(jnp.float32))
+    u = linear(x, p["w_in"], None, kcfg=kcfg)
     u, conv_state = _causal_conv(u, p["conv_w"])
     a, b = _rglru_coeffs(p, u)
     if h0 is not None:
@@ -354,7 +359,8 @@ def rec_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
         return (r[0] * l[0], r[0] * l[1] + r[1])
 
     _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
-    y = linear((br * h).astype(x.dtype), p["w_out"], stats, prefix + "w_out")
+    y = linear((br * h).astype(x.dtype), p["w_out"], stats,
+               prefix + "w_out", kcfg)
     if return_state:
         return y, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
     return y
@@ -367,13 +373,13 @@ def rec_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "conv": jnp.zeros((batch, h.conv_width - 1, dr), DTYPE)}
 
 
-def rec_decode(cfg: ModelConfig, p, x: Array, state, pos):
-    br = jax.nn.gelu(linear(x, p["w_branch"]).astype(jnp.float32))
-    u = linear(x, p["w_in"])
+def rec_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
+    br = jax.nn.gelu(linear(x, p["w_branch"], kcfg=kcfg).astype(jnp.float32))
+    u = linear(x, p["w_in"], kcfg=kcfg)
     u, conv_state = _causal_conv(u, p["conv_w"], state["conv"])
     a, b = _rglru_coeffs(p, u)
     h = a[:, 0] * state["h"] + b[:, 0]                     # (B, dr)
-    y = linear((br[:, 0] * h)[:, None].astype(x.dtype), p["w_out"])
+    y = linear((br[:, 0] * h)[:, None].astype(x.dtype), p["w_out"], kcfg=kcfg)
     return y, {"h": h, "conv": conv_state}
 
 
@@ -407,17 +413,17 @@ def init_ssd(key, cfg: ModelConfig):
     }
 
 
-def _ssd_split(cfg: ModelConfig, p, x, stats, prefix):
+def _ssd_split(cfg: ModelConfig, p, x, stats, prefix, kcfg=None):
     """Five projections; stats tapped once on w_x (w_z/w_B/w_C/w_dt alias it)."""
     s, D = cfg.ssm, cfg.d_model
     di = s.expand * D
     nh = di // s.head_dim
     gn = s.n_groups * s.d_state
-    z = linear(x, p["w_z"], None)
-    xr = linear(x, p["w_x"], stats, prefix + "w_x")
-    Br = linear(x, p["w_B"], None)
-    Cr = linear(x, p["w_C"], None)
-    dt = linear(x, p["w_dt"], None)
+    z = linear(x, p["w_z"], None, kcfg=kcfg)
+    xr = linear(x, p["w_x"], stats, prefix + "w_x", kcfg)
+    Br = linear(x, p["w_B"], None, kcfg=kcfg)
+    Cr = linear(x, p["w_C"], None, kcfg=kcfg)
+    dt = linear(x, p["w_dt"], None, kcfg=kcfg)
     return z, xr, Br, Cr, dt, di, nh, gn
 
 
@@ -472,9 +478,9 @@ def ssd_scan(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array, chunk: int,
 
 
 def ssd_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
-              state=None, return_state: bool = False):
+              state=None, return_state: bool = False, kcfg=None):
     s = cfg.ssm
-    z, xr, Br, Cr, dt, di, nh, gn = _ssd_split(cfg, p, x, stats, prefix)
+    z, xr, Br, Cr, dt, di, nh, gn = _ssd_split(cfg, p, x, stats, prefix, kcfg)
     st = state or {}
     xc, cs_x = _causal_conv(xr, p["conv_x"], st.get("conv_x"))
     Bc, cs_B = _causal_conv(Br, p["conv_B"], st.get("conv_B"))
@@ -498,7 +504,7 @@ def ssd_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
     y = y + p["Dskip"][None, None, :, None] * xi                    # D·x skip
     y = y.reshape(*x.shape[:2], di)
     y = rmsnorm(y.astype(x.dtype), p["norm"]["gamma"]) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
-    out = linear(y, p["w_out"], stats, prefix + "w_out")
+    out = linear(y, p["w_out"], stats, prefix + "w_out", kcfg)
     if return_state:
         return out, {"h": h_last, "conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
     return out
@@ -516,10 +522,10 @@ def ssd_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "conv_C": jnp.zeros((batch, w, gn), DTYPE)}
 
 
-def ssd_decode(cfg: ModelConfig, p, x: Array, state, pos):
+def ssd_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
     """Single-step SSM recurrence h ← e^{-A·dt}h + dt·B⊗x ; y = C·h + D·x."""
     s = cfg.ssm
-    z, xr, Br, Cr, dt, di, nh, gn = _ssd_split(cfg, p, x, None, "")
+    z, xr, Br, Cr, dt, di, nh, gn = _ssd_split(cfg, p, x, None, "", kcfg)
     xc, cs_x = _causal_conv(xr, p["conv_x"], state["conv_x"])
     Bc, cs_B = _causal_conv(Br, p["conv_B"], state["conv_B"])
     Cc, cs_C = _causal_conv(Cr, p["conv_C"], state["conv_C"])
@@ -537,7 +543,7 @@ def ssd_decode(cfg: ModelConfig, p, x: Array, state, pos):
     y = jnp.einsum("bhpn,bhn->bhp", h, Cm) + p["Dskip"][None, :, None] * xi
     y = y.reshape(B, 1, di)
     y = rmsnorm(y.astype(x.dtype), p["norm"]["gamma"]) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
-    out = linear(y, p["w_out"])
+    out = linear(y, p["w_out"], kcfg=kcfg)
     return out, {"h": h, "conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
 
 
@@ -567,22 +573,25 @@ def _router(cfg, p, x2, stats, prefix):
     return top_p, top_i
 
 
-def _expert_mm(h, w):
-    """Per-expert matmul: h (E,C,D) × w (E,F,D) → (E,C,F). QT-aware."""
+def _expert_mm(h, w, kcfg=None):
+    """Per-expert matmul: h (E,C,D) × w (E,F,D) → (E,C,F). QT-aware: the
+    vmapped kernel path batches the Pallas ttq_gemm over the expert dim
+    (one dispatch with a leading batch grid axis, not E dispatches)."""
     from repro.core.ttq import QuantizedTensor, ttq_matmul
     if isinstance(w, QuantizedTensor):
-        return jax.vmap(ttq_matmul)(h, w).astype(h.dtype)
+        return jax.vmap(lambda hh, ww: ttq_matmul(hh, ww, kcfg=kcfg))(
+            h, w).astype(h.dtype)
     return jnp.einsum("ecd,efd->ecf", h, w.astype(h.dtype))
 
 
-def _expert_glu(w, h, act, stats=None, prefix="", wts=None):
+def _expert_glu(w, h, act, stats=None, prefix="", wts=None, kcfg=None):
     """w: stacked expert params {wg,wu,wd} (E,·,·); h: (E,C,D).
 
     ``wts`` (E,C) optionally weights the TTQ stats accumulation (dense path:
     routing mass, so unrouted tokens don't pollute the per-expert diagonal).
     """
-    g = _expert_mm(h, w["wg"])
-    u = _expert_mm(h, w["wu"])
+    g = _expert_mm(h, w["wg"], kcfg)
+    u = _expert_mm(h, w["wu"], kcfg)
     a = ACT[act](g.astype(jnp.float32)).astype(h.dtype) * u
     if stats is not None:
         hf, af = h.astype(jnp.float32), a.astype(jnp.float32)
@@ -591,10 +600,11 @@ def _expert_glu(w, h, act, stats=None, prefix="", wts=None):
             jnp.einsum("ec,ecd,ecd->ed", wt, hf, hf)
         stats[prefix + "experts.wd"] = stats.get(prefix + "experts.wd", 0.0) + \
             jnp.einsum("ec,ecf,ecf->ef", wt, af, af)
-    return _expert_mm(a, w["wd"])
+    return _expert_mm(a, w["wd"], kcfg)
 
 
-def moe_apply_dense(cfg: ModelConfig, p, x: Array, stats, prefix: str):
+def moe_apply_dense(cfg: ModelConfig, p, x: Array, stats, prefix: str,
+                    kcfg=None):
     """Exact MoE: every expert computes every token, combined by gates.
 
     O(E/topk) extra FLOPs — for tests, training of small models, and as the
@@ -607,7 +617,8 @@ def moe_apply_dense(cfg: ModelConfig, p, x: Array, stats, prefix: str):
     gate = jnp.zeros((x2.shape[0], e.n_experts), jnp.float32)
     gate = jax.vmap(lambda g, i, v: g.at[i].add(v))(gate, top_i, top_p)
     h = jnp.broadcast_to(x2[None], (e.n_experts, x2.shape[0], D))
-    y_all = _expert_glu(p["experts"], h, cfg.act, stats, prefix, wts=gate.T)
+    y_all = _expert_glu(p["experts"], h, cfg.act, stats, prefix, wts=gate.T,
+                        kcfg=kcfg)
     y = jnp.einsum("etd,te->td", y_all.astype(jnp.float32), gate).astype(x.dtype)
     return y.reshape(B, S, D)
 

@@ -65,9 +65,9 @@ def _embed(cfg, params, tokens, pctx, pos0: int = 0):
     return _wsc(x, P(dp, None, None), pctx)
 
 
-def _head(cfg, params, x, pctx):
+def _head(cfg, params, x, pctx, kcfg=None):
     w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = linear(x, w).astype(jnp.float32)
+    logits = linear(x, w, kcfg=kcfg).astype(jnp.float32)
     dp = None if pctx is None else pctx.data_axes
     mp = None if pctx is None else pctx.model_axis
     return _wsc(logits, P(dp, None, mp), pctx)
@@ -81,7 +81,7 @@ def _encode(cfg, params, frames, pctx, stats_on=False):
 
 
 def forward(cfg: ModelConfig, params, batch, *, collect_stats=False, pctx=None,
-            want_state=False, max_len=0, remat=False):
+            want_state=False, max_len=0, remat=False, kcfg=None):
     """Full-sequence forward. Returns (logits, stats, states).
 
     stats: {'stack': [per-run dict], 'enc_stack': [...]} of Σx² leaves
@@ -99,11 +99,11 @@ def forward(cfg: ModelConfig, params, batch, *, collect_stats=False, pctx=None,
     x, run_stats, states = S.apply_stack_seq(
         cfg, params["stack"], S.stack_spec(cfg), x, stats_on=collect_stats,
         pctx=pctx, enc_out=enc_out, want_state=want_state, max_len=max_len,
-        remat=remat)
+        remat=remat, kcfg=kcfg)
     if collect_stats:
         stats["stack"] = run_stats
     x = norm(x, params["final_norm"])
-    logits = _head(cfg, params, x, pctx)
+    logits = _head(cfg, params, x, pctx, kcfg)
     return logits, (stats if collect_stats else None), states
 
 
@@ -169,7 +169,7 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
 
 
 def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
-                kvcfg=None):
+                kvcfg=None, kcfg=None):
     """token: (B,1) int32; pos: (B,) int32 per-slot positions (scalar ok).
 
     ``kvcfg`` must match the layout ``state`` was initialized with (it is a
@@ -182,9 +182,9 @@ def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
     x = _wsc(x, P(dp, None, None), pctx)
     x, new_states = S.apply_stack_decode(cfg, params["stack"], S.stack_spec(cfg),
                                          state["stack"], x, pos, pctx=pctx,
-                                         kvcfg=kvcfg)
+                                         kvcfg=kvcfg, kcfg=kcfg)
     x = norm(x, params["final_norm"])
-    logits = _head(cfg, params, x, pctx)
+    logits = _head(cfg, params, x, pctx, kcfg)
     new_state = dict(state)
     new_state["stack"] = new_states
     return logits[:, 0], new_state
@@ -192,7 +192,7 @@ def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
 
 def decode_many(cfg: ModelConfig, params, state, token, pos, done, remaining,
                 key, *, K: int, max_len: int, temperature: float = 0.0,
-                eos_token: int = -1, pctx=None, kvcfg=None):
+                eos_token: int = -1, pctx=None, kvcfg=None, kcfg=None):
     """Fused multi-token decode: ``lax.scan`` over ``K`` decode steps keeping
     sampling, EOS detection, per-slot done-masking, budget accounting, and
     position advance entirely on device — one host transfer per K tokens
@@ -221,7 +221,7 @@ def decode_many(cfg: ModelConfig, params, state, token, pos, done, remaining,
         st, tok, p, dn, rem, k = carry
         p_in = jnp.minimum(p, max_len - 1)      # done lanes: in-bounds writes
         logits, st = decode_step(cfg, params, st, tok, p_in, pctx=pctx,
-                                 kvcfg=kvcfg)
+                                 kvcfg=kvcfg, kcfg=kcfg)
         k, sk = jax.random.split(k)
         nxt = sample_logits(logits, sk, temperature)
         live = ~dn

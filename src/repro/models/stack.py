@@ -113,15 +113,15 @@ def layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     raise ValueError(kind)
 
 
-def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx):
+def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg=None):
     mk = mlp_kind(cfg, kind)
     if mk == "none":
         return x
     h = norm(x, p["ln2"])
     if mk == "glu":
-        y = glu_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act)
+        y = glu_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act, kcfg)
     elif mk == "plain":
-        y = plain_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act)
+        y = plain_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act, kcfg)
     else:  # moe
         pp = prefix + "mlp."
         if pctx is not None and pctx.moe_impl == "a2a" and pctx.mesh is not None:
@@ -130,16 +130,18 @@ def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx):
                 for k_, v_ in moe_stats.items():
                     stats[k_] = stats.get(k_, 0.0) + v_
         else:
-            y = L.moe_apply_dense(cfg, p["mlp"], h, stats, pp)
+            y = L.moe_apply_dense(cfg, p["mlp"], h, stats, pp, kcfg=kcfg)
         if cfg.moe.n_shared:
-            y = y + glu_mlp(h, p["mlp"]["shared"], stats, pp + "shared", cfg.act)
+            y = y + glu_mlp(h, p["mlp"]["shared"], stats, pp + "shared",
+                            cfg.act, kcfg)
     y = _ckpt_name(y, "mlp_out")   # post-AR activation
     return x + y
 
 
 def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
                     pctx=None, enc_out=None, want_state: bool = False,
-                    max_len: int = 0, pos0: int = 0, state=None, kvcfg=None):
+                    max_len: int = 0, pos0: int = 0, state=None, kvcfg=None,
+                    kcfg=None):
     """Sequence mode (train / prefill).  Returns (x, state|None)."""
     h = norm(x, p["ln1"])
     st = None
@@ -148,7 +150,7 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
         if want_state:
             y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                                      causal=kind != "enc", window=window,
-                                     pos0=pos0, return_kv=True)
+                                     pos0=pos0, return_kv=True, kcfg=kcfg)
             ml = min(max_len, window) if window else max_len
             S = min(k.shape[2], ml)
             kk, vv = k[:, :, -S:], v[:, :, -S:]
@@ -159,85 +161,93 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
             st = L.build_kv_state(cfg, x.shape[0], ml, kk, vv, kvcfg)
         else:
             y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
-                             causal=kind != "enc", window=window, pos0=pos0)
+                             causal=kind != "enc", window=window, pos0=pos0,
+                             kcfg=kcfg)
     elif kind == "xdec":
         if want_state:
             y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
-                                     causal=True, pos0=pos0, return_kv=True)
+                                     causal=True, pos0=pos0, return_kv=True,
+                                     kcfg=kcfg)
             st = L.build_kv_state(cfg, x.shape[0], max_len, k, v, kvcfg)
         else:
             y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
-                             causal=True, pos0=pos0)
+                             causal=True, pos0=pos0, kcfg=kcfg)
         x = x + y
         hx = norm(x, p["lnx"])
         if want_state:
-            yx, (xk, xv) = L.attn_apply(cfg, p["xattn"], hx, stats, prefix + "xattn.",
-                                        x_cross=enc_out, return_kv=True)
+            yx, (xk, xv) = L.attn_apply(cfg, p["xattn"], hx, stats,
+                                        prefix + "xattn.", x_cross=enc_out,
+                                        return_kv=True, kcfg=kcfg)
             st["xk"], st["xv"] = xk.astype(L.DTYPE), xv.astype(L.DTYPE)
         else:
             yx = L.attn_apply(cfg, p["xattn"], hx, stats, prefix + "xattn.",
-                              x_cross=enc_out)
+                              x_cross=enc_out, kcfg=kcfg)
         x = x + yx
-        return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx), st
+        return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg), st
     elif kind == "mla":
         if want_state:
             y, cache = L.mla_apply(cfg, p["mix"], h, stats, prefix + "mix.",
-                                   pos0=pos0, return_cache=True)
+                                   pos0=pos0, return_cache=True, kcfg=kcfg)
             z = L.mla_init_state(cfg, x.shape[0], max_len)
             st = {k_: jax.lax.dynamic_update_slice(z[k_], cache[k_].astype(L.DTYPE), (0, 0, 0))
                   for k_ in ("latent", "k_rope")}
         else:
-            y = L.mla_apply(cfg, p["mix"], h, stats, prefix + "mix.", pos0=pos0)
+            y = L.mla_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                            pos0=pos0, kcfg=kcfg)
     elif kind == "rec":
         if want_state:
             y, st = L.rec_apply(cfg, p["mix"], h, stats, prefix + "mix.",
-                                return_state=True)
+                                return_state=True, kcfg=kcfg)
         else:
-            y = L.rec_apply(cfg, p["mix"], h, stats, prefix + "mix.")
+            y = L.rec_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                            kcfg=kcfg)
     elif kind == "ssd":
         if want_state:
             y, st = L.ssd_apply(cfg, p["mix"], h, stats, prefix + "mix.",
-                                return_state=True)
+                                return_state=True, kcfg=kcfg)
         else:
-            y = L.ssd_apply(cfg, p["mix"], h, stats, prefix + "mix.")
+            y = L.ssd_apply(cfg, p["mix"], h, stats, prefix + "mix.",
+                            kcfg=kcfg)
     else:
         raise ValueError(kind)
     y = _ckpt_name(y, "mix_out")    # post-AR activation
     x = x + y
-    return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx), st
+    return _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg), st
 
 
 def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *,
-                       pctx=None, kvcfg=None):
+                       pctx=None, kvcfg=None, kcfg=None):
     """Single-token decode; pos: (B,) per-slot positions. Returns (x, new_state)."""
     h = norm(x, p["ln1"])
     if kind in ("attn", "lattn"):
         window = cfg.hybrid.window if (kind == "lattn" and cfg.hybrid) else 0
         if window:
             y, st = L.attn_decode_rolling(cfg, p["mix"], h, state, pos, window,
-                                          kvcfg)
+                                          kvcfg, kcfg)
         else:
-            y, st = L.attn_decode(cfg, p["mix"], h, state, pos, kvcfg=kvcfg)
+            y, st = L.attn_decode(cfg, p["mix"], h, state, pos, kvcfg=kvcfg,
+                                  kcfg=kcfg)
     elif kind == "xdec":
         self_kv = {k_: v_ for k_, v_ in state.items() if k_ not in ("xk", "xv")}
-        y, st = L.attn_decode(cfg, p["mix"], h, self_kv, pos, kvcfg=kvcfg)
+        y, st = L.attn_decode(cfg, p["mix"], h, self_kv, pos, kvcfg=kvcfg,
+                              kcfg=kcfg)
         x = x + y
         hx = norm(x, p["lnx"])
         yx, _ = L.attn_decode(cfg, p["xattn"], hx, None, pos,
-                              cross_kv=(state["xk"], state["xv"]))
+                              cross_kv=(state["xk"], state["xv"]), kcfg=kcfg)
         x = x + yx
         st = {**st, "xk": state["xk"], "xv": state["xv"]}
-        return _mlp_apply(cfg, kind, p, x, None, "", pctx), st
+        return _mlp_apply(cfg, kind, p, x, None, "", pctx, kcfg), st
     elif kind == "mla":
-        y, st = L.mla_decode(cfg, p["mix"], h, state, pos)
+        y, st = L.mla_decode(cfg, p["mix"], h, state, pos, kcfg)
     elif kind == "rec":
-        y, st = L.rec_decode(cfg, p["mix"], h, state, pos)
+        y, st = L.rec_decode(cfg, p["mix"], h, state, pos, kcfg)
     elif kind == "ssd":
-        y, st = L.ssd_decode(cfg, p["mix"], h, state, pos)
+        y, st = L.ssd_decode(cfg, p["mix"], h, state, pos, kcfg)
     else:
         raise ValueError(kind)
     x = x + y
-    return _mlp_apply(cfg, kind, p, x, None, "", pctx), st
+    return _mlp_apply(cfg, kind, p, x, None, "", pctx, kcfg), st
 
 
 # ---------------------------------------------------------------------------
@@ -270,7 +280,7 @@ def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int,
 
 def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                     pctx=None, enc_out=None, want_state=False, max_len=0,
-                    remat=False, kvcfg=None):
+                    remat=False, kvcfg=None, kcfg=None):
     """Train / prefill over all runs. Returns (x, stats_list, state_list).
 
     With remat, the mixer/MLP outputs are checkpoint-tagged: saving the
@@ -289,7 +299,7 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                 h, st = apply_layer_seq(cfg, kind, up[f"u{j}"], h, stats,
                                         f"u{j}.", pctx=pctx, enc_out=enc_out,
                                         want_state=want_state, max_len=max_len,
-                                        kvcfg=kvcfg)
+                                        kvcfg=kvcfg, kcfg=kcfg)
                 if st is not None:
                     states[f"u{j}"] = st
             return h, (stats, states)
@@ -309,7 +319,7 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
 
 
 def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
-                       *, pctx=None, kvcfg=None):
+                       *, pctx=None, kvcfg=None, kcfg=None):
     new_states = []
     for (kinds, n), rp, rs in zip(spec, run_params, run_states):
         def body(carry, xs):
@@ -319,7 +329,7 @@ def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
             for j, kind in enumerate(kinds):
                 h, st = apply_layer_decode(cfg, kind, up[f"u{j}"], h,
                                            st_in[f"u{j}"], pos, pctx=pctx,
-                                           kvcfg=kvcfg)
+                                           kvcfg=kvcfg, kcfg=kcfg)
                 st_out[f"u{j}"] = st
             return h, st_out
 

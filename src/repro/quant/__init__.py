@@ -15,16 +15,18 @@ Tied together by :class:`QuantizedModel`:
 ``calibrate(stats) → requantize() → decode_params``.
 """
 from repro.core.kvquant import BF16_KV, KVCacheConfig
-from repro.core.policy import NO_QUANT, QuantPolicy, override, ttq_policy
+from repro.core.policy import (FUSED_KERNELS, KernelConfig, NO_QUANT,
+                               QuantPolicy, override, ttq_policy)
 
-from .api import lowrank_tree, quantize_params
+from .api import FusedRequantPlan, lowrank_tree, quantize_params
 from .model import QuantizedModel
 from .registry import (Quantizer, get_quantizer, register_quantizer,
                        registered_methods)
 from .session import CalibrationSession
 
 __all__ = [
-    "BF16_KV", "CalibrationSession", "KVCacheConfig", "NO_QUANT",
+    "BF16_KV", "CalibrationSession", "FUSED_KERNELS", "FusedRequantPlan",
+    "KVCacheConfig", "KernelConfig", "NO_QUANT",
     "QuantPolicy", "QuantizedModel",
     "Quantizer", "get_quantizer", "lowrank_tree", "override",
     "quantize_params", "register_quantizer", "registered_methods",

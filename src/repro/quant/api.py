@@ -13,12 +13,27 @@ parameter path it:
 4. asks the quantizer for the :class:`~repro.core.ttq.QuantizedTensor`,
    vmapping over leading run / expert dims.
 
+Two execution strategies share the same per-path resolution:
+
+* :func:`quantize_params` — the eager per-leaf driver (one small dispatch
+  chain per leaf; the reference semantics and the fallback);
+* :class:`FusedRequantPlan` — the serving hot path: leaves are grouped into
+  *families* sharing (d', d, quant settings), each family is ONE jitted
+  device program that stacks the member weights (leading run / expert dims
+  flattened), computes the AWQ diagonals, subtracts the precomputed
+  low-rank residuals, and quantizes the whole stack in a single Pallas
+  ``ttq_quantize`` dispatch (or one vmapped jnp quantize when the packed
+  kernel does not apply).  A whole-model requantization is a handful of
+  async-dispatched programs instead of hundreds of per-leaf ops.
+
 ``repro.core`` keeps thin delegating shims so historical imports
 (``repro.core.quantize_params``) continue to work.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,6 +161,320 @@ def quantize_params(params, stats, policy: QuantPolicy, *,
         return fn(leaf, stat, ba)
 
     return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# fused whole-tree requantization (the serving hot path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Member:
+    """One quantizable leaf inside a family (host-side bookkeeping only)."""
+
+    path: tuple                    # jax key path into the params tree
+    path_str: str
+    lead: tuple                    # leading run / expert dims, () for 2-D
+    dp: int
+    d: int
+    eff: QuantPolicy               # override-resolved policy for this path
+    stat_get: Optional[Callable]   # stats tree → lead+(d,) array; None → zeros
+    has_ba: bool
+
+    @property
+    def n(self) -> int:
+        out = 1
+        for s in self.lead:
+            out *= s
+        return out
+
+
+class FusedRequantPlan:
+    """Whole-model requantization as one jitted device program per family.
+
+    Built once per (params structure × stats structure × policy).  Families
+    group leaves by ``(d', d, quant settings, low-rank presence)``; each
+    family's program concatenates the member weights into one (N, d', d)
+    stack, computes the per-row AWQ diagonal D from the stacked statistics,
+    subtracts the precomputed low-rank residual, and quantizes in ONE
+    dispatch — the Pallas ``ttq_quantize`` kernel (batched over N via vmap:
+    a single pallas_call with a leading batch grid axis) when the policy's
+    packed path + :class:`~repro.core.policy.KernelConfig` apply, else one
+    vmapped jnp ``awq_quantize``.  Either way the whole family is a single
+    XLA program, async-dispatched, whose results double-buffer under
+    :class:`~repro.quant.model.QuantizedModel`.
+
+    Methods with a custom ``quantize_weight`` (anything that is not the
+    registry's ``_BaseQuantizer`` closed form) fall back to the eager
+    per-leaf path for those leaves — correctness first.
+
+    ``run(params, stats, count, lowrank_tree, only=...)`` returns the full
+    quantized parameter tree; ``only`` (a set of family keys) restricts the
+    dispatch to a subset — the delta-gate path — with the remaining leaves
+    filled from ``reuse`` (previous :class:`QuantizedTensor`s by path).
+    """
+
+    def __init__(self, params, stats, policy: QuantPolicy, *,
+                 acfg: Optional[AWQConfig] = None, lowrank_tree=None):
+        from .registry import _BaseQuantizer
+        base = policy if acfg is None else policy.with_(acfg=acfg)
+        self.policy = policy
+        self.families: Dict[tuple, List[_Member]] = {}
+        self.eager: List[_Member] = []
+        self._family_fns: Dict[tuple, Callable] = {}
+        self._drift_fn = None
+
+        def visit(path, leaf):
+            ps = _path_str(path)
+            if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2 or leaf.ndim > 4:
+                return
+            eff = base.resolve(ps)
+            if not eff.quantizes(ps.split(".")[-1]) or not eff.quantizes(ps):
+                return
+            qz = eff.quantizer
+            parts = ps.split(".")
+            dp, d = leaf.shape[-2:]
+            lead = tuple(leaf.shape[:-2])
+            stat_get: Optional[Callable] = None
+            if qz.requires_stats:
+                if parts[0] not in ("stack", "enc_stack"):
+                    if not (isinstance(stats, dict) and ps in stats
+                            and leaf.ndim == 2):
+                        return
+                    stat_get = (lambda st, _k=ps: st[_k])
+                else:
+                    run = (stats or {}).get(parts[0])
+                    if run is None:
+                        return
+                    idx = int(parts[1])
+                    rel = tuple(parts[2:])
+                    if _lookup_stats(run[idx], rel) is None:
+                        return
+                    # resolve the concrete key once (alias + expert fallback)
+                    key = _stats_key(rel)
+                    if key not in run[idx]:
+                        leafname = "wg" if rel[-1] in ("wg", "wu") else "wd"
+                        key = ".".join([*rel[:-1], leafname])
+                    stat_get = (lambda st, _r=parts[0], _i=idx, _k=key:
+                                st[_r][_i][_k])
+            elif not ((parts[0] in ("stack", "enc_stack") and leaf.ndim >= 3)
+                      or (parts[0] not in ("stack", "enc_stack")
+                          and leaf.ndim == 2)):
+                return                      # stacked 1-D params are not weights
+            ba = _tree_get(lowrank_tree, path) if lowrank_tree is not None \
+                else None
+            has_ba = ba is not None
+            mem = _Member(path=tuple(path), path_str=ps, lead=lead, dp=dp,
+                          d=d, eff=eff, stat_get=stat_get, has_ba=has_ba)
+            # eager per-leaf fallback for (a) custom closed forms and (b)
+            # leaves the precomputed low-rank tree does not cover but whose
+            # policy rank demands an inline SVD (matches quantize_params)
+            inline_svd = (not has_ba and eff.rank > 0
+                          and min(dp, d) > eff.rank)
+            if (type(qz).quantize_weight is not _BaseQuantizer.quantize_weight
+                    or inline_svd):
+                self.eager.append(mem)
+                return
+            qcfg = eff.qcfg
+            if qcfg.layout != "row":
+                qcfg = dataclasses.replace(qcfg, layout="row")
+            # eff.rank is part of the key: members with low-rank factors
+            # concatenate their (d', r)/(r, d) B/A stacks, so mixed ranks
+            # (per-layer rank overrides) must land in separate families
+            key = (dp, d, qcfg, eff.acfg, eff.method, eff.packed, has_ba,
+                   eff.rank)
+            self.families.setdefault(key, []).append(mem)
+
+        jax.tree_util.tree_map_with_path(lambda p, l: visit(p, l) or None,
+                                         params)
+        for key in self.families:
+            self._family_fns[key] = jax.jit(partial(self._run_family, key))
+
+    # ------------------------------------------------------------- execution
+
+    @property
+    def n_layers(self) -> int:
+        """Total quantized-leaf count (stacked leaves count once per path)."""
+        return sum(len(ms) for ms in self.families.values()) + len(self.eager)
+
+    def _gather(self, members, params, stats, count, lowrank_tree):
+        countf = jnp.asarray(count, jnp.float32)
+        Ws, Ss, Bs, As = [], [], [], []
+        for m in members:
+            Ws.append(_tree_get(params, m.path))
+            if m.stat_get is not None:
+                Ss.append(m.stat_get(stats))
+            else:
+                Ss.append(jnp.zeros(m.lead + (m.d,), jnp.float32))
+            if m.has_ba:
+                ba = _tree_get(lowrank_tree, m.path)
+                Bs.append(ba["B"])
+                As.append(ba["A"])
+        return Ws, Ss, countf, Bs, As
+
+    def _run_family(self, key, Ws, Ss, countf, Bs, As):
+        """ONE device program: stack → D → (W−BA)∘D → quantize → split."""
+        from repro.core.qdq import pack_bits
+        from repro.core.ttq import QuantizedTensor
+        from .registry import get_quantizer
+        dp, d, qcfg, eff_acfg, method, packed_on, has_ba, _rank = key
+        members = self.families[key]
+        qz = get_quantizer(method)
+        W = jnp.concatenate([w.reshape(-1, dp, d).astype(jnp.float32)
+                             for w in Ws], axis=0)              # (N, d', d)
+        S = jnp.concatenate([s.reshape(-1, d) for s in Ss], axis=0)
+        D = jax.vmap(lambda s: qz.diag(s, countf, eff_acfg, d))(S)   # (N, d)
+        if has_ba:
+            B = jnp.concatenate([b.reshape(-1, dp, b.shape[-1])
+                                 for b in Bs], axis=0)
+            A = jnp.concatenate([a.reshape(-1, a.shape[-2], d)
+                                 for a in As], axis=0)
+            W = W - jnp.einsum("nor,nrd->nod", B.astype(jnp.float32),
+                               A.astype(jnp.float32))
+        per = 32 // qcfg.bits if 32 % qcfg.bits == 0 else 0
+        packable = packed_on and per > 0 and d % per == 0
+        kernel_ok = (packable and self.policy.kernel.use_pallas
+                     and qcfg.bits in (2, 4, 8) and not qcfg.symmetric
+                     and qcfg.nu == 1.0)
+        if kernel_ok:
+            from repro.kernels import ops as kops
+            kw = self.policy.kernel.quant_kw
+            pk, Sc, Z = jax.vmap(lambda w, dd: kops.ttq_quantize(
+                w, dd, bits=qcfg.bits, group_size=qcfg.group_size, **kw))(W, D)
+            wint = None
+        else:
+            from repro.core.awq import awq_quantize
+            wint, Sc, Z = jax.vmap(
+                lambda w, dd: awq_quantize(w, dd, qcfg))(W, D)
+            pk = pack_bits(wint.astype(jnp.int32), qcfg.bits) if packable \
+                else None
+            if packable:
+                wint = None
+        dinv = (1.0 / D).astype(jnp.float32)
+        out, off = [], 0
+        for i, m in enumerate(members):
+            n = m.n
+            sl = slice(off, off + n)
+            off += n
+
+            def shaped(x, m=m):
+                return None if x is None else x.reshape(m.lead + x.shape[1:])
+            out.append(QuantizedTensor(
+                wint=shaped(None if wint is None else wint[sl]),
+                packed=shaped(None if pk is None else pk[sl]),
+                scale=shaped(Sc[sl]), zero=shaped(Z[sl]),
+                dinv=shaped(dinv[sl]),
+                B=Bs[i] if has_ba else None, A=As[i] if has_ba else None,
+                bits=qcfg.bits, group_size=qcfg.group_size,
+                out_features=dp, in_features=d))
+        return out
+
+    def _eager_leaf(self, m: _Member, params, stats, count, lowrank_tree):
+        """Per-leaf fallback for methods with a custom closed form."""
+        countf = jnp.asarray(count, jnp.float32)
+        leaf = _tree_get(params, m.path)
+        stat = m.stat_get(stats) if m.stat_get is not None \
+            else jnp.zeros(m.lead + (m.d,), jnp.float32)
+        ba = _tree_get(lowrank_tree, m.path) if m.has_ba else None
+        qz = m.eff.quantizer
+
+        def quant_one(W, s, BA=None):
+            B = A = None
+            if BA is not None:
+                B, A = BA["B"], BA["A"]
+            elif m.eff.rank > 0 and min(W.shape) > m.eff.rank:
+                B, A = svd_factors(W, m.eff.rank)
+            return qz.quantize_weight(W, s, countf, m.eff, m.eff.acfg, B, A)
+
+        if ba is None:
+            fn = lambda W, s: quant_one(W, s, None)
+            for _ in range(len(m.lead)):
+                fn = jax.vmap(fn)
+            return fn(leaf, stat)
+        fn = quant_one
+        for _ in range(len(m.lead)):
+            fn = jax.vmap(fn)
+        return fn(leaf, stat, ba)
+
+    def run(self, params, stats, count, lowrank_tree=None, *, only=None,
+            reuse: Optional[Dict[str, Any]] = None):
+        """Quantize the tree; families not in ``only`` (when given) are
+        filled from ``reuse`` ({path_str: QuantizedTensor}) or left fp."""
+        results: Dict[str, Any] = dict(reuse or {})
+        for key, members in self.families.items():
+            if only is not None and key not in only:
+                continue
+            args = self._gather(members, params, stats, count, lowrank_tree)
+            qts = self._family_fns[key](*args)
+            for m, qt in zip(members, qts):
+                results[m.path_str] = qt
+        for m in self.eager:
+            if only is not None and ("eager", m.path_str) not in only:
+                continue
+            results[m.path_str] = self._eager_leaf(m, params, stats, count,
+                                                   lowrank_tree)
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: results.get(_path_str(p), l), params)
+
+    # ------------------------------------------------------------ delta gate
+
+    def drift(self, stats, count, last_D: Dict[str, Any]) -> Dict[str, float]:
+        """Relative-L2 drift of the activation diagonal D per leaf since the
+        snapshot in ``last_D`` ({path_str: (N, d) f32}).  Leaves without a
+        snapshot are omitted (the caller must requantize them).  One small
+        jitted program + one host transfer of scalars per call."""
+        members = [m for ms in self.families.values() for m in ms] + self.eager
+        tracked = [m for m in members if m.path_str in last_D]
+        if not tracked:
+            return {}
+        if self._drift_fn is None:
+            def fn(stats, countf, prevs):
+                outs = []
+                for m, prev in zip(tracked, prevs):
+                    s = (m.stat_get(stats) if m.stat_get is not None
+                         else jnp.zeros(m.lead + (m.d,))).reshape(-1, m.d)
+                    qz = m.eff.quantizer
+                    Dn = jax.vmap(lambda ss: qz.diag(ss, countf, m.eff.acfg,
+                                                     m.d))(s)
+                    Dp = prev.reshape(-1, m.d)
+                    num = jnp.linalg.norm(Dn - Dp, axis=-1)
+                    den = jnp.linalg.norm(Dp, axis=-1) + 1e-12
+                    outs.append(jnp.max(num / den))
+                return jnp.stack(outs)
+            self._drift_fn = jax.jit(fn)
+            self._drift_members = [m.path_str for m in tracked]
+        if [m.path_str for m in tracked] != self._drift_members:
+            self._drift_fn = None           # snapshot set changed → rebuild
+            return self.drift(stats, count, last_D)
+        vals = self._drift_fn(stats, jnp.asarray(count, jnp.float32),
+                              [last_D[m.path_str] for m in tracked])
+        import numpy as np
+        return {m.path_str: float(v) for m, v in zip(tracked,
+                                                     np.asarray(vals))}
+
+    def gate(self, drifts: Dict[str, float], threshold: float,
+             have: set) -> tuple:
+        """Family keys to requantize: any member whose drift ≥ threshold, or
+        without a previous QuantizedTensor (``have`` = reusable paths)."""
+        only = set()
+        n_requant = n_skip = 0
+        for key, members in self.families.items():
+            hit = [m for m in members
+                   if m.path_str not in have
+                   or drifts.get(m.path_str, float("inf")) >= threshold]
+            if hit:
+                only.add(key)
+                n_requant += len(members)
+            else:
+                n_skip += len(members)
+        for m in self.eager:
+            if (m.path_str not in have
+                    or drifts.get(m.path_str, float("inf")) >= threshold):
+                only.add(("eager", m.path_str))
+                n_requant += 1
+            else:
+                n_skip += 1
+        return only, n_requant, n_skip
 
 
 def lowrank_tree(params, policy: QuantPolicy):

@@ -6,15 +6,32 @@ Owns everything the TTQ lifecycle needs around a parameter tree:
   workload's activation statistics (decay, fork/merge for multi-stream),
 * the data-free low-rank factor tree (computed **once**; requantization
   reuses it — no per-requant SVD),
-* the current quantized parameter tree and a requantization counter.
+* the current quantized parameter tree and a requantization counter,
+* the :class:`~repro.quant.api.FusedRequantPlan` — requantization runs as
+  one jitted device program per weight family (built lazily on the first
+  requantize, reused afterwards) instead of an eager per-leaf ``tree_map``,
+* the **delta gate**: ``requantize(threshold=…)`` re-quantizes only layers
+  whose activation diagonal D drifted (relative L2) beyond the threshold
+  since their last snapshot, reusing the previous
+  :class:`~repro.core.ttq.QuantizedTensor` elsewhere.
 
 Typical serving loop::
 
     qm = QuantizedModel(params, policy, halflife=ecfg.stats_halflife)
     ...
     qm.calibrate(prefill_stats, tokens=n_prefill_tokens)
-    qm.requantize()
+    qm.requantize()                      # async: a handful of device programs
     logits = decode(qm.decode_params, ...)
+
+Requantization never blocks the host: the family programs are
+async-dispatched and the returned tree holds device futures — subsequent
+decode work is *enqueued* behind them, not waited on.  With
+``double_buffer=True`` the swap is additionally gated on device readiness:
+``decode_params`` keeps returning the previous tree until every leaf of the
+new one reports ``is_ready()``, so queued decode blocks keep hitting the old
+weights while the requant runs.  That makes emitted tokens depend on device
+timing (how many chunks land before the swap), so it is an explicit opt-in —
+the default swaps deterministically at the requantize call.
 
 Multi-stream: ``child = qm.fork()`` shares params and low-rank factors but
 gets an independent calibration session; join with
@@ -24,10 +41,12 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
+import jax
+
 from repro.core.awq import AWQConfig
 from repro.core.policy import QuantPolicy
 
-from .api import lowrank_tree, quantize_params
+from .api import FusedRequantPlan, lowrank_tree, quantize_params
 from .session import CalibrationSession
 
 
@@ -38,10 +57,13 @@ class QuantizedModel:
     def __init__(self, params: Any, policy: QuantPolicy, *,
                  acfg: Optional[AWQConfig] = None, halflife: float = 0.0,
                  session: Optional[CalibrationSession] = None,
-                 lowrank: Any = _AUTO):
+                 lowrank: Any = _AUTO, fused: bool = True,
+                 double_buffer: bool = False):
         self.params = params
         self.policy = policy
         self.acfg = acfg
+        self.fused = fused
+        self.double_buffer = double_buffer
         self.session = session if session is not None else \
             CalibrationSession(halflife=halflife)
         if lowrank is _AUTO:
@@ -51,6 +73,17 @@ class QuantizedModel:
             self.lowrank_tree = lowrank
         self.qparams = None
         self.n_requants = 0
+        # fused-plan state (lazy: the plan needs a concrete stats structure)
+        self._plan: Optional[FusedRequantPlan] = None
+        self._plan_key = None
+        self._qt_by_path: dict = {}      # path_str → last QuantizedTensor
+        self._last_D: dict = {}          # path_str → (lead..., d) f32 snapshot
+        self._pending = None             # double buffer: not-yet-ready tree
+        # delta-gate accounting (read by the engine / serve summary)
+        self.last_requant_layers = 0
+        self.last_skipped_layers = 0
+        self.total_requant_layers = 0
+        self.total_skipped_layers = 0
 
     # -------------------------------------------------------------- lifecycle
 
@@ -59,31 +92,102 @@ class QuantizedModel:
         self.session.update(stats, tokens)
         return self
 
-    def requantize(self):
+    def _active(self) -> bool:
+        from .registry import get_quantizer
+        active = [q for q in map(get_quantizer, self.policy.methods())
+                  if q.enabled]
+        if not active:
+            return False
+        if not self.session.calibrated and all(q.requires_stats
+                                               for q in active):
+            return False
+        return True
+
+    def _ensure_plan(self, stats) -> FusedRequantPlan:
+        key = (jax.tree_util.tree_structure(self.params),
+               jax.tree_util.tree_structure(stats))
+        if self._plan is None or self._plan_key != key:
+            self._plan = FusedRequantPlan(self.params, stats, self.policy,
+                                          acfg=self.acfg,
+                                          lowrank_tree=self.lowrank_tree)
+            self._plan_key = key
+        return self._plan
+
+    def requantize(self, threshold: Optional[float] = None):
         """(Re)quantize from the session's current statistics.
+
+        ``threshold`` arms the delta gate: only leaves whose activation
+        diagonal D drifted by at least ``threshold`` in relative L2 since
+        their last quantization are re-quantized (0 → everything, ∞ →
+        nothing); leaves below the gate reuse their previous
+        ``QuantizedTensor``.  ``None`` (default) requantizes everything
+        without computing drift.
 
         Returns the quantized tree, or None when every reachable method
         (base policy or override) is disabled, or when all enabled methods
         still need statistics the session doesn't have yet.
         """
-        from .registry import get_quantizer
-        active = [q for q in map(get_quantizer, self.policy.methods())
-                  if q.enabled]
-        if not active:
-            return None
-        if not self.session.calibrated and all(q.requires_stats
-                                               for q in active):
+        if not self._active():
             return None
         stats, count = self.session.as_calib()
-        self.qparams = quantize_params(
-            self.params, stats, self.policy, count=count,
-            acfg=self.acfg, lowrank_tree=self.lowrank_tree)
+        if not self.fused:
+            if threshold is not None:
+                raise ValueError(
+                    "requantize(threshold=...) — the delta gate — needs the "
+                    "fused plan; construct QuantizedModel(fused=True) "
+                    "(the default) or drop the threshold")
+            self.qparams = quantize_params(
+                self.params, stats, self.policy, count=count,
+                acfg=self.acfg, lowrank_tree=self.lowrank_tree)
+            self.n_requants += 1
+            return self.qparams
+        plan = self._ensure_plan(stats)
+        only = None
+        n_requant, n_skip = plan.n_layers, 0
+        if threshold is not None and self._qt_by_path:
+            drifts = plan.drift(stats, count, self._last_D)
+            only, n_requant, n_skip = plan.gate(drifts, threshold,
+                                                set(self._qt_by_path))
+        tree = plan.run(self.params, stats, count, self.lowrank_tree,
+                        only=only, reuse=self._qt_by_path)
+        # refresh the per-path snapshot for everything that was requantized
+        from repro.core.ttq import QuantizedTensor
+
+        def note(path, leaf):
+            if isinstance(leaf, QuantizedTensor):
+                from .api import _path_str
+                ps = _path_str(path)
+                if self._qt_by_path.get(ps) is not leaf:
+                    self._last_D[ps] = 1.0 / leaf.dinv
+                self._qt_by_path[ps] = leaf
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, l: note(p, l),
+            tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        self.last_requant_layers = n_requant
+        self.last_skipped_layers = n_skip
+        self.total_requant_layers += n_requant
+        self.total_skipped_layers += n_skip
+        if self.double_buffer and self.qparams is not None:
+            self._pending = tree         # swap when device-ready (opt-in:
+        else:                            # token timing becomes device-bound)
+            self.qparams = tree
         self.n_requants += 1
-        return self.qparams
+        return tree
+
+    def _swap_if_ready(self):
+        if self._pending is None:
+            return
+        leaves = jax.tree.leaves(self._pending)
+        if all(l.is_ready() for l in leaves if hasattr(l, "is_ready")):
+            self.qparams, self._pending = self._pending, None
 
     @property
     def decode_params(self):
-        """Quantized tree if one exists, else the fp parameters."""
+        """Latest *device-ready* quantized tree; falls back to the previous
+        tree while a requantization is in flight, and to the fp parameters
+        before the first requantization."""
+        self._swap_if_ready()
         return self.qparams if self.qparams is not None else self.params
 
     # ------------------------------------------------------------ fork / join
@@ -92,7 +196,8 @@ class QuantizedModel:
         """Independent calibration stream sharing params + low-rank factors."""
         return QuantizedModel(self.params, self.policy, acfg=self.acfg,
                               session=self.session.fork(),
-                              lowrank=self.lowrank_tree)
+                              lowrank=self.lowrank_tree, fused=self.fused,
+                              double_buffer=self.double_buffer)
 
     def adopt(self, session: CalibrationSession) -> "QuantizedModel":
         """Join a forked stream's statistics into this model's session."""

@@ -1,7 +1,7 @@
 from .engine import EngineConfig, TTQEngine
 from .runner import DeviceRunner
 from .sampling import sample
-from .scheduler import GenResult, Request, Scheduler
+from .scheduler import GenResult, Request, Scheduler, pick_decode_chunk
 
 __all__ = ["DeviceRunner", "EngineConfig", "GenResult", "Request",
-           "Scheduler", "TTQEngine", "sample"]
+           "Scheduler", "TTQEngine", "pick_decode_chunk", "sample"]

@@ -6,8 +6,16 @@ The paper's lifecycle (Fig. 1b) as a slot-based engine:
                             (Σ_t x² per linear input feature, additive)
                      → aggregate stats across active prompts
                      → (re)QUANTIZE: D = f(stats); W_int,S,Z = G[(W−BA)∘D]
+                       — one fused device program per weight family
+                       (FusedRequantPlan), double-buffered so decode keeps
+                       serving the previous tree until the swap, and
+                       delta-gated (``requant_threshold``): only layers
+                       whose D drifted re-quantize
                      → DECODE with the quantized weights in fused K-step
-                       blocks (4-bit packed path hits the Pallas ttq_gemm)
+                       blocks; with ``policy.kernel.use_pallas`` (or
+                       ``EngineConfig.use_kernels``) every packed-weight
+                       matmul dispatches the Pallas ttq_gemm (in-kernel
+                       unpack + dequant + D⁻¹ prologue)
 
 The engine is a thin facade over three parts (DESIGN.md §"Serving
 architecture"):
@@ -38,21 +46,26 @@ layout").
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import time
+from typing import Dict, Optional
 
 from repro.core import QuantPolicy
 from repro.models.config import ModelConfig
 from repro.quant import QuantizedModel
 
 from .runner import DeviceRunner
-from .scheduler import GenResult, Request, Scheduler
+from .scheduler import GenResult, Request, Scheduler, pick_decode_chunk
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_slots: int = 4
     max_len: int = 256
-    decode_chunk: int = 1           # K: fused decode steps per host sync
+    decode_chunk: int = 1           # K: fused decode steps per host sync;
+                                    # 0 → auto via pick_decode_chunk(slots)
+                                    # (serve.py defaults to auto; the config
+                                    # default stays 1 = per-token, the seed
+                                    # semantics)
     recalibrate_every: int = 1      # re-quantize after every N admissions
     recalibrate_tokens: int = 0     # >0: token-budget cadence instead
     stats_halflife: int = 0         # >0: exponential decay of stats (updates)
@@ -60,11 +73,26 @@ class EngineConfig:
     eos_token: int = -1             # -1 → run to max_new
     prompt_buckets: tuple = (16, 32, 64, 128, 256)
     kv_dtype: str = ""              # "" → policy.kvcache; else bf16|int8|int4
+    use_kernels: Optional[bool] = None  # None → policy.kernel.use_pallas.
+                                    # Flips ONLY the decode GEMM dispatch
+                                    # (bitwise-identical math either way);
+                                    # the Pallas ttq_quantize kernel is a
+                                    # *policy* choice (policy.kernel) because
+                                    # it changes the quantization function
+                                    # itself (±1 code ties vs jnp)
+    requant_threshold: float = -1.0  # ≥0 → delta-gated requantization
+    double_buffer: bool = False     # readiness-gated requant swap (decode
+                                    # keeps the old tree until the new one
+                                    # is device-ready; tokens become
+                                    # device-timing-dependent — opt-in)
 
 
 class TTQEngine:
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  ecfg: EngineConfig = EngineConfig(), pctx=None, key=None):
+        if ecfg.decode_chunk <= 0:
+            ecfg = dataclasses.replace(
+                ecfg, decode_chunk=pick_decode_chunk(ecfg.max_slots))
         self.cfg, self.params, self.policy, self.ecfg = cfg, params, policy, ecfg
         self.pctx = pctx
         # KV-cache memory layout: policy-driven, EngineConfig.kv_dtype wins
@@ -73,16 +101,33 @@ class TTQEngine:
         self.kvcfg = policy.kvcache
         if ecfg.kv_dtype:
             self.kvcfg = dataclasses.replace(self.kvcfg, dtype=ecfg.kv_dtype)
+        # weight-kernel dispatch: policy-driven, EngineConfig.use_kernels
+        # wins when set.  Static too — it is baked into the jitted decode.
+        # The override is decode-only by design: the GEMM paths are bitwise
+        # identical, so flipping it never changes tokens, while the fused
+        # requant's Pallas ttq_quantize (a different rounding fusion — ±1
+        # code ties) stays governed by the policy the QuantizedModel holds.
+        self.kncfg = policy.kernel
+        if ecfg.use_kernels is not None:
+            self.kncfg = dataclasses.replace(self.kncfg,
+                                             use_pallas=ecfg.use_kernels)
         self.qmodel = QuantizedModel(params, policy,
-                                     halflife=ecfg.stats_halflife)
+                                     halflife=ecfg.stats_halflife,
+                                     double_buffer=ecfg.double_buffer)
         self.scheduler = Scheduler(
             ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"))
-        self.runner = DeviceRunner(cfg, ecfg, self.kvcfg, pctx=pctx, key=key)
+        self.runner = DeviceRunner(cfg, ecfg, self.kvcfg, kncfg=self.kncfg,
+                                   pctx=pctx, key=key)
+        self.requant_wall_s = 0.0       # dispatch time spent requantizing
 
     # ------------------------------------------------------------------- TTQ
 
     def _requantize(self):
-        if self.qmodel.requantize() is not None:
+        thr = self.ecfg.requant_threshold
+        t0 = time.perf_counter()
+        tree = self.qmodel.requantize(threshold=thr if thr >= 0 else None)
+        self.requant_wall_s += time.perf_counter() - t0
+        if tree is not None:
             self.scheduler.note_requant()
 
     # back-compat views of the parts' state (tests/benchmarks/examples)
@@ -101,6 +146,16 @@ class TTQEngine:
     @property
     def lowrank_tree(self):
         return self.qmodel.lowrank_tree
+
+    @property
+    def layers_requantized(self):
+        """Total leaf quantizations dispatched across all requants."""
+        return self.qmodel.total_requant_layers
+
+    @property
+    def layers_skipped(self):
+        """Total leaf quantizations the delta gate skipped (QT reused)."""
+        return self.qmodel.total_skipped_layers
 
     @property
     def agg_stats(self):

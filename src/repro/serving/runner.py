@@ -8,7 +8,10 @@ and generation budgets) plus the two compiled programs:
 * ``lm.decode_many`` — a ``lax.scan`` over ``decode_chunk`` decode steps
   with on-device sampling / EOS / budget / capacity masking, so the host
   sees ONE blocking transfer per chunk (a (B, K) token block + flags)
-  instead of one per token per slot.
+  instead of one per token per slot.  The engine's ``KernelConfig``
+  (``kncfg``) is baked into this program as a static arg: with
+  ``use_pallas=True`` every packed-weight matmul inside the scan dispatches
+  the fused Pallas ``ttq_gemm``.
 
 ``host_syncs`` counts blocking device→host transfers — the number
 ``benchmarks/bench_engine.py`` reports per generated token.
@@ -41,10 +44,12 @@ def _write_slots(batched, src, slots):
 
 
 class DeviceRunner:
-    def __init__(self, cfg, ecfg, kvcfg, *, pctx=None, key=None):
+    def __init__(self, cfg, ecfg, kvcfg, *, kncfg=None, pctx=None, key=None):
         self.cfg, self.ecfg, self.kvcfg, self.pctx = cfg, ecfg, kvcfg, pctx
+        self.kncfg = kncfg                      # KernelConfig: packed-weight
         self.key = key if key is not None else jax.random.PRNGKey(0)
         B, ML = ecfg.max_slots, ecfg.max_len
+        K = max(1, ecfg.decode_chunk)           # 0 = auto, resolved upstream
         self.state = lm.init_decode_state(cfg, B, ML, kvcfg=kvcfg)
         self.pos = jnp.zeros((B,), jnp.int32)
         self.cur_tok = jnp.zeros((B, 1), jnp.int32)
@@ -52,8 +57,8 @@ class DeviceRunner:
         self.remaining = jnp.zeros((B,), jnp.int32)
         self.host_syncs = 0                     # blocking device→host copies
         self._decode_jit = jax.jit(partial(
-            lm.decode_many, cfg, pctx=pctx, kvcfg=kvcfg,
-            K=ecfg.decode_chunk, max_len=ML,
+            lm.decode_many, cfg, pctx=pctx, kvcfg=kvcfg, kcfg=kncfg,
+            K=K, max_len=ML,
             temperature=ecfg.temperature, eos_token=ecfg.eos_token))
         self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
                                             collect_stats=True,

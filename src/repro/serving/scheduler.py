@@ -23,6 +23,17 @@ from collections import deque
 from typing import Any, Dict, List, Optional
 
 
+def pick_decode_chunk(slots: int) -> int:
+    """Default fused-decode chunk per slot count (EXPERIMENTS.md §Perf
+    iteration 7).  At 1 slot fused decode at K=8 measured *slower* than
+    per-token on short generation budgets (fixed-K steps are wasted past
+    EOS/budget — the PR-3 snapshot: 165 vs 724 tok/s at max_new=16), and
+    there is no batching to amortize, so stay per-token; from 2 slots up
+    the dispatch amortization dominates for every measured budget and K=8
+    sits past the crossover (`bench_engine.py` sweeps K and reports it)."""
+    return 1 if slots <= 1 else 8
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
