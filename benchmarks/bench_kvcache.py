@@ -1,4 +1,4 @@
-"""KV-cache decode traffic — bytes-moved and tokens/s at 4k–32k contexts.
+"""KV-cache decode traffic + paged-pool capacity — bytes and concurrency.
 
 At long contexts the decode step is memory-bound on the *cache*, not the
 weights: every generated token reads the full K and V history of every
@@ -9,23 +9,34 @@ attention layer.  This bench reports, per cache dtype (bf16 / int8 / int4):
   * the v5e roofline tokens/s projection (HBM_BW / bytes, the same
     memory-bound model as ``bench_runtime``), including the quantized-weight
     term so the totals compose;
-  * an XLA cost-analysis cross-check: the jitted fallback attention read's
-    "bytes accessed" for bf16 vs int8 at one shape (the fused Pallas kernel
-    moves the same cache bytes by construction — it reads codes+scales once).
+  * **paged capacity** (DESIGN.md §8): on a mixed prompt-length workload
+    (32–1024 at ``max_len=2048``) the dense slab reserves ``max_len`` rows
+    per slot while the paged pool reserves only ``ceil((plen+max_new)/bs)``
+    blocks per request — the table reports per-request footprint,
+    utilization (useful rows / reserved rows — the dense slab's is its
+    fragmentation problem), and effective concurrent requests per HBM byte.
+    Acceptance: **≥ 2× requests/byte vs the dense slab**.  Bytes are
+    *measured* from allocated ``lm.init_decode_state`` buffers (dense slab
+    vs pool sized for equal concurrency), not just the analytic model.
 
 Run:  PYTHONPATH=src python benchmarks/bench_kvcache.py [--fast]
-
-Numbers land in EXPERIMENTS.md §Roofline (decode-traffic table).
+Emits results/BENCH_kvcache.json; numbers land in EXPERIMENTS.md §Roofline
+(decode-traffic table) and §Perf iteration 8.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kvquant import KVCacheConfig
 from repro.launch.analysis import HBM_BW
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 # gemma-7b attention geometry (28L, MHA kv=16, head_dim 256) — the paper's
 # long-context cell; per-(head, token) scales (group_size=0)
@@ -47,23 +58,69 @@ def cache_bytes_per_step(S: int, mode: str, *, n_layers=None, n_kv_heads=None,
     return 2.0 * batch * g["n_layers"] * g["n_kv_heads"] * S * per_row
 
 
-def measured_state_bytes(S: int, mode: str) -> float:
+def _bench_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="bench", family="dense", n_layers=2,
+                       d_model=4096, n_heads=16,
+                       n_kv_heads=GEMMA["n_kv_heads"],
+                       head_dim=GEMMA["head_dim"], d_ff=128, vocab=256)
+
+
+def measured_state_bytes(S: int, mode: str, *, batch: int = 1,
+                         num_blocks: int = 0, block_size: int = 16) -> float:
     """Allocate the REAL decode state via ``lm.init_decode_state`` (reduced
     depth, gemma head geometry) and count the cache leaves' device bytes.
 
-    Every decode step streams the whole cache once, so allocated bytes ==
-    bytes-moved per step.  This is a measurement of the shipped layout, not
+    Every decode step streams a slot's whole cache once, so allocated bytes
+    track bytes-moved.  This is a measurement of the shipped layout, not
     the analytic model: if the state tree carried bf16 anywhere it claims
-    int8, this number catches it.  Scaled back to 28 layers for the table.
+    int8 — or the paged pool silently allocated the dense slab — this
+    number catches it.  Scaled back to 28 layers for the table.
+    ``num_blocks > 0`` allocates the paged layout instead of the slab.
     """
     from repro.models import lm
-    from repro.models.config import ModelConfig
-    cfg = ModelConfig(name="bench", family="dense", n_layers=2,
-                      d_model=4096, n_heads=16, n_kv_heads=GEMMA["n_kv_heads"],
-                      head_dim=GEMMA["head_dim"], d_ff=128, vocab=256)
-    st = lm.init_decode_state(cfg, 1, S, kvcfg=KVCacheConfig(dtype=mode))
+    cfg = _bench_cfg()
+    kvcfg = KVCacheConfig(dtype=mode, paged=num_blocks > 0,
+                          block_size=block_size)
+    st = lm.init_decode_state(cfg, batch, S, kvcfg=kvcfg,
+                              num_blocks=num_blocks)
     byts = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(st))
     return byts * GEMMA["n_layers"] / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# paged capacity: mixed prompt lengths, requests per HBM byte
+# ---------------------------------------------------------------------------
+
+def mixed_workload(n: int, lo: int = 32, hi: int = 1024, seed: int = 0):
+    """Log-uniform prompt lengths in [lo, hi] — the heterogeneous-traffic
+    regime TTQ targets (per-prompt adaptation implies per-prompt length)."""
+    rng = np.random.default_rng(seed)
+    return np.exp(rng.uniform(np.log(lo), np.log(hi), size=n)).astype(int)
+
+
+def paged_capacity(mode: str, *, max_len: int = 2048, block_size: int = 16,
+                   max_new: int = 128, n_req: int = 64, seed: int = 0):
+    """Per-request reserved footprint, utilization, and requests/byte for
+    the dense slab vs the paged pool on a mixed workload."""
+    g = GEMMA
+    row = (2.0 * g["n_layers"] * g["n_kv_heads"]
+           * KVCacheConfig(dtype=mode).bytes_per_token_head(g["head_dim"]))
+    plens = mixed_workload(n_req, seed=seed)
+    used_rows = np.minimum(plens + max_new, max_len)            # rows touched
+    dense_rows = np.full_like(used_rows, max_len)               # slab reserve
+    paged_rows = (-(-used_rows // block_size)) * block_size     # block reserve
+    dense_bytes = float(dense_rows.mean()) * row
+    paged_bytes = float(paged_rows.mean()) * row
+    return {
+        "mode": mode,
+        "avg_prompt": float(plens.mean()),
+        "dense_req_MB": dense_bytes / 1e6,
+        "paged_req_MB": paged_bytes / 1e6,
+        "dense_utilization": float(used_rows.sum() / dense_rows.sum()),
+        "paged_utilization": float(used_rows.sum() / paged_rows.sum()),
+        "req_per_byte_gain": dense_bytes / paged_bytes,
+    }
 
 
 def run(fast: bool = True):
@@ -77,11 +134,14 @@ def run(fast: bool = True):
 
 def main(fast: bool = True):
     rows = run(fast)
+    report = {"traffic": [], "paged_capacity": [], "allocated": {}}
     print("# KV-cache decode traffic — gemma-7b geometry, batch=1, "
           "per-(head,token) scales")
     print("context,cache_GB_bf16,cache_GB_int8,cache_GB_int4,"
           "reduction_int8,reduction_int4,tok_s_bf16,tok_s_int8,tok_s_int4")
     for S, byts, toks in rows:
+        report["traffic"].append({"context": S,
+                                  **{f"GB_{m}": byts[m] / 1e9 for m in MODES}})
         print(f"{S},{byts['bf16']/1e9:.2f},{byts['int8']/1e9:.2f},"
               f"{byts['int4']/1e9:.2f},"
               f"{byts['bf16']/byts['int8']:.2f}x,"
@@ -100,6 +160,54 @@ def main(fast: bool = True):
     print(f"allocated_cache_GB_int4_S{S},{mi4/1e9:.3f}")
     print(f"allocated_reduction_int8_S{S},{mbf / mi8:.2f}x")
     print(f"allocated_reduction_int4_S{S},{mbf / mi4:.2f}x")
+
+    # ---- paged capacity: mixed prompts 32–1024 at max_len=2048 ----
+    max_len, bs, max_new = 2048, 16, 128
+    n_req = 32 if fast else 256
+    print(f"\n# Paged pool capacity — mixed prompts 32-1024, "
+          f"max_len={max_len}, block={bs}, max_new={max_new} "
+          f"(reserved footprint per request; utilization = useful rows / "
+          f"reserved rows)")
+    print("mode,dense_MB_per_req,paged_MB_per_req,dense_util,paged_util,"
+          "req_per_byte_gain")
+    ok_cap = True
+    for mode in MODES:
+        c = paged_capacity(mode, max_len=max_len, block_size=bs,
+                           max_new=max_new, n_req=n_req)
+        report["paged_capacity"].append(c)
+        print(f"{mode},{c['dense_req_MB']:.1f},{c['paged_req_MB']:.1f},"
+              f"{c['dense_utilization']:.2f},{c['paged_utilization']:.2f},"
+              f"{c['req_per_byte_gain']:.2f}x")
+        ok_cap = ok_cap and c["req_per_byte_gain"] >= 2.0
+    print(f"acceptance: effective concurrent requests per HBM byte "
+          f"(paged vs dense slab) >= 2.0x "
+          f"({'PASS' if ok_cap else 'FAIL'})")
+    # measured from allocated buffers: a pool sized for the workload's
+    # reserved blocks vs the dense slab at equal concurrency (reduced
+    # geometry, int8, CPU-safe shapes)
+    Sml, slots = (512, 4) if fast else (2048, 8)
+    plens = mixed_workload(slots, lo=32, hi=Sml // 2)
+    blocks = int(sum(-(-min(p + max_new, Sml) // bs) for p in plens)) + 1
+    dense_b = measured_state_bytes(Sml, "int8", batch=slots)
+    paged_b = measured_state_bytes(Sml, "int8", batch=slots,
+                                   num_blocks=blocks, block_size=bs)
+    report["allocated"] = {"max_len": Sml, "slots": slots,
+                           "blocks": blocks,
+                           "dense_GB": dense_b / 1e9,
+                           "paged_GB": paged_b / 1e9,
+                           "measured_gain": dense_b / paged_b}
+    print(f"allocated_equal_concurrency_S{Sml}_B{slots}: dense "
+          f"{dense_b/1e9:.3f} GB vs paged {paged_b/1e9:.3f} GB "
+          f"({dense_b/paged_b:.2f}x measured)")
+    report["acceptance"] = {"int8_reduction_8k": red8,
+                            "req_per_byte_gain_ok": ok_cap}
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_kvcache.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+    if not ok_cap:
+        raise SystemExit("bench_kvcache paged-capacity acceptance FAILED")
     return rows
 
 

@@ -1,14 +1,17 @@
 """Serving demo — continuous batching with per-workload TTQ self-calibration
-and a quantized KV cache.
+and a block-paged quantized KV cache.
 
 Submits a staggered stream of requests to the TTQEngine; the engine prefillls
 each prompt in full precision (stats tap on), aggregates the activation
 statistics of the *live* workload, requantizes, and decodes 4-bit over an
-int8 KV cache (``kv_dtype="int8"`` — codes + per-(head, token) scales, read
-by the fused dequant-attention kernel; on CPU the kernel runs in Pallas
-interpret mode, so this demo exercises the exact production code path).
-Prints a timeline of admissions / requantizations / completions and a
-throughput summary.
+int8 **paged** KV pool (``kv_dtype="int8"`` codes + per-(head, token)
+scales in ``(num_blocks, Hkv, block_size, ·)`` pools indexed by per-slot
+block tables — DESIGN.md §8; on CPU the paged flash-decoding kernel runs in
+Pallas interpret mode, so this demo exercises the exact production code
+path).  Half the requests share a system prompt: after the first admission
+its blocks sit in the prefix trie and later arrivals prefill only their
+tails.  Prints a timeline of admissions / requantizations / completions and
+a throughput + pool-metrics summary.
 
     PYTHONPATH=src python examples/serve_ttq.py
 """
@@ -34,17 +37,22 @@ def main():
         cfg, params,
         ttq_policy(bits=4, group_size=32, rank=8, kv_dtype="int8"),
         # decode_chunk=2: each engine step fuses 2 decode tokens on device
-        # (lm.decode_many) — one host sync per block instead of per token
+        # (lm.decode_many) — one host sync per block instead of per token.
+        # kv_paged: slot caches become shared block pools + block tables;
+        # requests reserve only the blocks their prompt+budget can touch.
         EngineConfig(max_slots=4, max_len=96, recalibrate_every=2,
-                     decode_chunk=2),
+                     decode_chunk=2, kv_paged=True, kv_block_size=16),
     )
     kv = eng.kvcfg
     cache_rows = cfg.n_layers * cfg.n_kv_heads
     print(f"kv-cache: {kv.dtype}, {kv.bytes_per_token_head(cfg.hd):.0f} B "
           f"per (head, token) row x {cache_rows} rows/token "
-          f"(bf16 would be {2 * cfg.hd} B/row)")
+          f"(bf16 would be {2 * cfg.hd} B/row); paged pool "
+          f"{eng.num_blocks} blocks x {kv.block_size} tokens/layer")
     rng = np.random.default_rng(0)
-    arrivals = [(i, list(rng.integers(1, 256, size=rng.integers(4, 24))),
+    system = list(rng.integers(1, 256, size=16))   # one shareable block
+    arrivals = [(i, (system if i % 2 else [])
+                 + list(rng.integers(1, 256, size=rng.integers(4, 24))),
                  int(rng.integers(8, 20))) for i in range(10)]
     t0 = time.time()
     submitted = 0
@@ -79,6 +87,9 @@ def main():
           f"benchmarks/bench_runtime.py for the v5e roofline projection), "
           f"{eng.host_syncs/max(total_tokens,1):.2f} host syncs/token")
     print(f"requantizations: {eng.n_requants}")
+    print(f"kv-pool: peak utilization {eng.kv_pool_utilization:.2f}, "
+          f"prefix hit rate {eng.prefix_hit_rate:.2f} (shared system "
+          f"prompt prefilled once), preemptions {eng.preemptions}")
 
 
 if __name__ == "__main__":

@@ -36,15 +36,25 @@ class KVCacheConfig:
                 (head, token) row (the default, matching ``quantize_kv``)
     use_pallas  fused Pallas dequant-attention for the decode read; False →
                 pure-jnp fallback (same escape hatch as ``ttq_gemm``)
+    paged       block-paged pool layout (DESIGN.md §8): one
+                (num_blocks, Hkv, block_size, ·) pool per attention layer
+                plus per-slot block tables, instead of the dense
+                (max_slots, Hkv, max_len, ·) slab.  Physical block 0 is the
+                write sink for done/empty lanes and is never allocated.
+    block_size  tokens per pool block (paged only); must divide max_len
     """
 
     dtype: str = "bf16"
     group_size: int = 0
     use_pallas: bool = True
+    paged: bool = False
+    block_size: int = 16
 
     def __post_init__(self):
         if self.dtype not in _KV_BITS:
             raise ValueError(f"kv dtype {self.dtype!r} not in {sorted(_KV_BITS)}")
+        if self.paged and self.block_size <= 0:
+            raise ValueError("paged cache needs block_size > 0")
 
     @property
     def bits(self) -> int:

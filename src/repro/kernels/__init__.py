@@ -7,10 +7,16 @@
                             streaming pass.
 * ``kv_decode_attention`` — fused dequant decode-attention over an int8/int4
                             KV cache (flash-decoding over the S axis).
+* ``kv_paged_decode_attention`` — the block-paged variant: flash-decoding
+                            over a per-slot block table into a shared
+                            (num_blocks, Hkv, block_size, ·) quantized pool
+                            (scalar-prefetched table lookups per S-tile).
 
 ``ops`` wraps all with jnp fallbacks; ``ref`` holds the pure-jnp oracles the
 tests assert against (interpret=True on CPU, compiled on TPU).
 """
-from .ops import kv_decode_attention, ttq_gemm, ttq_quantize
+from .ops import (kv_decode_attention, kv_paged_decode_attention, ttq_gemm,
+                  ttq_quantize)
 
-__all__ = ["kv_decode_attention", "ttq_gemm", "ttq_quantize"]
+__all__ = ["kv_decode_attention", "kv_paged_decode_attention", "ttq_gemm",
+           "ttq_quantize"]

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .ttq_attn import ttq_decode_attention as _ttq_attn_pallas
+from .ttq_attn import ttq_paged_decode_attention as _ttq_paged_attn_pallas
 from .ttq_gemm import ttq_gemm as _ttq_gemm_pallas
 from .ttq_quantize import ttq_quantize as _ttq_quantize_pallas
 
@@ -43,6 +44,26 @@ def kv_decode_attention(q, kq, ks, vq, vs, cur_pos, *, bits=8, group_size=0,
     return _ref.kv_attn_ref(q, kq, ks, vq, vs, cur_pos, bits=bits,
                             group_size=group_size, scale=scale,
                             soft_cap=soft_cap, window=window)
+
+
+def kv_paged_decode_attention(q, kq, ks, vq, vs, block_table, cur_pos, *,
+                              bits=8, group_size=0, scale=None, soft_cap=0.0,
+                              use_pallas=True):
+    """Decode attention over a block-paged int8/int4 KV pool.
+
+    ``kq/ks/vq/vs`` are the (NB, Hkv, block_size, ·) pools; ``block_table``
+    (B, nblk) maps each slot's logical blocks to physical pool blocks.  The
+    Pallas path streams one physical block per S-tile through a
+    scalar-prefetched table lookup; the fallback gathers the table's view
+    and runs the contiguous jnp oracle (identical math).
+    """
+    if use_pallas and bits in _KV_BITS:
+        return _ttq_paged_attn_pallas(q, kq, ks, vq, vs, block_table, cur_pos,
+                                      bits=bits, group_size=group_size,
+                                      scale=scale, soft_cap=soft_cap)
+    return _ref.kv_paged_attn_ref(q, kq, ks, vq, vs, block_table, cur_pos,
+                                  bits=bits, group_size=group_size,
+                                  scale=scale, soft_cap=soft_cap)
 
 
 def ttq_quantize(W, D, *, bits=4, group_size=32, use_pallas=True, **block_kw):

@@ -59,6 +59,35 @@ def kv_attn_ref(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
     return o.reshape(B, H, 1, Dh).astype(q.dtype)
 
 
+def gather_paged_kv(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a per-slot contiguous view of a paged pool.
+
+    pool (NB, Hkv, bs, D·) indexed by block_table (B, nblk) →
+    (B, Hkv, nblk·bs, D·).  Slots' unallocated entries point at the sink
+    block 0; its rows are garbage but land beyond ``cur_pos`` and are masked
+    by the attention read.
+    """
+    g = jnp.take(pool, block_table, axis=0)              # (B, nblk, Hkv, bs, D)
+    B, nblk, Hkv, bs, D = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, nblk * bs, D)
+
+
+def kv_paged_attn_ref(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
+                      vq: jnp.ndarray, vs: jnp.ndarray,
+                      block_table: jnp.ndarray, cur_pos: jnp.ndarray, *,
+                      bits: int = 8, group_size: int = 0,
+                      scale: float | None = None,
+                      soft_cap: float = 0.0) -> jnp.ndarray:
+    """Paged decode attention oracle: gather the block table's view of each
+    (NB, Hkv, bs, ·) pool into the contiguous (B, Hkv, S, ·) layout, then the
+    exact :func:`kv_attn_ref` math — the allclose target for the paged Pallas
+    kernel and the ``use_pallas=False`` fallback."""
+    kqg, ksg = gather_paged_kv(kq, block_table), gather_paged_kv(ks, block_table)
+    vqg, vsg = gather_paged_kv(vq, block_table), gather_paged_kv(vs, block_table)
+    return kv_attn_ref(q, kqg, ksg, vqg, vsg, cur_pos, bits=bits,
+                       group_size=group_size, scale=scale, soft_cap=soft_cap)
+
+
 def ttq_quantize_ref(W: jnp.ndarray, D: jnp.ndarray, *, bits: int,
                      group_size: int):
     """Online scaled groupwise quantize+pack.

@@ -96,6 +96,123 @@ def _attn_kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
 
+def _paged_attn_kernel(bt_ref, pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                       o_ref, m_ref, l_ref, acc_ref, *, bits: int,
+                       group_size: int, soft_cap: float, bs: int, Dh: int,
+                       n_s: int):
+    """Flash-decoding over the *block table* instead of a contiguous S axis.
+
+    Identical online-softmax math to :func:`_attn_kernel`; the only paged
+    difference is upstream — the k/v BlockSpecs index the (NB, Hkv, bs, ·)
+    pool through the scalar-prefetched block table, so tile ``s`` of slot
+    ``b`` streams physical block ``bt[b, s]`` HBM→VMEM.  Tiles past
+    ``cur_pos`` (sink/stale blocks) are masked here exactly like padding."""
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = pos_ref[b]
+    q = q_ref[0, 0]                                            # (G, Dh) f32
+    k = _dequant_tile(kq_ref[0, 0], ks_ref[0, 0], bits=bits,
+                      group_size=group_size, Dh=Dh)            # (bs, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    ki = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ki <= cur
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]                    # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)               # (G, bs)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    v = _dequant_tile(vq_ref[0, 0], vs_ref[0, 0], bits=bits,
+                      group_size=group_size, Dh=Dh)            # (bs, Dh)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "scale",
+                                             "soft_cap", "interpret"))
+def ttq_paged_decode_attention(q: jnp.ndarray, kq: jnp.ndarray,
+                               ks: jnp.ndarray, vq: jnp.ndarray,
+                               vs: jnp.ndarray, block_table: jnp.ndarray,
+                               cur_pos: jnp.ndarray, *, bits: int = 8,
+                               group_size: int = 0, scale: float | None = None,
+                               soft_cap: float = 0.0,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B,H,1,Dh); kq/vq: (NB,Hkv,bs,Dc) pool codes; ks/vs:
+    (NB,Hkv,bs,Dh//g) f32 pool scales; block_table: (B,nblk) int32 physical
+    block ids; cur_pos: (B,) int32 → o (B,H,1,Dh).
+
+    The S-tile is one pool block (``bs = block_size``): grid (B, Hkv, nblk)
+    with the block axis sequential, the block table riding as a
+    scalar-prefetch argument so each tile's BlockSpec resolves its physical
+    pool block before the body runs (the paged flash-decoding idiom)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, _, Dh = q.shape
+    Hkv, bs = kq.shape[1], kq.shape[2]
+    G = H // Hkv
+    Gn = ks.shape[3]
+    Dc = kq.shape[3]
+    nblk = block_table.shape[1]
+    sc = scale if scale is not None else Dh ** -0.5
+    qg = (q[:, :, 0].astype(jnp.float32) * sc).reshape(B, Hkv, G, Dh)
+    bt = jnp.asarray(block_table, jnp.int32)
+    pos = jnp.asarray(cur_pos, jnp.int32)
+
+    kern = functools.partial(_paged_attn_kernel, bits=bits,
+                             group_size=group_size, soft_cap=soft_cap,
+                             bs=bs, Dh=Dh, n_s=nblk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block table + cur_pos
+        grid=(B, Hkv, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, s, bt_r, p_r: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Dc),
+                         lambda b, h, s, bt_r, p_r: (bt_r[b, s], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Gn),
+                         lambda b, h, s, bt_r, p_r: (bt_r[b, s], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Dc),
+                         lambda b, h, s, bt_r, p_r: (bt_r[b, s], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Gn),
+                         lambda b, h, s, bt_r, p_r: (bt_r[b, s], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, s, bt_r, p_r: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),       # running max
+            pltpu.VMEM((G, 1), jnp.float32),       # running denom
+            pltpu.VMEM((G, Dh), jnp.float32),      # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(bt, pos, qg, kq, ks, vq, vs)
+    return out.reshape(B, H, 1, Dh).astype(q.dtype)
+
+
 def _pad_seq(x, m):
     r = (-x.shape[2]) % m
     if r == 0:

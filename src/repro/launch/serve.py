@@ -23,6 +23,14 @@ whose activation diagonal drifted ≥ T (relative L2) re-quantize, the rest
 reuse their previous packed tensors.  The end-of-run summary reports the
 gate's skip counts and the requantization wall time next to
 ``host_syncs/token``.
+
+``--kv-paged`` switches the slot caches to the block-paged pool (DESIGN.md
+§8): ``--kv-block-size`` sets the block granularity, ``--kv-pool-blocks``
+the per-layer pool budget (0 = capacity-equivalent to the dense slab;
+smaller budgets oversubscribe — admissions preempt running slots under
+pressure instead of stalling), and ``--no-prefix-cache`` disables shared
+prompt-prefix block reuse.  The summary then adds ``kv_pool_util`` (peak),
+``prefix_hit_rate`` and the preemption count.
 """
 import argparse
 import time
@@ -95,6 +103,17 @@ def main():
                     help="KV scale group along head dim (0 = per head-token)")
     ap.add_argument("--kv-no-pallas", action="store_true",
                     help="jnp fallback for the dequant-attention read")
+    ap.add_argument("--kv-paged", action="store_true",
+                    help="block-paged KV pool + per-slot block tables with "
+                         "prefix caching and preemption (plain-attention "
+                         "families)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per paged pool block")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="per-layer pool blocks incl. the sink (0 = "
+                         "capacity-equivalent to the dense slab)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared prompt-prefix block reuse")
     args = ap.parse_args()
 
     import jax
@@ -113,10 +132,19 @@ def main():
                                  recalibrate_every=args.recal_every,
                                  recalibrate_tokens=args.recal_tokens,
                                  requant_threshold=args.requant_threshold,
-                                 double_buffer=args.double_buffer))
+                                 double_buffer=args.double_buffer,
+                                 kv_paged=args.kv_paged or None,
+                                 kv_block_size=args.kv_block_size
+                                 if args.kv_paged else 0,
+                                 kv_pool_blocks=args.kv_pool_blocks,
+                                 prefix_cache=not args.no_prefix_cache))
+    layout = (f"paged block={eng.kvcfg.block_size} "
+              f"pool={eng.num_blocks} blocks/layer "
+              f"prefix_cache={not args.no_prefix_cache}"
+              if eng.kvcfg.paged else "dense slab")
     print(f"kv-cache: dtype={eng.kvcfg.dtype} "
           f"group_size={eng.kvcfg.group_size or 'per-head-token'} "
-          f"pallas={eng.kvcfg.use_pallas}")
+          f"pallas={eng.kvcfg.use_pallas} layout={layout}")
     gate = (f"delta-gate >= {args.requant_threshold}"
             if args.requant_threshold >= 0 else "always-full")
     print(f"weight kernels: pallas={eng.kncfg.use_pallas} "
@@ -145,6 +173,11 @@ def main():
           f"host_syncs/token={eng.host_syncs / max(toks, 1):.2f} "
           f"requant_wall={eng.requant_wall_s:.2f}s "
           f"gate_skipped_layers={skipped}/{total_layers}")
+    if eng.kvcfg.paged:
+        print(f"kv-pool: util_peak={eng.kv_pool_utilization:.2f} "
+              f"prefix_hit_rate={eng.prefix_hit_rate:.2f} "
+              f"preemptions={eng.preemptions} "
+              f"prefill_tokens={eng.prefill_tokens:.0f}")
     for rid, v in sorted(outs.items())[:4]:
         print(f"  rid={rid}: {v[:10]}{'…' if len(v) > 10 else ''}")
 

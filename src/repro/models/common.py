@@ -266,13 +266,19 @@ def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
 
 def attention(q, k, v, *, causal=True, window=0, scale=None, soft_cap=0.0,
-              chunk_threshold: int = 8192, kv_chunk: int = 1024):
-    """Dispatch full vs chunked by KV length (chunked for long context)."""
-    if k.shape[2] > chunk_threshold and k.shape[2] % kv_chunk == 0:
+              q_offset: int = 0, chunk_threshold: int = 8192,
+              kv_chunk: int = 1024):
+    """Dispatch full vs chunked by KV length (chunked for long context).
+
+    A nonzero ``q_offset`` (queries starting mid-context: tail prefill over
+    a cached prefix) routes to the full path — the chunked scan's masks
+    assume query position 0."""
+    if (q_offset == 0 and k.shape[2] > chunk_threshold
+            and k.shape[2] % kv_chunk == 0):
         return chunked_attention(q, k, v, causal=causal, window=window,
                                  kv_chunk=kv_chunk, scale=scale, soft_cap=soft_cap)
     return full_attention(q, k, v, causal=causal, window=window, scale=scale,
-                          soft_cap=soft_cap)
+                          soft_cap=soft_cap, q_offset=q_offset)
 
 
 def decode_attention(q: Array, k_cache: Array, v_cache: Array, cur_pos: Array,

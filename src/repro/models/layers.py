@@ -61,8 +61,21 @@ def _qkv(cfg: ModelConfig, p, xq: Array, xkv: Array, stats, prefix: str,
 def attn_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
                causal: bool = True, window: int = 0, pos0: int = 0,
                x_cross: Optional[Array] = None, return_kv: bool = False,
-               kcfg=None):
-    """Sequence-mode attention. x: (B,S,D). Cross-attn if x_cross given."""
+               kv_prefix=None, kvcfg=None, kcfg=None):
+    """Sequence-mode attention. x: (B,S,D). Cross-attn if x_cross given.
+
+    ``kv_prefix`` = (k, v) each (B, Hkv, P, Dh): already-cached context
+    (post-rope, e.g. a shared prompt prefix gathered from the paged pool)
+    prepended to this call's keys/values; the queries then start at absolute
+    position ``pos0 == P`` and the causal mask offsets accordingly (tail
+    prefill for prefix-cache hits — DESIGN.md §8).  ``return_kv`` returns
+    only the *new* k/v (the prefix is already cached).
+
+    With a *quantized* ``kvcfg`` (prefill contexts only) the attention read
+    runs over the quantize→dequantize of k/v — exactly the values the cache
+    will hold and every later decode step will read.  This keeps a
+    preemption-resumed re-prefill on the same numbers the evicted slot's
+    decode saw, so the greedy stream continues identically."""
     xkv = x_cross if x_cross is not None else x
     q, k, v = _qkv(cfg, p, x, xkv, stats, prefix, kcfg)
     S = x.shape[1]
@@ -70,8 +83,21 @@ def attn_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
     if cfg.pos == "rope" and x_cross is None:
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, jnp.arange(k.shape[2]) + pos0, cfg.rope_theta)
-    o = attention(q, k, v, causal=causal and x_cross is None, window=window,
-                  soft_cap=cfg.attn_soft_cap)
+    kf, vf = k, v
+    if kvcfg is not None and kvcfg.quantized and x_cross is None:
+        from repro.core.kvquant import dequantize_kv, quantize_kv
+        kf, vf = (dequantize_kv(*quantize_kv(t, bits=kvcfg.bits,
+                                             group_size=kvcfg.group_size),
+                                jnp.float32, bits=kvcfg.bits,
+                                group_size=kvcfg.group_size) for t in (k, v))
+    q_off = 0
+    if kv_prefix is not None:
+        pk, pv = kv_prefix
+        kf = jnp.concatenate([pk.astype(kf.dtype), kf], axis=2)
+        vf = jnp.concatenate([pv.astype(vf.dtype), vf], axis=2)
+        q_off = pk.shape[2]
+    o = attention(q, kf, vf, causal=causal and x_cross is None, window=window,
+                  soft_cap=cfg.attn_soft_cap, q_offset=q_off)
     y = linear(o.transpose(0, 2, 1, 3).reshape(x.shape[0], S, -1), p["wo"],
                stats, prefix + "wo", kcfg)
     if return_kv:
@@ -79,21 +105,29 @@ def attn_apply(cfg: ModelConfig, p, x: Array, stats, prefix: str, *,
     return y
 
 
-def attn_init_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None):
+def attn_init_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None,
+                    num_blocks: int = 0):
     """Decode-state cache for one attention layer.
 
     bf16 (kvcfg None / dtype='bf16'): {'k','v'} (B,Hkv,Smax,Dh) — the seed
     layout.  Quantized: {'k_q','k_s','v_q','v_s'} with int8 / packed-int4
     codes plus f32 per-(head, token, group) scales (DESIGN.md §"KV-cache
     layout").
+
+    Paged (``kvcfg.paged``): the same leaf names hold a shared block *pool*
+    (num_blocks, Hkv, block_size, ·) instead of per-slot slabs; per-slot
+    block tables live at the decode-state top level (DESIGN.md §8).
     """
     Hkv, hd = cfg.n_kv_heads, cfg.hd
+    if kvcfg is not None and kvcfg.paged:
+        lead = (num_blocks, Hkv, kvcfg.block_size)
+    else:
+        lead = (batch, Hkv, max_len)
     if kvcfg is None or not kvcfg.quantized:
-        z = jnp.zeros((batch, Hkv, max_len, hd), DTYPE)
+        z = jnp.zeros((*lead, hd), DTYPE)
         return {"k": z, "v": z}
-    cz = jnp.zeros((batch, Hkv, max_len, kvcfg.code_shape(hd)),
-                   kvcfg.code_dtype)
-    sz = jnp.zeros((batch, Hkv, max_len, kvcfg.groups(hd)), jnp.float32)
+    cz = jnp.zeros((*lead, kvcfg.code_shape(hd)), kvcfg.code_dtype)
+    sz = jnp.zeros((*lead, kvcfg.groups(hd)), jnp.float32)
     return {"k_q": cz, "k_s": sz, "v_q": cz, "v_s": sz}
 
 
@@ -132,6 +166,70 @@ def _kv_append(state, k: Array, v: Array, pos, kvcfg):
     return out
 
 
+def build_kv_compact(k: Array, v: Array, kvcfg):
+    """Paged prefill write point: the prompt's k/v (B,Hkv,S,Dh) at the
+    cache's storage dtype, *compact* (no max_len slab) — the runner scatters
+    these rows into the slot's pool blocks (DESIGN.md §8)."""
+    if kvcfg is None or not kvcfg.quantized:
+        return {"k": k.astype(DTYPE), "v": v.astype(DTYPE)}
+    from repro.core.kvquant import quantize_kv
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        codes, scales = quantize_kv(t, bits=kvcfg.bits,
+                                    group_size=kvcfg.group_size)
+        out[name + "_q"], out[name + "_s"] = codes, scales
+    return out
+
+
+def _pool_row_write(pool: Array, row: Array, phys: Array, off: Array) -> Array:
+    """pool (NB,Hkv,bs,D·) ← row (B,Hkv,1,D·) at (phys (B,), off (B,)).
+
+    A vectorized scatter: distinct live slots own distinct blocks, so the
+    only duplicate index is the sink block 0 (done/empty lanes), where any
+    write order is acceptable."""
+    return pool.at[phys, :, off].set(row[:, :, 0].astype(pool.dtype))
+
+
+def _kv_append_paged(state, k: Array, v: Array, pos, block_table, kvcfg):
+    """Paged decode append: one token's k/v row lands in pool block
+    ``block_table[b, pos // block_size]`` at offset ``pos % block_size``."""
+    bs = kvcfg.block_size
+    pos = jnp.asarray(pos, jnp.int32)
+    nblk = block_table.shape[1]
+    blk = jnp.clip(pos // bs, 0, nblk - 1)
+    phys = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    off = pos % bs
+    if not kvcfg.quantized:
+        return {"k": _pool_row_write(state["k"], k, phys, off),
+                "v": _pool_row_write(state["v"], v, phys, off)}
+    from repro.core.kvquant import quantize_kv
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        codes, scales = quantize_kv(t, bits=kvcfg.bits,
+                                    group_size=kvcfg.group_size)
+        out[name + "_q"] = _pool_row_write(state[name + "_q"], codes, phys, off)
+        out[name + "_s"] = _pool_row_write(state[name + "_s"], scales, phys, off)
+    return out
+
+
+def _kv_attention_paged(q: Array, state, block_table, cur, kvcfg, *,
+                        soft_cap: float = 0.0):
+    """Decode read over the paged pool.  Quantized pools go through the
+    fused paged kernel (``use_pallas`` escape hatch routes to the gather
+    oracle); the bf16 pool gathers its block-table view and reuses the
+    dense ``decode_attention`` bit-for-bit."""
+    if kvcfg.quantized:
+        from repro.kernels import kv_paged_decode_attention
+        return kv_paged_decode_attention(
+            q, state["k_q"], state["k_s"], state["v_q"], state["v_s"],
+            block_table, cur, bits=kvcfg.bits, group_size=kvcfg.group_size,
+            soft_cap=soft_cap, use_pallas=kvcfg.use_pallas)
+    from repro.kernels.ref import gather_paged_kv
+    kc = gather_paged_kv(state["k"], block_table)
+    vc = gather_paged_kv(state["v"], block_table)
+    return decode_attention(q, kc, vc, cur, soft_cap=soft_cap)
+
+
 def _kv_attention(q: Array, state, cur, kvcfg, *, soft_cap: float = 0.0,
                   window: int = 0):
     """Fused dequant attention read over the quantized cache (a nonzero
@@ -144,9 +242,10 @@ def _kv_attention(q: Array, state, cur, kvcfg, *, soft_cap: float = 0.0,
 
 
 def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
-                cross_kv=None, kvcfg=None, kcfg=None):
+                cross_kv=None, kvcfg=None, kcfg=None, block_table=None):
     """x: (B,1,D); state: bf16 {'k','v'} or quantized {'k_q','k_s','v_q',
-    'v_s'} caches (``kvcfg`` selects); pos: (B,) per-slot positions."""
+    'v_s'} caches (``kvcfg`` selects); pos: (B,) per-slot positions.
+    ``block_table`` (B, nblk) routes the paged pool layout (DESIGN.md §8)."""
     if cross_kv is not None:
         k, v = cross_kv
         B = x.shape[0]
@@ -162,6 +261,12 @@ def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
     if cfg.pos == "rope":
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
+    if kvcfg is not None and kvcfg.paged:
+        st = _kv_append_paged(state, k, v, pos, block_table, kvcfg)
+        o = _kv_attention_paged(q, st, block_table, pos, kvcfg,
+                                soft_cap=cfg.attn_soft_cap)
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
+        return y, st
     if kvcfg is not None and kvcfg.quantized:
         st = _kv_append(state, k, v, pos, kvcfg)
         o = _kv_attention(q, st, pos, kvcfg, soft_cap=cfg.attn_soft_cap,

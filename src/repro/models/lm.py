@@ -127,12 +127,30 @@ def loss_fn(cfg: ModelConfig, params, batch, *, pctx=None, remat=False):
 # serving entry points
 # ---------------------------------------------------------------------------
 
-def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None):
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None,
+                      num_blocks: int = 0):
     """``kvcfg`` (:class:`repro.core.KVCacheConfig`) selects the attention
     cache layout: None/bf16 → the seed {'k','v'} bf16 slots; int8/int4 →
-    quantized codes + per-(head, token) scales (DESIGN.md §"KV-cache layout")."""
+    quantized codes + per-(head, token) scales (DESIGN.md §"KV-cache layout").
+
+    With ``kvcfg.paged`` the per-layer caches become shared block pools of
+    ``num_blocks`` blocks and the state carries a per-slot ``block_table``
+    (B, max_len/block_size) int32 — rows map logical to physical blocks; 0
+    is the sink block for unallocated entries and done-lane writes
+    (DESIGN.md §8)."""
+    paged = kvcfg is not None and kvcfg.paged
+    if paged:
+        if max_len % kvcfg.block_size:
+            raise ValueError(f"max_len={max_len} must divide by "
+                             f"block_size={kvcfg.block_size}")
+        if num_blocks < 2:
+            raise ValueError("paged cache needs num_blocks >= 2 "
+                             "(block 0 is the reserved sink)")
     st: dict = {"stack": S.init_stack_state(cfg, S.stack_spec(cfg), batch,
-                                            max_len, kvcfg)}
+                                            max_len, kvcfg, num_blocks)}
+    if paged:
+        st["block_table"] = jnp.zeros((batch, max_len // kvcfg.block_size),
+                                      jnp.int32)
     if cfg.family == "encdec":
         st["enc_out"] = jnp.zeros((batch, cfg.encdec.n_frames, cfg.d_model),
                                   jnp.bfloat16)
@@ -140,8 +158,15 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None):
 
 
 def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
-            collect_stats=True, pctx=None, full_logits=False, kvcfg=None):
-    """Run the prompt, build decode state + TTQ activation statistics."""
+            collect_stats=True, pctx=None, full_logits=False, kvcfg=None,
+            prefix_kv=None, pos0: int = 0):
+    """Run the prompt, build decode state + TTQ activation statistics.
+
+    ``prefix_kv``/``pos0`` (paged prefix-cache hits, DESIGN.md §8): the
+    tokens are the prompt *tail*, attending to the cached prefix k/v (a
+    per-run list of (k, v) with leading layer dim, post-rope) at absolute
+    offset ``pos0``.  The returned paged state is compact — this call's
+    rows only; the cached prefix stays where it is."""
     tokens = batch["tokens"]
     enc_out = None
     stats: dict = {}
@@ -150,11 +175,11 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
                                      stats_on=collect_stats)
         if collect_stats:
             stats["enc_stack"] = enc_stats
-    x = _embed(cfg, params, tokens, pctx)
+    x = _embed(cfg, params, tokens, pctx, pos0=pos0)
     x, run_stats, states = S.apply_stack_seq(
         cfg, params["stack"], S.stack_spec(cfg), x, stats_on=collect_stats,
         pctx=pctx, enc_out=enc_out, want_state=True, max_len=max_len,
-        kvcfg=kvcfg)
+        kvcfg=kvcfg, pos0=pos0, prefix_kv=prefix_kv)
     if collect_stats:
         stats["stack"] = run_stats
     x = norm(x, params["final_norm"])
@@ -182,7 +207,8 @@ def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
     x = _wsc(x, P(dp, None, None), pctx)
     x, new_states = S.apply_stack_decode(cfg, params["stack"], S.stack_spec(cfg),
                                          state["stack"], x, pos, pctx=pctx,
-                                         kvcfg=kvcfg, kcfg=kcfg)
+                                         kvcfg=kvcfg, kcfg=kcfg,
+                                         block_table=state.get("block_table"))
     x = norm(x, params["final_norm"])
     logits = _head(cfg, params, x, pctx, kcfg)
     new_state = dict(state)

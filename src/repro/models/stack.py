@@ -92,10 +92,15 @@ def init_layer(key, cfg: ModelConfig, kind: str):
 
 
 def layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                kvcfg=None):
+                kvcfg=None, num_blocks: int = 0):
+    if kvcfg is not None and kvcfg.paged and kind != "attn":
+        raise ValueError(
+            f"paged KV cache supports plain attention layers only, got "
+            f"{kind!r} (windowed/latent/recurrent states stay dense — "
+            f"DESIGN.md §8)")
     if kind in ("attn", "lattn"):
         ml = min(max_len, cfg.hybrid.window) if (kind == "lattn" and cfg.hybrid) else max_len
-        return L.attn_init_state(cfg, batch, ml, kvcfg)
+        return L.attn_init_state(cfg, batch, ml, kvcfg, num_blocks)
     if kind == "xdec":
         st = L.attn_init_state(cfg, batch, max_len, kvcfg)
         # cross k/v are computed once from the encoder and stay bf16 — the
@@ -141,8 +146,15 @@ def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg=None):
 def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
                     pctx=None, enc_out=None, want_state: bool = False,
                     max_len: int = 0, pos0: int = 0, state=None, kvcfg=None,
-                    kcfg=None):
-    """Sequence mode (train / prefill).  Returns (x, state|None)."""
+                    kcfg=None, kv_prefix=None):
+    """Sequence mode (train / prefill).  Returns (x, state|None).
+
+    ``kv_prefix`` (plain-attn only): cached (k, v) context prepended to the
+    attention read — tail prefill over a shared prompt prefix, with
+    ``pos0`` = prefix length (DESIGN.md §8).  Paged caches return a
+    *compact* state (this call's k/v rows at storage dtype); the runner
+    scatters it into pool blocks.
+    """
     h = norm(x, p["ln1"])
     st = None
     if kind in ("attn", "lattn", "enc"):
@@ -150,24 +162,29 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
         if want_state:
             y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                                      causal=kind != "enc", window=window,
-                                     pos0=pos0, return_kv=True, kcfg=kcfg)
-            ml = min(max_len, window) if window else max_len
-            S = min(k.shape[2], ml)
-            kk, vv = k[:, :, -S:], v[:, :, -S:]
-            if window and k.shape[2] >= window:
-                # rolling layout: absolute position p lives at slot p % window
-                kk = jnp.roll(kk, k.shape[2] % window, axis=2)
-                vv = jnp.roll(vv, k.shape[2] % window, axis=2)
-            st = L.build_kv_state(cfg, x.shape[0], ml, kk, vv, kvcfg)
+                                     pos0=pos0, return_kv=True,
+                                     kv_prefix=kv_prefix, kvcfg=kvcfg,
+                                     kcfg=kcfg)
+            if kvcfg is not None and kvcfg.paged:
+                st = L.build_kv_compact(k, v, kvcfg)
+            else:
+                ml = min(max_len, window) if window else max_len
+                S = min(k.shape[2], ml)
+                kk, vv = k[:, :, -S:], v[:, :, -S:]
+                if window and k.shape[2] >= window:
+                    # rolling layout: absolute position p lives at slot p % window
+                    kk = jnp.roll(kk, k.shape[2] % window, axis=2)
+                    vv = jnp.roll(vv, k.shape[2] % window, axis=2)
+                st = L.build_kv_state(cfg, x.shape[0], ml, kk, vv, kvcfg)
         else:
             y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                              causal=kind != "enc", window=window, pos0=pos0,
-                             kcfg=kcfg)
+                             kv_prefix=kv_prefix, kvcfg=kvcfg, kcfg=kcfg)
     elif kind == "xdec":
         if want_state:
             y, (k, v) = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
                                      causal=True, pos0=pos0, return_kv=True,
-                                     kcfg=kcfg)
+                                     kvcfg=kvcfg, kcfg=kcfg)
             st = L.build_kv_state(cfg, x.shape[0], max_len, k, v, kvcfg)
         else:
             y = L.attn_apply(cfg, p["mix"], h, stats, prefix + "mix.",
@@ -216,7 +233,7 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
 
 
 def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *,
-                       pctx=None, kvcfg=None, kcfg=None):
+                       pctx=None, kvcfg=None, kcfg=None, block_table=None):
     """Single-token decode; pos: (B,) per-slot positions. Returns (x, new_state)."""
     h = norm(x, p["ln1"])
     if kind in ("attn", "lattn"):
@@ -226,7 +243,7 @@ def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *,
                                           kvcfg, kcfg)
         else:
             y, st = L.attn_decode(cfg, p["mix"], h, state, pos, kvcfg=kvcfg,
-                                  kcfg=kcfg)
+                                  kcfg=kcfg, block_table=block_table)
     elif kind == "xdec":
         self_kv = {k_: v_ for k_, v_ in state.items() if k_ not in ("xk", "xv")}
         y, st = L.attn_decode(cfg, p["mix"], h, self_kv, pos, kvcfg=kvcfg,
@@ -269,10 +286,11 @@ def init_stack(key, cfg: ModelConfig, spec):
 
 
 def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int,
-                     kvcfg=None):
+                     kvcfg=None, num_blocks: int = 0):
     out = []
     for kinds, n in spec:
-        unit = {f"u{j}": layer_state(cfg, kind, batch, max_len, kvcfg)
+        unit = {f"u{j}": layer_state(cfg, kind, batch, max_len, kvcfg,
+                                     num_blocks)
                 for j, kind in enumerate(kinds)}
         out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), unit))
     return out
@@ -280,7 +298,8 @@ def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int,
 
 def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                     pctx=None, enc_out=None, want_state=False, max_len=0,
-                    remat=False, kvcfg=None, kcfg=None):
+                    remat=False, kvcfg=None, kcfg=None, pos0: int = 0,
+                    prefix_kv=None):
     """Train / prefill over all runs. Returns (x, stats_list, state_list).
 
     With remat, the mixer/MLP outputs are checkpoint-tagged: saving the
@@ -288,10 +307,18 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
     the TP collectives of the forward (≈33% of train collective bytes on the
     granite cell — EXPERIMENTS.md §Perf iteration 4). Memory cost: 2 saved
     (B,S,D) tensors per layer.
+
+    ``prefix_kv`` (tail prefill over a cached prefix, DESIGN.md §8): a
+    per-run list of (k, v) arrays with a leading layer dim — each rides the
+    layer scan as xs so every layer attends to its own cached context;
+    ``pos0`` is the shared prefix length.  Single-attention-unit runs only.
     """
     all_stats, all_states = [], []
-    for (kinds, n), rp in zip(spec, run_params):
-        def body(carry, up):
+    for ri, ((kinds, n), rp) in enumerate(zip(spec, run_params)):
+        pk = None if prefix_kv is None else prefix_kv[ri]
+
+        def body(carry, xs):
+            up, kvp = xs if pk is not None else (xs, None)
             h = carry
             stats = {} if stats_on else None
             states = {}
@@ -299,7 +326,8 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                 h, st = apply_layer_seq(cfg, kind, up[f"u{j}"], h, stats,
                                         f"u{j}.", pctx=pctx, enc_out=enc_out,
                                         want_state=want_state, max_len=max_len,
-                                        kvcfg=kvcfg, kcfg=kcfg)
+                                        kvcfg=kvcfg, kcfg=kcfg, pos0=pos0,
+                                        kv_prefix=kvp)
                 if st is not None:
                     states[f"u{j}"] = st
             return h, (stats, states)
@@ -312,14 +340,15 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                 body = jax.checkpoint(body, prevent_cse=False, policy=policy)
             else:   # baseline: full remat (backward re-runs forward ARs)
                 body = jax.checkpoint(body, prevent_cse=False)
-        x, (stats, states) = jax.lax.scan(body, x, rp)
+        x, (stats, states) = jax.lax.scan(body, x,
+                                          rp if pk is None else (rp, pk))
         all_stats.append(stats)
         all_states.append(states)
     return x, all_stats, all_states
 
 
 def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
-                       *, pctx=None, kvcfg=None, kcfg=None):
+                       *, pctx=None, kvcfg=None, kcfg=None, block_table=None):
     new_states = []
     for (kinds, n), rp, rs in zip(spec, run_params, run_states):
         def body(carry, xs):
@@ -329,7 +358,8 @@ def apply_stack_decode(cfg: ModelConfig, run_params, spec, run_states, x, pos,
             for j, kind in enumerate(kinds):
                 h, st = apply_layer_decode(cfg, kind, up[f"u{j}"], h,
                                            st_in[f"u{j}"], pos, pctx=pctx,
-                                           kvcfg=kvcfg, kcfg=kcfg)
+                                           kvcfg=kvcfg, kcfg=kcfg,
+                                           block_table=block_table)
                 st_out[f"u{j}"] = st
             return h, st_out
 

@@ -1,7 +1,9 @@
+from .blocks import BlockAllocator
 from .engine import EngineConfig, TTQEngine
 from .runner import DeviceRunner
 from .sampling import sample
 from .scheduler import GenResult, Request, Scheduler, pick_decode_chunk
 
-__all__ = ["DeviceRunner", "EngineConfig", "GenResult", "Request",
-           "Scheduler", "TTQEngine", "pick_decode_chunk", "sample"]
+__all__ = ["BlockAllocator", "DeviceRunner", "EngineConfig", "GenResult",
+           "Request", "Scheduler", "TTQEngine", "pick_decode_chunk",
+           "sample"]

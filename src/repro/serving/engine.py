@@ -85,6 +85,15 @@ class EngineConfig:
                                     # keeps the old tree until the new one
                                     # is device-ready; tokens become
                                     # device-timing-dependent — opt-in)
+    # ---- paged KV pool (DESIGN.md §8) ----
+    kv_paged: Optional[bool] = None  # None → policy.kvcache.paged
+    kv_block_size: int = 0          # tokens per pool block; 0 → policy
+    kv_pool_blocks: int = 0         # physical blocks per layer incl. the
+                                    # sink; 0 → capacity-equivalent auto
+                                    # (max_slots·max_len/block_size + 1 —
+                                    # no preemption ever needed); smaller
+                                    # budgets oversubscribe and preempt
+    prefix_cache: bool = True       # share quantized prompt-prefix blocks
 
 
 class TTQEngine:
@@ -101,6 +110,24 @@ class TTQEngine:
         self.kvcfg = policy.kvcache
         if ecfg.kv_dtype:
             self.kvcfg = dataclasses.replace(self.kvcfg, dtype=ecfg.kv_dtype)
+        if ecfg.kv_paged is not None:
+            self.kvcfg = dataclasses.replace(self.kvcfg, paged=ecfg.kv_paged)
+        if ecfg.kv_block_size:
+            self.kvcfg = dataclasses.replace(self.kvcfg,
+                                             block_size=ecfg.kv_block_size)
+        # paged pool geometry: blocks per layer, block 0 reserved as sink.
+        # The auto budget is capacity-equivalent to the dense slab (every
+        # slot can hold max_len), so the default never preempts; shrink
+        # kv_pool_blocks to oversubscribe (DESIGN.md §8).
+        self.num_blocks = 0
+        if self.kvcfg.paged:
+            if ecfg.max_len % self.kvcfg.block_size:
+                raise ValueError(
+                    f"max_len={ecfg.max_len} must divide by "
+                    f"kv block_size={self.kvcfg.block_size}")
+            per_slot = ecfg.max_len // self.kvcfg.block_size
+            self.num_blocks = (ecfg.kv_pool_blocks
+                               or ecfg.max_slots * per_slot + 1)
         # weight-kernel dispatch: policy-driven, EngineConfig.use_kernels
         # wins when set.  Static too — it is baked into the jitted decode.
         # The override is decode-only by design: the GEMM paths are bitwise
@@ -115,9 +142,11 @@ class TTQEngine:
                                      halflife=ecfg.stats_halflife,
                                      double_buffer=ecfg.double_buffer)
         self.scheduler = Scheduler(
-            ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"))
+            ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"),
+            kvcfg=self.kvcfg, num_blocks=self.num_blocks)
         self.runner = DeviceRunner(cfg, ecfg, self.kvcfg, kncfg=self.kncfg,
-                                   pctx=pctx, key=key)
+                                   pctx=pctx, key=key,
+                                   num_blocks=self.num_blocks)
         self.requant_wall_s = 0.0       # dispatch time spent requantizing
 
     # ------------------------------------------------------------------- TTQ
@@ -197,11 +226,56 @@ class TTQEngine:
     def host_syncs(self):
         return self.runner.host_syncs
 
+    # ------------------------------------------------- paged-pool metrics
+
+    @property
+    def allocator(self):
+        """The paged pool's :class:`~repro.serving.blocks.BlockAllocator`
+        (None on the dense slab)."""
+        return self.scheduler.allocator
+
+    @property
+    def kv_pool_utilization(self) -> float:
+        """Peak fraction of allocatable pool blocks ever in use."""
+        a = self.allocator
+        return a.peak_in_use / max(a.capacity, 1) if a else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        a = self.allocator
+        return a.prefix_hit_rate() if a else 0.0
+
+    @property
+    def preemptions(self) -> int:
+        return self.scheduler.preemptions
+
+    @property
+    def prefill_tokens(self) -> float:
+        """Padded tokens dispatched to prefill (prefix hits shrink this)."""
+        return self.scheduler.prefill_tokens
+
     # --------------------------------------------------------------- serving
 
     def submit(self, prompt, max_new: int = 16, frames=None) -> int:
         """Queue a request; rejects prompts the engine cannot admit."""
         return self.scheduler.submit(prompt, max_new, frames=frames)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a queued or running request immediately: its slot and
+        (paged) pool blocks free right away and its partial output is
+        returned by ``results()`` flagged ``cancelled``.  Returns False if
+        the rid is unknown or already finished."""
+        ok = self.scheduler.cancel(rid)
+        self._flush_releases()
+        return ok
+
+    def _flush_releases(self):
+        """Deactivate slots the scheduler freed (finish / preempt / cancel)
+        on device *before* their blocks can be reallocated."""
+        slots = self.scheduler.pending_releases
+        if slots:
+            self.runner.release_slots(slots)
+            self.scheduler.pending_releases = []
 
     def admit(self):
         """Admit queued requests into free slots: one batched prefill per
@@ -215,6 +289,7 @@ class TTQEngine:
 
         while True:
             groups = self.scheduler.plan_admissions()
+            self._flush_releases()   # preempted slots → sink before prefill
             if not groups:
                 break
             for group in groups:
@@ -232,6 +307,7 @@ class TTQEngine:
                     req.out.append(int(first[i]))
                     if fin[i]:
                         self.scheduler.finish(slot)
+        self._flush_releases()       # requests finished at admission
         if self.scheduler.should_requant():
             self._requantize()
 
@@ -243,6 +319,7 @@ class TTQEngine:
             return False
         toks, valid, done = self.runner.decode_block(self.decode_params)
         self.scheduler.record_block(toks, valid, done)
+        self._flush_releases()       # freed blocks must not be written again
         if self.scheduler.should_requant():
             self._requantize()
         return True

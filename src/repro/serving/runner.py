@@ -13,6 +13,13 @@ and generation budgets) plus the two compiled programs:
   ``use_pallas=True`` every packed-weight matmul inside the scan dispatches
   the fused Pallas ``ttq_gemm``.
 
+With a **paged** ``KVCacheConfig`` (DESIGN.md §8) the slot caches become
+per-layer block pools plus a per-slot ``block_table``; admission scatters
+the prefill's compact k/v into the slots' physical blocks (prefix-cache
+hits prefill only the prompt *tail*, gathering the cached prefix from the
+pool), and ``release_slots`` points finished/preempted slots at the sink
+block 0 so their done-lane writes can never corrupt reallocated blocks.
+
 ``host_syncs`` counts blocking device→host transfers — the number
 ``benchmarks/bench_engine.py`` reports per generated token.
 """
@@ -26,6 +33,7 @@ import jax.numpy as jnp
 from repro.models import lm
 from repro.quant.api import _path_str
 
+from .blocks import SINK
 from .sampling import sample
 
 
@@ -43,14 +51,49 @@ def _write_slots(batched, src, slots):
     return jax.tree_util.tree_map_with_path(per, batched, src)
 
 
+def _write_paged(pools, compact, phys, block_size: int):
+    """Scatter a compact prefill state into the paged pools.
+
+    pools: per-run {'u0': {leaf: (R, NB, Hkv, bs, D·)}};
+    compact: same structure with (R, n, Hkv, Sb, D·) leaves (Sb = the
+    group's padded tail bucket); phys: (n, nbw) int32 physical block per
+    logical write block — pad blocks beyond the prompt point at the sink.
+    """
+    bs = block_size
+    nbw = phys.shape[1]
+
+    def per(pool, cl):
+        R, n, Hkv, Sb, D = cl.shape
+        pad = nbw * bs - Sb
+        if pad:
+            cl = jnp.pad(cl, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        blk = cl.reshape(R, n, Hkv, nbw, bs, D).transpose(0, 1, 3, 2, 4, 5)
+        return pool.at[:, phys].set(blk.astype(pool.dtype))
+
+    return jax.tree.map(per, pools, compact)
+
+
+def _gather_pool(pool, ptab):
+    """pool (R, NB, Hkv, bs, D·) + ptab (n, nbp) → (R, n, Hkv, nbp·bs, D·):
+    the oracle's per-slot gather, vmapped over the leading layer dim so the
+    two layouts can never drift apart."""
+    from repro.kernels.ref import gather_paged_kv
+
+    return jax.vmap(lambda p: gather_paged_kv(p, ptab))(pool)
+
+
 class DeviceRunner:
-    def __init__(self, cfg, ecfg, kvcfg, *, kncfg=None, pctx=None, key=None):
+    def __init__(self, cfg, ecfg, kvcfg, *, kncfg=None, pctx=None, key=None,
+                 num_blocks: int = 0):
         self.cfg, self.ecfg, self.kvcfg, self.pctx = cfg, ecfg, kvcfg, pctx
         self.kncfg = kncfg                      # KernelConfig: packed-weight
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.paged = kvcfg is not None and kvcfg.paged
+        self.num_blocks = num_blocks
         B, ML = ecfg.max_slots, ecfg.max_len
         K = max(1, ecfg.decode_chunk)           # 0 = auto, resolved upstream
-        self.state = lm.init_decode_state(cfg, B, ML, kvcfg=kvcfg)
+        self.state = lm.init_decode_state(cfg, B, ML, kvcfg=kvcfg,
+                                          num_blocks=num_blocks)
         self.pos = jnp.zeros((B,), jnp.int32)
         self.cur_tok = jnp.zeros((B, 1), jnp.int32)
         self.done = jnp.ones((B,), bool)        # empty slot = done lane
@@ -67,6 +110,16 @@ class DeviceRunner:
 
     # -------------------------------------------------------------- admission
 
+    def _assemble(self, reqs, bucket: int, prefix_len: int):
+        """Host-side token assembly: one transfer, tail tokens only."""
+        import numpy as np
+
+        toks_h = np.zeros((len(reqs), bucket), np.int32)
+        for i, req in enumerate(reqs):
+            tail = req.prompt[prefix_len:]
+            toks_h[i, :len(tail)] = tail
+        return jnp.asarray(toks_h)
+
     def admit_group(self, params, group, frames=None):
         """One bucketed prefill dispatch for ``len(group.slots)`` prompts.
 
@@ -76,41 +129,111 @@ class DeviceRunner:
         prefill with the stats tap on, samples each row's first token, and
         writes each row's cache into its slot.
 
+        Paged groups share a ``prefix_len``: the batch holds only the prompt
+        *tails* (the cached prefix is gathered from the pool and attended at
+        offset ``prefix_len``), and the compact prefill k/v is scattered
+        into each slot's physical blocks.
+
         Returns ``(first_tokens (n,), finished (n,), stats)`` — the first two
         as host arrays (one sync for the whole group); ``finished[i]`` marks
         a request already over at admission (budget of 1, EOS on the first
         token, or a prompt that fills the cache exactly).
         """
-        import numpy as np
-
-        ecfg = self.ecfg
-        slots, reqs = group.slots, group.requests
-        n, bucket = len(reqs), group.bucket
-        toks_h = np.zeros((n, bucket), np.int32)   # assemble on host: one
-        for i, req in enumerate(reqs):             # transfer, not n dispatches
-            toks_h[i, :len(req.prompt)] = req.prompt
-        batch = {"tokens": jnp.asarray(toks_h)}
+        if self.paged:
+            return self._admit_group_paged(params, group, frames)
+        batch = {"tokens": self._assemble(group.requests, group.bucket, 0)}
         if frames is not None:
             batch["frames"] = frames
         logits, sstate, stats = self._prefill_jit(params, batch,
-                                                  max_len=ecfg.max_len)
+                                                  max_len=self.ecfg.max_len)
+        reqs = group.requests
         plens = jnp.asarray([len(r.prompt) for r in reqs], jnp.int32)
         last = jnp.take_along_axis(logits, (plens - 1)[:, None, None],
                                    axis=1)[:, 0]
+        self.state = _write_slots(self.state, sstate, group.slots)
+        first_h, fin_h = self._finish_admission(group.slots, reqs, last,
+                                                plens)
+        return first_h, fin_h, stats
+
+    def _finish_admission(self, slots, reqs, last, plens):
+        """Shared admission epilogue: sample each row's first token, arm the
+        slot lanes (pos/cur_tok/budget/done — a request can be over already:
+        budget of 1, EOS first token, or a cache-filling prompt), and pull
+        the one host sync for the group."""
+        ecfg = self.ecfg
         self.key, sk = jax.random.split(self.key)
         first = sample(last, sk, ecfg.temperature)
         idx = jnp.asarray(slots, jnp.int32)
-        self.state = _write_slots(self.state, sstate, slots)
         self.pos = self.pos.at[idx].set(plens)  # decode overwrites pads
         self.cur_tok = self.cur_tok.at[idx].set(first[:, None])
-        budget = jnp.asarray([r.max_new for r in reqs], jnp.int32) - 1
+        budget = jnp.asarray([r.remaining for r in reqs], jnp.int32) - 1
         fin = ((plens >= ecfg.max_len) | (budget <= 0)
                | (first == ecfg.eos_token))
         self.remaining = self.remaining.at[idx].set(budget)
         self.done = self.done.at[idx].set(fin)
         self.host_syncs += 1
-        first_h, fin_h = jax.device_get((first, fin))
+        return jax.device_get((first, fin))
+
+    def _admit_group_paged(self, params, group, frames=None):
+        import numpy as np
+
+        ecfg, kvcfg = self.ecfg, self.kvcfg
+        bs = kvcfg.block_size
+        slots, reqs = group.slots, group.requests
+        n, bucket, pfx = len(reqs), group.bucket, group.prefix_len
+        batch = {"tokens": self._assemble(reqs, bucket, pfx)}
+        if frames is not None:
+            batch["frames"] = frames
+        prefix_kv = None
+        if pfx:
+            nbp = pfx // bs
+            ptab = jnp.asarray([[r.blocks[j] for j in range(nbp)]
+                                for r in reqs], jnp.int32)
+            prefix_kv = _gather_prefix(self.state["stack"], ptab, kvcfg)
+        logits, sstate, stats = self._prefill_jit(
+            params, batch, max_len=ecfg.max_len, prefix_kv=prefix_kv,
+            pos0=pfx)
+        tlens = jnp.asarray([len(r.prompt) - pfx for r in reqs], jnp.int32)
+        last = jnp.take_along_axis(logits, (tlens - 1)[:, None, None],
+                                   axis=1)[:, 0]
+        # scatter the compact tail k/v into each slot's physical blocks;
+        # pad blocks past the prompt (and any logical block the request
+        # never owns) write to the sink
+        nbw = -(-bucket // bs)
+        pb0 = pfx // bs
+        phys = np.full((n, nbw), SINK, np.int32)
+        for i, r in enumerate(reqs):
+            plen = len(r.prompt)
+            for j in range(nbw):
+                lb = pb0 + j
+                if lb * bs < plen and lb < len(r.blocks):
+                    phys[i, j] = r.blocks[lb]
+        self.state["stack"] = _write_paged(self.state["stack"],
+                                           sstate["stack"],
+                                           jnp.asarray(phys), bs)
+        # per-slot block-table rows (unowned entries stay at the sink)
+        nblk = ecfg.max_len // bs
+        rows = np.full((n, nblk), SINK, np.int32)
+        for i, r in enumerate(reqs):
+            rows[i, :len(r.blocks)] = r.blocks
+        idx = jnp.asarray(slots, jnp.int32)
+        self.state["block_table"] = \
+            self.state["block_table"].at[idx].set(jnp.asarray(rows))
+        plens = jnp.asarray([len(r.prompt) for r in reqs], jnp.int32)
+        first_h, fin_h = self._finish_admission(slots, reqs, last, plens)
         return first_h, fin_h, stats
+
+    def release_slots(self, slots):
+        """Deactivate slots whose requests finished / were preempted or
+        cancelled: done lane on, budget zeroed, and (paged) the block-table
+        row pointed at the sink so the lane's clamped writes can never land
+        in blocks the allocator has handed to someone else."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        self.done = self.done.at[idx].set(True)
+        self.remaining = self.remaining.at[idx].set(0)
+        if self.paged:
+            self.state["block_table"] = \
+                self.state["block_table"].at[idx].set(SINK)
 
     # ----------------------------------------------------------------- decode
 
@@ -126,3 +249,29 @@ class DeviceRunner:
          self.key) = carry
         self.host_syncs += 1
         return jax.device_get((toks, valid, self.done))
+
+
+@partial(jax.jit, static_argnames=("kvcfg",))
+def _gather_prefix(stack_state, ptab, kvcfg):
+    """Materialize the shared-prefix k/v for a tail prefill: per run, gather
+    ``ptab``'s (n, nbp) physical blocks from each layer's pool and (for
+    quantized layouts) dequantize to f32 — the same values (and dtype) the
+    tail's quantize→dequantize attention read uses, so warm and cold
+    prefills see one consistent context.  (k, v) arrays (R, n, Hkv, P, ·),
+    post-rope, ready to ride the layer scan as xs."""
+    from repro.core.kvquant import dequantize_kv
+
+    out = []
+    for run in stack_state:
+        st = run["u0"]
+        if "k" in st:
+            kv = (_gather_pool(st["k"], ptab), _gather_pool(st["v"], ptab))
+        else:
+            kv = tuple(
+                dequantize_kv(_gather_pool(st[nm + "_q"], ptab),
+                              _gather_pool(st[nm + "_s"], ptab),
+                              jnp.float32, bits=kvcfg.bits,
+                              group_size=kvcfg.group_size)
+                for nm in ("k", "v"))
+        out.append(kv)
+    return out

@@ -37,27 +37,47 @@ def pick_decode_chunk(slots: int) -> int:
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: list
-    max_new: int
+    prompt: list                    # grows on preemption: orig + generated
+    max_new: int                    # ORIGINAL budget; remaining = max_new - len(out)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     frames: Any = None              # encdec stub modality input
+    cancelled: bool = False
+    blocks: list = dataclasses.field(default_factory=list)  # paged: owned blocks
+    prefix_len: int = 0             # paged: cached-prefix tokens this admission
+    admit_seq: int = -1             # admission order (preemption victim pick)
+    orig_len: int = 0               # submitted prompt length (pre-preemption)
+
+    def __post_init__(self):
+        if not self.orig_len:
+            self.orig_len = len(self.prompt)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.out)
 
 
 class GenResult(list):
     """A request's generated tokens.  Compares and prints as a plain list;
     ``unfinished`` marks a partial output (the engine stopped at
-    ``max_iters`` with the request still queued or mid-generation)."""
+    ``max_iters`` with the request still queued or mid-generation, or the
+    request was cancelled — ``cancelled`` distinguishes the latter)."""
 
-    def __init__(self, tokens=(), unfinished: bool = False):
+    def __init__(self, tokens=(), unfinished: bool = False,
+                 cancelled: bool = False):
         super().__init__(tokens)
         self.unfinished = unfinished
+        self.cancelled = cancelled
 
 
 @dataclasses.dataclass
 class AdmissionGroup:
-    """One bucketed prefill dispatch: requests padded to a shared length."""
+    """One bucketed prefill dispatch: requests padded to a shared length.
+
+    Paged prefix-cache hits carry a nonzero ``prefix_len`` — the bucket then
+    pads the prompt *tail* and the prefill attends to the cached prefix."""
     bucket: int
+    prefix_len: int = 0
     slots: List[int] = dataclasses.field(default_factory=list)
     requests: List[Request] = dataclasses.field(default_factory=list)
 
@@ -67,7 +87,8 @@ class AdmissionGroup:
 
 
 class Scheduler:
-    def __init__(self, ecfg, exact_buckets: bool = False):
+    def __init__(self, ecfg, exact_buckets: bool = False, kvcfg=None,
+                 num_blocks: int = 0):
         self.ecfg = ecfg
         # recurrent state would absorb pad tokens — prefill at exact length
         self.exact_buckets = exact_buckets
@@ -78,6 +99,18 @@ class Scheduler:
         self.admits_since_cal = 0
         self.tokens_since_cal = 0.0
         self._fresh_stats = False
+        # paged pool bookkeeping (DESIGN.md §8)
+        self.allocator = None
+        if kvcfg is not None and getattr(kvcfg, "paged", False):
+            from .blocks import BlockAllocator
+            self.allocator = BlockAllocator(
+                num_blocks, kvcfg.block_size,
+                prefix_cache=getattr(ecfg, "prefix_cache", True))
+        self._admit_seq = itertools.count()
+        self.prefill_tokens = 0.0       # padded tokens dispatched to prefill
+        self.preemptions = 0
+        self.pending_releases: List[int] = []   # slots to sink on device
+        self._recent_victims: set = set()       # no re-preemption until decode
 
     # ---------------------------------------------------------------- intake
 
@@ -101,6 +134,14 @@ class Scheduler:
                 f"prompt of {len(prompt)} tokens exceeds the engine's "
                 f"admissible length {limit} ({detail}); raise max_len / "
                 f"prompt_buckets or truncate the prompt")
+        if self.allocator is not None:
+            need = self.allocator.blocks_needed(len(prompt), max_new,
+                                                self.ecfg.max_len)
+            if need > self.allocator.capacity:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool holds "
+                    f"{self.allocator.capacity}; raise kv_pool_blocks or "
+                    f"shrink the prompt/max_new")
         rid = next(self._rid)
         self.queue.append(Request(rid, prompt, max_new, frames=frames))
         return rid
@@ -122,24 +163,92 @@ class Scheduler:
         for b in self.ecfg.prompt_buckets:
             if n <= b:
                 return min(b, self.ecfg.max_len)
-        return min(self.ecfg.prompt_buckets[-1], self.ecfg.max_len)
+        # beyond the largest bucket: only reachable by preemption-resumed
+        # prompts (submit() rejects external ones) — pad to max_len
+        return self.ecfg.max_len
+
+    # ------------------------------------------------------------ preemption
+
+    def _pick_victim(self, exclude) -> Optional[int]:
+        """Most-recently-admitted running slot (the youngest request loses —
+        FIFO keeps older work running; its resume re-prefill is cheap anyway
+        because its own prompt blocks stay in the prefix cache)."""
+        cands = [(self.slot_req[s].admit_seq, s) for s in self.active_slots()
+                 if s not in exclude]
+        return max(cands)[1] if cands else None
+
+    def _preempt(self, slot: int) -> Request:
+        """Evict a running slot: free its blocks and fold the generated
+        tokens into the prompt — a later re-prefill resumes the greedy
+        stream exactly (per-token quantization makes re-prefilled rows
+        identical to the evicted ones; the resume footprint stays constant:
+        ``len(prompt) + remaining == orig_len + max_new``).  The caller
+        requeues the returned request once the round's planning is done."""
+        req = self.slot_req[slot]
+        self.allocator.free_request(req.blocks)
+        req.blocks = []
+        req.prompt = list(req.prompt[:req.orig_len]) + list(req.out)
+        self.slot_req[slot] = None
+        self.pending_releases.append(slot)
+        self.preemptions += 1
+        self._recent_victims.add(req.rid)
+        return req
 
     def plan_admissions(self) -> List[AdmissionGroup]:
         """Pop queued requests into free slots in FIFO order, then group the
-        round's admissions by bucket — each group is one prefill dispatch."""
-        picked = []
-        for slot in self.free_slots():
-            if not self.queue:
-                break
-            picked.append((slot, self.queue.popleft()))
-        groups: Dict[int, AdmissionGroup] = {}
+        round's admissions by (bucket, prefix_len) — each group is one
+        prefill dispatch.
+
+        Paged: each admission reserves its blocks upfront (prompt +
+        generation budget, minus prefix-cache hits).  On pool exhaustion a
+        running slot is preempted (blocks freed, its slot handed to the
+        admission) instead of stalling; victims are held out of the queue
+        until planning ends, then requeued at the front — they resume via
+        re-prefill (their own blocks stay prefix-cached), never in the same
+        round they were evicted."""
+        picked: List[tuple] = []
+        victims: List[Request] = []
+        free = self.free_slots()
+        while free and self.queue:
+            req = self.queue[0]
+            if self.allocator is not None:
+                try:
+                    req.blocks, req.prefix_len = self.allocator.allocate(
+                        req.prompt, req.remaining, self.ecfg.max_len)
+                except MemoryError:
+                    victim = self._pick_victim(
+                        exclude={s for s, _ in picked})
+                    # a fresh victim may not preempt in turn until decode
+                    # has progressed — breaks admit-round ping-pong cycles
+                    if victim is None or req.rid in self._recent_victims:
+                        break               # nothing evictable — wait
+                    victims.append(self._preempt(victim))
+                    free = self.free_slots()
+                    continue                # retry with the freed blocks
+            self.queue.popleft()
+            req.admit_seq = next(self._admit_seq)
+            slot = free.pop(0)
+            self.slot_req[slot] = req       # claimed now: a preemption later
+            picked.append((slot, req))      # in this round must not free it
+        for req in reversed(victims):       # oldest victim resumes first
+            self.queue.appendleft(req)
+        groups: Dict[tuple, AdmissionGroup] = {}
         for slot, req in picked:
-            g = groups.setdefault(self.bucket(len(req.prompt)),
-                                  AdmissionGroup(self.bucket(len(req.prompt))))
+            tail = len(req.prompt) - req.prefix_len
+            key = (self.bucket(tail), req.prefix_len)
+            g = groups.setdefault(key, AdmissionGroup(*key))
             g.slots.append(slot)
             g.requests.append(req)
-            self.slot_req[slot] = req
-        return list(groups.values())
+        # dispatch order = ascending prefix_len: a same-round prefix hit on
+        # a sibling's freshly registered blocks always reads blocks the
+        # *writer* prefills, and along one hash chain the reader's match
+        # necessarily extends past the writer's own prefix — reader
+        # prefix_len > writer prefix_len.  Sorting is therefore a
+        # topological order of same-round dependencies: every group's
+        # gather dispatches after the scatters it reads (equal prefix_len
+        # ⇒ no dependency).  Without it a reader could share a group
+        # created before its writer's and gather still-zero pool blocks.
+        return sorted(groups.values(), key=lambda g: g.prefix_len)
 
     # -------------------------------------------------------- requant cadence
 
@@ -147,10 +256,12 @@ class Scheduler:
         """n requests prefilled (fresh statistics folded into the session)."""
         self.admits_since_cal += n
         self.tokens_since_cal += tokens
+        self.prefill_tokens += tokens
         self._fresh_stats = True
 
     def note_decoded(self, tokens: int):
         self.tokens_since_cal += tokens
+        self._recent_victims.clear()    # decode progressed — preemption rearmed
 
     def should_requant(self) -> bool:
         if self.ecfg.recalibrate_tokens > 0:
@@ -170,6 +281,33 @@ class Scheduler:
         req.done = True
         self.finished[req.rid] = req
         self.slot_req[slot] = None
+        if self.allocator is not None:
+            self.allocator.free_request(req.blocks)
+            req.blocks = []
+            self.pending_releases.append(slot)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a queued or running request: its slot and (paged) blocks
+        free immediately and the partial output lands in ``finished`` as
+        ``cancelled`` (``results()`` flags it unfinished).  Returns False
+        for unknown/already-finished rids."""
+        for req in list(self.queue):
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.cancelled = True
+                self.finished[rid] = req
+                return True
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                req.cancelled = True
+                self.finished[rid] = req
+                self.slot_req[slot] = None
+                if self.allocator is not None:
+                    self.allocator.free_request(req.blocks)
+                    req.blocks = []
+                self.pending_releases.append(slot)
+                return True
+        return False
 
     def record_block(self, tokens, valid, done) -> int:
         """Fold one decode block's host copies into per-request outputs.
@@ -191,8 +329,11 @@ class Scheduler:
 
     def results(self, include_partials: bool = True) -> Dict[int, GenResult]:
         """Finished outputs, plus (by default) in-flight/queued partials
-        flagged ``unfinished=True`` — nothing submitted is silently dropped."""
-        out = {rid: GenResult(req.out) for rid, req in self.finished.items()}
+        flagged ``unfinished=True`` — nothing submitted is silently dropped.
+        Cancelled requests report their partial output with both flags."""
+        out = {rid: GenResult(req.out, unfinished=req.cancelled,
+                              cancelled=req.cancelled)
+               for rid, req in self.finished.items()}
         if include_partials:
             pending = [r for r in self.slot_req if r is not None]
             pending += list(self.queue)

