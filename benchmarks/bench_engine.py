@@ -26,7 +26,11 @@ regression cannot be silently reintroduced.
 The model is deliberately tiny: the bench measures the *dispatch* path the
 refactor moved on-device, not kernel throughput (that is bench_runtime /
 bench_kvcache territory).  Each mode runs a warm-up wave first so jit
-compilation is excluded — both patterns are timed steady-state.
+compilation is excluded — both patterns are timed steady-state, and two
+runtime invariants are gated alongside the perf numbers (DESIGN.md
+§"Static analysis & runtime invariants"): the timed wave must compile
+ZERO new XLA programs (jit-cache counts per row), and a steady-state
+decode loop must survive ``jax.transfer_guard("disallow")``.
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--fast]
 Emits results/BENCH_engine.json (picked up by benchmarks/report.py);
@@ -73,6 +77,10 @@ class Baseline:
                                         full_logits=True),
                                 static_argnames=("max_len",))
 
+    @property
+    def compiled_programs(self) -> int:
+        return self._decode._cache_size() + self._prefill._cache_size()
+
     def run(self, params, prompts, max_new: int):
         B = len(prompts)
         state = lm.init_decode_state(CFG, B, MAX_LEN)
@@ -112,6 +120,10 @@ class Fused:
                              NO_QUANT,
                              EngineConfig(max_slots=slots, max_len=MAX_LEN,
                                           decode_chunk=chunk))
+
+    @property
+    def compiled_programs(self) -> int:
+        return self.eng.compiled_programs
 
     def run(self, params, prompts, max_new: int):
         self.eng.params = params                  # engine is reusable
@@ -164,10 +176,44 @@ def prefix_scenario(params, max_new: int):
 
 
 def timed(runner, params, prompts, max_new):
+    """Warm wave (jit compiles), then the timed steady wave.  Also returns
+    (programs after warm-up, programs compiled DURING the steady wave) from
+    the runner's jit caches — the steady wave must compile nothing, or the
+    timing is part compilation and the serving path has a recompile bug
+    (tracecheck TC2xx's runtime counterpart)."""
     out = runner.run(params, prompts, max_new)    # warm wave: jit compiles
+    warm_programs = runner.compiled_programs
     t0 = time.perf_counter()
     out = runner.run(params, prompts, max_new)
-    return out, time.perf_counter() - t0
+    dt = time.perf_counter() - t0
+    return out, dt, warm_programs, runner.compiled_programs - warm_programs
+
+
+def transfer_guard_probe(params, max_new: int):
+    """Run a steady-state decode loop under ``jax.transfer_guard
+    ("disallow")`` — any implicit host↔device transfer raises.  The same
+    invariant tests/test_runtime_guards.py pins, probed here on the bench
+    workload so perf runs carry the evidence (EXPERIMENTS.md
+    §"Transfer-guard methodology")."""
+    prompts = workload(2)
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=2, max_len=MAX_LEN,
+                                 decode_chunk=4))
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    eng.step()                       # admission + first block: compiles here
+    try:
+        with jax.transfer_guard("disallow"):
+            while eng.scheduler.has_work():
+                if not eng.step():
+                    break
+        ok = True
+    except Exception as e:           # an implicit transfer raised
+        print(f"transfer-guard probe tripped: {e}")
+        ok = False
+    print(f"transfer_guard: steady-state decode loop implicit-transfer "
+          f"free ({'PASS' if ok else 'FAIL'})")
+    return ok
 
 
 def main(fast: bool = False, chunk: int = 0):
@@ -181,32 +227,37 @@ def main(fast: bool = False, chunk: int = 0):
     report = {"config": {"chunks": list(chunks), "max_new": max_new,
                          "model": CFG.name}, "rows": []}
     best = {}
-    print("slots,mode,chunk,tokens,wall_s,tok_s,host_syncs,syncs_per_token")
+    print("slots,mode,chunk,tokens,wall_s,tok_s,host_syncs,syncs_per_token,"
+          "programs,steady_new_programs")
     for slots in slot_counts:
         prompts = workload(slots)
-        (base_out, base_syncs), base_dt = timed(Baseline(), params, prompts,
-                                                max_new)
+        (base_out, base_syncs), base_dt, base_progs, base_new = timed(
+            Baseline(), params, prompts, max_new)
         n_tok = sum(len(o) for o in base_out)
         rows = [{"slots": slots, "mode": "baseline", "chunk": 1,
                  "tokens": n_tok, "wall_s": round(base_dt, 4),
                  "tok_s": round(n_tok / base_dt, 1),
                  "host_syncs": base_syncs,
-                 "syncs_per_token": round(base_syncs / n_tok, 3)}]
+                 "syncs_per_token": round(base_syncs / n_tok, 3),
+                 "programs": base_progs, "steady_new_programs": base_new}]
         for K in chunks:
-            (fus_out, fus_syncs), fus_dt = timed(Fused(slots, K), params,
-                                                 prompts, max_new)
+            (fus_out, fus_syncs), fus_dt, fus_progs, fus_new = timed(
+                Fused(slots, K), params, prompts, max_new)
             assert fus_out == base_out, \
                 f"fused decode (K={K}) diverged from the per-token baseline"
             rows.append({"slots": slots, "mode": "fused", "chunk": K,
                          "tokens": n_tok, "wall_s": round(fus_dt, 4),
                          "tok_s": round(n_tok / fus_dt, 1),
                          "host_syncs": fus_syncs,
-                         "syncs_per_token": round(fus_syncs / n_tok, 3)})
+                         "syncs_per_token": round(fus_syncs / n_tok, 3),
+                         "programs": fus_progs,
+                         "steady_new_programs": fus_new})
         for r in rows:
             report["rows"].append(r)
             print(f"{r['slots']},{r['mode']},{r['chunk']},{r['tokens']},"
                   f"{r['wall_s']},{r['tok_s']},{r['host_syncs']},"
-                  f"{r['syncs_per_token']}")
+                  f"{r['syncs_per_token']},{r['programs']},"
+                  f"{r['steady_new_programs']}")
         best[slots] = max((r for r in rows if r["mode"] == "fused"),
                           key=lambda r: r["tok_s"])
 
@@ -224,6 +275,14 @@ def main(fast: bool = False, chunk: int = 0):
         K = f["chunk"]
         budget = 1.0 / K + 1.0 / max_new + 0.01
         ok = f["syncs_per_token"] <= budget
+        # the timed wave repeats the warm wave's shapes exactly — any new
+        # program means the serving path recompiles in steady state
+        stale = [r for r in report["rows"] if r["slots"] == slots
+                 and r["steady_new_programs"] != 0]
+        if stale:
+            print(f"  steady-wave recompiles at slots={slots}: "
+                  f"{[(r['mode'], r['chunk'], r['steady_new_programs']) for r in stale]}")
+            ok = False
         if slots >= 4 and not fast:
             # wall-clock gate only at full scale — the --fast CI smoke keeps
             # the deterministic syncs/token check (tiny workloads on shared
@@ -248,6 +307,10 @@ def main(fast: bool = False, chunk: int = 0):
     prefix_row, prefix_ok = prefix_scenario(params, max_new=8 if fast else 16)
     report["prefix"] = prefix_row
     ok_all = ok_all and prefix_ok
+    # steady-state decode must be free of implicit host↔device transfers
+    guard_ok = transfer_guard_probe(params, max_new=8 if fast else 16)
+    report["transfer_guard_clean"] = guard_ok
+    ok_all = ok_all and guard_ok
     print(f"crossover: fused-at-best-K beats baseline from {crossover} "
           f"slot(s) on this workload (max_new={max_new}); the engine "
           f"default keeps K=1 at 1 slot — the 1-slot win is "

@@ -62,6 +62,34 @@ def measured_bytes(d, dp, mode):
     return float(ca.get("bytes accessed", 0.0))
 
 
+def compile_count_probe():
+    """jit-cache discipline for the ttq decode matmul: repeat calls at a
+    seen shape must hit the cache (one program per shape, counted via
+    ``_cache_size()`` — the same counter ``TTQEngine.compiled_programs``
+    aggregates and tracecheck's TC2xx pass guards statically).  Returns
+    (programs after 2×same + 1×new shape, expected)."""
+    from repro.core.qdq import unpack_bits
+    d, dp = QWEN3["0.6B"]
+
+    @jax.jit
+    def fn(xx, pk, S, Z, dinv):
+        w = unpack_bits(pk, d, 4).astype(jnp.float32)
+        w = w.reshape(dp, d // G, G) * S[..., None] + Z[..., None]
+        return (xx * dinv) @ w.reshape(dp, d).T.astype(jnp.bfloat16)
+
+    def args(rows):
+        return (jnp.zeros((rows, d), jnp.bfloat16),
+                jnp.zeros((dp, d // 8), jnp.int32),
+                jnp.ones((dp, d // G), jnp.float32),
+                jnp.zeros((dp, d // G), jnp.float32),
+                jnp.ones((d,), jnp.float32))
+
+    fn(*args(1))
+    fn(*args(1))             # same shape: cache hit, no new program
+    fn(*args(4))             # new batch shape: exactly one more
+    return fn._cache_size(), 2
+
+
 def run(fast: bool = True):
     rows = []
     for name, (d, dp) in QWEN3.items():
@@ -114,6 +142,11 @@ def main(fast: bool = True):
     print(f"xla_bytes_fp16_32B,{mfp:.0f}")
     print(f"xla_bytes_ttq4_32B,{mtq:.0f}")
     print(f"xla_speedup_32B,{mfp / mtq:.2f}x")
+    got, want = compile_count_probe()
+    print(f"jit_programs_after_2x_same_plus_1_new_shape,{got} (expect {want})")
+    if got != want:
+        raise SystemExit("bench_runtime jit-cache gate FAILED: repeated "
+                         "same-shape calls recompiled the decode matmul")
     return rows
 
 

@@ -290,6 +290,14 @@ class FusedRequantPlan:
         for key in self.families:
             self._family_fns[key] = jax.jit(partial(self._run_family, key))
 
+    @property
+    def compiled_programs(self) -> int:
+        """Programs resident in the per-family jit caches.  Steady state is
+        one per family: a growing count means some family argument is
+        changing shape/dtype between requants (a recompile regression —
+        DESIGN.md §"Static analysis & runtime invariants")."""
+        return sum(fn._cache_size() for fn in self._family_fns.values())
+
     # ------------------------------------------------------------- execution
 
     @property

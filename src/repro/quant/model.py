@@ -103,6 +103,12 @@ class QuantizedModel:
             return False
         return True
 
+    @property
+    def compiled_programs(self) -> int:
+        """Jit-cache entries of the fused requant plan (0 before the first
+        requant builds it)."""
+        return self._plan.compiled_programs if self._plan is not None else 0
+
     def _ensure_plan(self, stats) -> FusedRequantPlan:
         key = (jax.tree_util.tree_structure(self.params),
                jax.tree_util.tree_structure(stats))

@@ -226,6 +226,18 @@ class TTQEngine:
     def host_syncs(self):
         return self.runner.host_syncs
 
+    @property
+    def compiled_programs(self) -> int:
+        """XLA programs resident across the engine's jit caches (decode,
+        bucketed prefill, prefix gather, fused requant families).  Bounded
+        by construction: decode compiles once, prefill once per
+        (bucket, prefix_len, group_size) shape, requant once per family —
+        tests/test_runtime_guards.py pins the bound and benchmarks gate on
+        a zero steady-state delta (DESIGN.md §"Static analysis & runtime
+        invariants")."""
+        return (self.runner.compiled_programs
+                + self.qmodel.compiled_programs)
+
     # ------------------------------------------------- paged-pool metrics
 
     @property
@@ -285,21 +297,16 @@ class TTQEngine:
         finishes *at admission* (budget of 1, EOS or capacity on its first
         token) frees its slot immediately, and the next planning round hands
         that slot to the next queued request instead of stranding it."""
-        import jax.numpy as jnp
-
         while True:
             groups = self.scheduler.plan_admissions()
             self._flush_releases()   # preempted slots → sink before prefill
             if not groups:
                 break
             for group in groups:
-                frames = None
-                if self.cfg.family == "encdec":
-                    frames = jnp.stack([
-                        jnp.asarray(r.frames) if r.frames.ndim == 2
-                        else jnp.asarray(r.frames)[0] for r in group.requests])
-                first, fin, stats = self.runner.admit_group(self.params, group,
-                                                            frames=frames)
+                # encdec frames ride each Request; the runner stages them
+                # on device (the facade never allocates arrays)
+                first, fin, stats = self.runner.admit_group(self.params,
+                                                            group)
                 self.qmodel.calibrate(stats, tokens=group.tokens)
                 self.scheduler.note_admitted(len(group.requests), group.tokens)
                 for i, (slot, req) in enumerate(zip(group.slots,

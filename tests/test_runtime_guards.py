@@ -1,0 +1,149 @@
+"""Runtime guard rails: zero implicit transfers, bounded compilation.
+
+The static passes (tools/tracecheck) prove the *code* has no host-sync or
+recompile hazards; these tests prove the *runtime* agrees
+(DESIGN.md §"Static analysis & runtime invariants"):
+
+* steady-state engine decode runs under ``jax.transfer_guard("disallow")``
+  — every implicit host↔device transfer raises, so the loop's only
+  boundary crossings are the runner's explicit ``device_get``/
+  ``device_put`` (EXPERIMENTS.md §"Transfer-guard methodology");
+* a mixed-length paged workload compiles a bounded number of XLA
+  programs, and REPEATING the workload compiles zero new ones — bucketing
+  or requant changes that silently explode the jit caches trip here
+  before any benchmark notices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KVCacheConfig, NO_QUANT, ttq_policy
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, TTQEngine
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+
+# mixed lengths across two buckets; budgets staggered so slots finish (and
+# release) at different chunk boundaries inside the guarded region
+PROMPTS = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12, 6, 3, 7, 9, 2, 4],
+           [7, 7, 7, 2, 1]]
+BUDGETS = [9, 4, 7, 12]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _serve(eng, guard=False):
+    """Submit the workload; admission + first block warm (compile), the
+    rest of the decode loop optionally under the disallow guard."""
+    rids = [eng.submit(p, max_new=b) for p, b in zip(PROMPTS, BUDGETS)]
+    assert eng.step()                    # admission + first decode block
+    if guard:
+        with jax.transfer_guard("disallow"):
+            while eng.scheduler.has_work():
+                if not eng.step():
+                    break
+    else:
+        eng.run_all()
+    return [list(eng.scheduler.results()[r]) for r in rids]
+
+
+@pytest.mark.parametrize("kv_dtype,paged",
+                         [("bf16", False), ("int8", True)])
+def test_steady_state_decode_under_transfer_guard(params, kv_dtype, paged):
+    """The engine's steady-state decode loop does ZERO implicit transfers:
+    chunked decode, mid-loop slot releases (explicit device_put + resident
+    constants) and empty admission rounds all run guarded; tokens match
+    the unguarded engine exactly.  Admission is the one sanctioned
+    boundary crossing (prompts enter the device there), so all requests
+    are admitted in the unguarded warmup step."""
+    def make():
+        return TTQEngine(CFG, params, NO_QUANT, EngineConfig(
+            max_slots=len(PROMPTS), max_len=64, decode_chunk=2,
+            kv_dtype=kv_dtype, kv_paged=paged, kv_block_size=16))
+
+    guarded = _serve(make(), guard=True)
+    plain = _serve(make(), guard=False)
+    assert guarded == plain
+
+
+def test_decode_many_direct_under_transfer_guard(params):
+    """The fused decode block itself (as the runner jits it) is
+    transfer-clean after warmup — the per-chunk device_get is the only
+    boundary crossing and it is explicit."""
+    from functools import partial
+
+    kvcfg = KVCacheConfig(dtype="int8")
+    toks = jnp.asarray([[5, 9, 17, 3], [100, 50, 25, 12]], jnp.int32)
+    _, state, _ = lm.prefill(CFG, params, {"tokens": toks}, max_len=32,
+                             kvcfg=kvcfg)
+    tok0 = jnp.full((2, 1), 7, jnp.int32)
+    pos0 = jnp.asarray([4, 4], jnp.int32)
+    done0 = jnp.zeros((2,), bool)
+    budget = jnp.full((2,), 100, jnp.int32)
+    key = jax.random.PRNGKey(1)
+    fn = jax.jit(partial(lm.decode_many, CFG, K=4, max_len=32, kvcfg=kvcfg))
+    out = fn(params, state, tok0, pos0, done0, budget, key)   # compile
+    jax.block_until_ready(out)
+    with jax.transfer_guard("disallow"):
+        (blk, valid), carry = fn(params, state, tok0, pos0, done0, budget,
+                                 key)
+        host = jax.device_get((blk, valid))                   # explicit: ok
+    ref = jax.device_get(out[0])
+    np.testing.assert_array_equal(host[0], ref[0])
+    np.testing.assert_array_equal(host[1], ref[1])
+
+
+def test_mixed_length_paged_workload_bounded_compiles(params):
+    """ISSUE 6 regression gate: a TTQ engine serving a mixed-length paged
+    workload compiles a bounded number of programs, and identical repeat
+    waves compile ZERO new ones (prefix-cache hits change admission shapes
+    once, between wave 1 and 2, then the shape set is closed)."""
+    buckets = (8, 16)
+    eng = TTQEngine(CFG, params, ttq_policy(), EngineConfig(
+        max_slots=2, max_len=64, decode_chunk=2, kv_paged=True,
+        kv_block_size=16, prompt_buckets=buckets))
+    base = eng.compiled_programs         # shared prefix-gather jit cache may
+    _serve(eng)                          # be warm from earlier tests
+    after_wave1 = eng.compiled_programs - base
+    _serve(eng)                          # warm prefix cache: new tail shapes
+    after_wave2 = eng.compiled_programs - base
+    _serve(eng)                          # identical to wave 2
+    after_wave3 = eng.compiled_programs - base
+    assert after_wave3 == after_wave2, (
+        f"steady-state wave compiled {after_wave3 - after_wave2} new "
+        f"program(s) — a recompile regression")
+
+    # analytic ceiling: 1 decode program; prefills bounded by
+    # (tail-bucket × group-size × cold/warm-prefix) combos; one prefix
+    # gather per (rows, prefix-blocks) shape; requant jits once per family
+    n_fams = eng.qmodel.compiled_programs
+    nblk = 64 // 16
+    prefill_bound = len(buckets) * eng.ecfg.max_slots * 2
+    gather_bound = eng.ecfg.max_slots * nblk
+    bound = 1 + prefill_bound + gather_bound + n_fams
+    assert after_wave1 <= bound and after_wave2 <= bound, (
+        f"{after_wave2} programs > analytic bound {bound}")
+    # the requant plan stays one program per family across repeated
+    # requants (the single-dispatch invariant)
+    assert n_fams == len(eng.qmodel._plan._family_fns)
+
+
+def test_compiled_programs_accounting(params):
+    """The facade counter grows only with new shapes.  Deltas, not
+    absolutes: the prefix-gather term is a module-level jit cache shared
+    across engines (and across earlier tests in a full suite run)."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=2, max_len=64, decode_chunk=2))
+    base = eng.compiled_programs
+    eng.submit(PROMPTS[0], max_new=4)
+    eng.run_all()
+    first = eng.compiled_programs
+    assert first - base >= 2             # >= one prefill + one decode
+    eng.submit(PROMPTS[0], max_new=4)    # identical shapes: no growth
+    eng.run_all()
+    assert eng.compiled_programs == first

@@ -5,6 +5,8 @@ lifecycle) live in test_serving.py; this file covers the pieces the split
 introduced — admission planning, the token-budget requantization cadence,
 and ``lm.decode_many``'s equivalence with repeated single-step decode.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -56,10 +58,17 @@ def test_decode_many_matches_repeated_decode_step(params, kv_dtype):
         pos = pos + 1
     ref = jnp.stack(ref, axis=1)                         # (B, K)
 
-    (blk, valid), (st2, tok2, pos2, done2, rem2, _) = lm.decode_many(
-        CFG, params, state, tok0, pos0,
-        jnp.zeros((2,), bool), jnp.full((2,), 100, jnp.int32),
-        jax.random.PRNGKey(1), K=K, max_len=32, kvcfg=kvcfg)
+    # jitted exactly as DeviceRunner jits it; warm once (compile-time
+    # constant transfers happen here), then the steady-state call must be
+    # free of implicit host↔device transfers (EXPERIMENTS.md
+    # §"Transfer-guard methodology")
+    fused = jax.jit(functools.partial(lm.decode_many, CFG, K=K, max_len=32,
+                                      kvcfg=kvcfg))
+    args = (params, state, tok0, pos0, jnp.zeros((2,), bool),
+            jnp.full((2,), 100, jnp.int32), jax.random.PRNGKey(1))
+    jax.block_until_ready(fused(*args))
+    with jax.transfer_guard("disallow"):
+        (blk, valid), (st2, tok2, pos2, done2, rem2, _) = fused(*args)
     np.testing.assert_array_equal(np.asarray(blk), np.asarray(ref))
     assert bool(valid.all())
     np.testing.assert_array_equal(np.asarray(pos2), np.asarray(pos0) + K)

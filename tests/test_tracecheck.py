@@ -1,0 +1,515 @@
+"""tools.tracecheck — the analyzer analyzed.
+
+Every rule gets at least one *catch* fixture (the bug class it exists
+for) and one *clean* fixture (the idiom it must not flag), written to a
+tmp tree and scanned with a custom root.  The suite ends with the
+self-run: the real ``src/repro`` must carry zero non-baselined findings
+(the CI gate, DESIGN.md §"Static analysis & runtime invariants").
+"""
+import os
+import sys
+import textwrap
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from tools.tracecheck import core, hostsync, recompile  # noqa: E402
+from tools.tracecheck import docs_links, kernelcontract, serving  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def write_tree(root, files):
+    for rel, src in files.items():
+        path = root / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(src))
+    return str(root)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------- host-sync
+
+
+def _hostsync(tmp_path, src, roots):
+    root = write_tree(tmp_path, {"mod.py": src})
+    repo = core.parse_paths(["mod.py"], root)
+    return hostsync.check(repo, roots=roots)
+
+
+def test_tc101_item_in_hot_function(tmp_path):
+    f = _hostsync(tmp_path, """
+        import jax.numpy as jnp
+        def hot(x):
+            y = jnp.sum(x)
+            return y.item()
+        def cold(x):
+            return x.item()
+    """, roots=["mod.hot"])
+    assert rules_of(f) == ["TC101"]
+    assert len(f) == 1 and "hot" in f[0].message     # cold stays silent
+
+
+def test_tc102_int_on_array_vs_config(tmp_path):
+    f = _hostsync(tmp_path, """
+        import os
+        import jax.numpy as jnp
+        def hot(x, n):
+            y = jnp.max(x)
+            lvl = int(os.environ.get("LVL", "1"))    # host data: clean
+            k = int(n)                               # param: clean
+            return int(y) + lvl + k                  # device value: catch
+    """, roots=["mod.hot"])
+    assert rules_of(f) == ["TC102"]
+    assert len(f) == 1
+
+
+def test_tc103_device_get_and_suppression(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+        def hot(x):
+            return jax.device_get(x)
+        def designed(x):
+            return jax.device_get(x)  # tracecheck: ok[TC103] the boundary
+    """
+    root = write_tree(tmp_path, {"mod.py": src})
+    f = [x for x in core.scan_paths(["mod.py"], root) if x.rule == "TC103"]
+    # scan_paths applies suppressions but hostsync's default roots don't
+    # exist here — call the pass directly, then filter suppressed lines
+    repo = core.parse_paths(["mod.py"], root)
+    raw = hostsync.check(repo, roots=["mod.hot", "mod.designed"])
+    kept = [x for x in raw
+            if not repo.modules[0].suppressed(x.line, x.rule)]
+    assert len(raw) == 2 and len(kept) == 1
+    assert "hot" in kept[0].message
+
+
+def test_tc104_np_asarray_on_device_value(tmp_path):
+    f = _hostsync(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+        def hot(x, slots):
+            y = jnp.dot(x, x)
+            a = np.asarray(slots)      # host list: clean
+            return np.asarray(y) + a   # device value: catch
+    """, roots=["mod.hot"])
+    assert rules_of(f) == ["TC104"]
+    assert len(f) == 1
+
+
+def test_tc105_python_if_on_traced_value(tmp_path):
+    f = _hostsync(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+        from functools import partial
+
+        @jax.jit
+        def traced(x):
+            y = jnp.sum(x)
+            if y > 0:                  # catch: tracer branch
+                return y
+            return -y
+
+        @partial(jax.jit, static_argnames=("mode",))
+        def clean(x, cfg=None, mode=0):
+            if cfg is None:            # is-None: clean
+                cfg = 1.0
+            if mode:                   # static arg: clean
+                return x * cfg
+            return x + cfg
+    """, roots=[])
+    assert rules_of(f) == ["TC105"]
+    assert len(f) == 1 and "traced" in f[0].message
+
+
+def test_tc105_scan_body_helper(tmp_path):
+    """Traced-ness flows into a lax.scan body and the helper it calls."""
+    f = _hostsync(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        def helper(x):
+            y = jnp.abs(x)
+            while (y > 0).any():       # catch: two frames below the scan
+                y = y - 1
+            return y
+
+        def outer(xs):
+            def step(c, x):
+                y = jnp.cumsum(x)
+                return c, helper(y)
+            return jax.lax.scan(step, 0, xs)
+    """, roots=[])
+    assert rules_of(f) == ["TC105"]
+    assert "helper" in f[0].message
+
+
+# --------------------------------------------------------- recompile-hazard
+
+
+def _recompile(tmp_path, src):
+    root = write_tree(tmp_path, {"mod.py": src})
+    return recompile.check(core.parse_paths(["mod.py"], root))
+
+
+def test_tc201_static_argnames_drift(tmp_path):
+    f = _recompile(tmp_path, """
+        import jax
+        def f(a, b, max_len=8):
+            return a + b
+        good = jax.jit(f, static_argnames=("max_len",))
+        bad = jax.jit(f, static_argnames=("maxlen",))
+    """)
+    assert rules_of(f) == ["TC201"]
+    assert len(f) == 1 and "maxlen" in f[0].message
+
+
+def test_tc201_partial_bound_args_consume_signature(tmp_path):
+    f = _recompile(tmp_path, """
+        import jax
+        from functools import partial
+        def f(cfg, params, batch, max_len=8):
+            return params
+        good = jax.jit(partial(f, None), static_argnames=("max_len",))
+        bad = jax.jit(partial(f, None), static_argnames=("cfg",))
+    """)
+    assert rules_of(f) == ["TC201"]
+    assert len(f) == 1 and "'cfg'" in f[0].message
+
+
+def test_tc202_mutable_default_in_jitted_signature(tmp_path):
+    f = _recompile(tmp_path, """
+        import jax
+        @jax.jit
+        def bad(x, opts={}):
+            return x
+        @jax.jit
+        def good(x, opts=()):
+            return x
+    """)
+    assert rules_of(f) == ["TC202"]
+    assert len(f) == 1
+
+
+def test_tc203_unhashable_literal_at_static_callsite(tmp_path):
+    f = _recompile(tmp_path, """
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnames=("shape",))
+        def make(x, shape=(4,)):
+            return x.reshape(shape)
+        def caller_good(x):
+            return make(x, shape=(2, 2))
+        def caller_bad(x):
+            return make(x, shape=[2, 2])
+    """)
+    assert rules_of(f) == ["TC203"]
+    assert len(f) == 1
+
+
+def test_tc204_nonfrozen_dataclass_static_arg(tmp_path):
+    f = _recompile(tmp_path, """
+        import dataclasses
+        import jax
+        from functools import partial
+
+        @dataclasses.dataclass(frozen=True)
+        class Good:
+            bits: int = 4
+
+        @dataclasses.dataclass
+        class Bad:
+            bits: int = 4
+
+        @partial(jax.jit, static_argnames=("cfg",))
+        def run(x, cfg=None):
+            return x
+
+        def caller(x):
+            run(x, cfg=Good())
+            run(x, cfg=Bad())
+            c = Bad()
+            return run(x, cfg=c)
+    """)
+    assert rules_of(f) == ["TC204"]
+    assert len(f) == 2              # direct ctor + local name
+
+
+# ---------------------------------------------------------- kernel-contract
+
+_KERNEL_OK = {
+    "kernels/__init__.py": "",
+    "kernels/mykern.py": """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _body(x_ref, o_ref):
+            o_ref[...] = jax.lax.dot_general(
+                x_ref[...], x_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        def mykern(x, bm=8):
+            return pl.pallas_call(
+                _body,
+                grid=(2, 2),
+                in_specs=[pl.BlockSpec((bm, bm), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+            )(x)
+    """,
+    "kernels/ref.py": """
+        import jax.numpy as jnp
+        def mykern_ref(x):
+            return x @ x
+    """,
+    "kernels/ops.py": """
+        from . import ref as _ref
+        from .mykern import mykern as _mykern_pallas
+
+        def mykern(x, *, use_pallas=True):
+            if use_pallas:
+                return _mykern_pallas(x)
+            return _ref.mykern_ref(x)
+    """,
+}
+
+
+def _kernelcheck(tmp_path, files):
+    root = write_tree(tmp_path, files)
+    rels = sorted(files)
+    return kernelcontract.check(core.parse_paths(rels, root))
+
+
+def test_kernel_contract_clean_tree(tmp_path):
+    assert _kernelcheck(tmp_path, _KERNEL_OK) == []
+
+
+def test_tc301_blockspec_arity_mismatch(tmp_path):
+    files = dict(_KERNEL_OK)
+    files["kernels/mykern.py"] = files["kernels/mykern.py"].replace(
+        "in_specs=[pl.BlockSpec((bm, bm), lambda i, j: (i, j))]",
+        "in_specs=[pl.BlockSpec((bm, bm), lambda i: (i, 0))]")
+    f = _kernelcheck(tmp_path, files)
+    assert rules_of(f) == ["TC301"]
+    assert "grid rank is 2" in f[0].message
+
+
+def test_tc301_scalar_prefetch_offset(tmp_path):
+    """PrefetchScalarGridSpec index maps take grid + prefetch args."""
+    files = dict(_KERNEL_OK)
+    files["kernels/paged.py"] = """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _body(tab_ref, x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def paged(tab, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(2, 2),
+                in_specs=[pl.BlockSpec((8, 8),
+                                       lambda i, j, tab_r: (tab_r[i], j))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            )
+            return pl.pallas_call(
+                _body, grid_spec=gs,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(tab, x)
+    """
+    files["kernels/ops.py"] += """
+        from .paged import paged as _paged_pallas
+
+        def paged(tab, x, *, use_pallas=True):
+            if use_pallas:
+                return _paged_pallas(tab, x)
+            return _ref.mykern_ref(x)
+    """
+    f = _kernelcheck(tmp_path, files)
+    # the out_specs lambda misses the prefetch arg: 2 != 2 + 1
+    assert rules_of(f) == ["TC301"]
+    assert "scalar-prefetch" in f[0].message
+
+
+def test_tc302_undispatched_kernel_entry(tmp_path):
+    files = dict(_KERNEL_OK)
+    files["kernels/ops.py"] = """
+        from . import ref as _ref
+
+        def mykern(x, *, use_pallas=True):
+            return _ref.mykern_ref(x)
+    """
+    f = _kernelcheck(tmp_path, files)
+    assert rules_of(f) == ["TC302"]
+
+
+def test_tc303_missing_ref_fallback(tmp_path):
+    files = dict(_KERNEL_OK)
+    files["kernels/ops.py"] = """
+        from .mykern import mykern as _mykern_pallas
+
+        def mykern(x, *, use_pallas=True):
+            return _mykern_pallas(x)
+    """
+    f = _kernelcheck(tmp_path, files)
+    assert rules_of(f) == ["TC303"]
+
+
+def test_tc304_silent_bf16_cast(tmp_path):
+    files = dict(_KERNEL_OK)
+    files["kernels/mykern.py"] = files["kernels/mykern.py"].replace(
+        "            )(x)",
+        "            )(x).astype(jnp.bfloat16)")
+    f = _kernelcheck(tmp_path, files)
+    assert rules_of(f) == ["TC304"]
+
+
+def test_tc305_unpinned_dot_in_kernel_body(tmp_path):
+    files = dict(_KERNEL_OK)
+    files["kernels/mykern.py"] = files["kernels/mykern.py"].replace(
+        ",\n                preferred_element_type=jnp.float32)", ")")
+    f = _kernelcheck(tmp_path, files)
+    assert rules_of(f) == ["TC305"]
+
+
+# --------------------------------------------------------- serving-invariant
+
+
+def test_tc401_tc402_alloc_and_table_outside_runner(tmp_path):
+    files = {
+        "src/repro/serving/scheduler.py": """
+            import jax.numpy as jnp
+            def plan(state, idx):
+                state["block_table"] = idx          # TC401
+                return jnp.zeros((4,), jnp.int32)   # TC402
+        """,
+        "src/repro/serving/runner.py": """
+            import jax.numpy as jnp
+            def admit(state, idx):
+                state["block_table"] = idx          # runner: clean
+                return jnp.zeros((4,), jnp.int32)   # runner: clean
+        """,
+    }
+    root = write_tree(tmp_path, files)
+    f = serving.check(core.parse_paths(sorted(files), root))
+    assert rules_of(f) == ["TC401", "TC402"]
+    assert all("scheduler.py" in x.path for x in f)
+
+
+def test_tc403_decode_path_allocation(tmp_path):
+    files = {
+        "src/repro/serving/runner.py": """
+            class DeviceRunner:
+                def decode_block(self, params):
+                    blocks = self.allocator.allocate(params, 1, 2)  # TC403
+                    return blocks
+                def admit_group(self, params, group):
+                    return self.allocator.allocate(params, 1, 2)    # clean
+        """,
+    }
+    root = write_tree(tmp_path, files)
+    f = serving.check(core.parse_paths(sorted(files), root))
+    assert rules_of(f) == ["TC403"]
+    assert len(f) == 1 and "decode_block" in f[0].message
+
+
+def test_tc404_facade_surface(tmp_path):
+    body = "\n".join(f"    {a} = None" for a in serving.ENGINE_ATTRS)
+    files = {
+        "src/repro/serving/engine.py": (
+            "class TTQEngine:\n" + body + "\n"),
+    }
+    root = write_tree(tmp_path, files)
+    assert serving.check(core.parse_paths(sorted(files), root)) == []
+    files["src/repro/serving/engine.py"] = (
+        "class TTQEngine:\n" + body.replace("    host_syncs = None", "    pass")
+        + "\n")
+    write_tree(tmp_path, files)
+    f = serving.check(core.parse_paths(sorted(files), root))
+    assert rules_of(f) == ["TC404"]
+    assert "host_syncs" in f[0].message
+
+
+# --------------------------------------------------------------- docs-links
+
+
+def test_docs_links_pass(tmp_path):
+    root = write_tree(tmp_path, {
+        "README.md": "[ok](DESIGN.md) and [broken](missing.md)\n",
+        "DESIGN.md": "# 1. Something\n",
+        # § is the section sign — escaped so the repo-wide self-run
+        # (which scans THIS file too) doesn't see the fixture's dangling
+        # citation as a literal
+        "src/mod.py": ('"""See DESIGN.md §1 and DESIGN.md §'
+                       'Nope."""\n'),
+    })
+    f = docs_links.check(root)
+    assert rules_of(f) == ["TCDOC1", "TCDOC2"]
+    assert len(f) == 2
+
+
+# ----------------------------------------------------- core: baseline, CLI
+
+
+def test_baseline_matching(tmp_path):
+    bl = tmp_path / "baseline.toml"
+    bl.write_text(
+        '# comment\n[[ignore]]\nrule = "TC103"\n'
+        'path = "a.py"\ncontains = "decode"\nreason = "designed"\n')
+    entries = core.load_baseline(str(bl))
+    assert entries == [{"rule": "TC103", "path": "a.py",
+                        "contains": "decode", "reason": "designed"}]
+    hit = core.Finding("TC103", "a.py", 5, "sync in decode_block")
+    miss_rule = core.Finding("TC104", "a.py", 5, "sync in decode_block")
+    miss_msg = core.Finding("TC103", "a.py", 9, "sync in admit")
+    assert core.baselined(hit, entries)
+    assert not core.baselined(miss_rule, entries)
+    assert not core.baselined(miss_msg, entries)
+    assert core.load_baseline(str(tmp_path / "nope.toml")) == []
+
+
+def test_cli_entry_point(subproc):
+    out = subproc(
+        "import subprocess, sys, os\n"
+        f"os.chdir({REPO!r})\n"
+        "r = subprocess.run([sys.executable, '-m', 'tools.tracecheck',\n"
+        "                    'src/repro'], capture_output=True, text=True)\n"
+        "print(r.stdout)\n"
+        "assert r.returncode == 0, r.stdout + r.stderr\n")
+    assert "tracecheck passed" in out
+
+
+# ----------------------------------------------------------------- self-run
+
+
+def test_self_run_src_repro_is_clean():
+    """The CI gate: the real tree carries zero non-baselined findings."""
+    new, old = core.run(["src/repro"], root=REPO)
+    assert new == [], "\n".join(str(f) for f in new)
+    # the baseline documents exactly the designed decode_block sync
+    assert [f.rule for f in old] == ["TC103"]
+
+
+def test_self_run_catches_real_bug_classes():
+    """Sanity: the passes are live on the real tree — the hot set and the
+    kernel registry are non-trivial (a refactor that silently empties the
+    reachability roots would turn the suite into a no-op)."""
+    from tools.tracecheck import callgraph
+    repo = core.parse_paths(["src/repro"], REPO)
+    cg = callgraph.build(repo)
+    hot = cg.reachable(hostsync.HOT_ROOTS)
+    assert "repro.models.lm.decode_many" in hot
+    assert "repro.serving.runner.DeviceRunner.decode_block" in hot
+    assert len(hot) > 20
+    assert len(cg.traced) > 20
+    kernels = [q for q in cg.funcs
+               if q.startswith("repro.kernels.") and "ops" not in q]
+    assert len(kernels) > 4

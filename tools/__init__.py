@@ -1,0 +1,1 @@
+"""Repo tooling: ``tools.tracecheck`` (static analysis) and doc checkers."""

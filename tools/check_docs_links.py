@@ -1,104 +1,28 @@
 #!/usr/bin/env python
-"""Docs-link checker (CI step): fails if documentation drifts from code.
+"""Docs-link checker — thin shim over the ``tools.tracecheck`` docs pass.
 
-Validates two kinds of references:
-
-1. markdown → file: every relative ``[text](path)`` link in the repo's
-   ``*.md`` files resolves to an existing file (anchors/URLs are skipped);
-2. source → docs sections: every EXPERIMENTS-/DESIGN-md section citation
-   (the ``<doc>.md §<section>`` form, bare word or quoted) found in
-   ``src``/``benchmarks``/``examples``/``tests`` resolves to a section
-   heading of that document; numeric citations need a heading with that
-   number prefix.
+The logic lives in ``tools/tracecheck/docs_links.py`` (rules TCDOC1/2);
+CI runs the whole suite via ``python -m tools.tracecheck``.  This entry
+point survives for muscle memory / older scripts.
 
 Usage:  python tools/check_docs_links.py   (exit 1 on any dangling ref)
 """
 from __future__ import annotations
 
 import os
-import re
 import sys
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SRC_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
-MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
-# EXPERIMENTS.md §Roofline | DESIGN.md §"KV-cache layout" | DESIGN.md §4
-CITE = re.compile(r"(EXPERIMENTS|DESIGN)\.md\s+§(?:\"([^\"]+)\"|(\w[\w-]*))")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-
-def md_files():
-    for dirpath, dirnames, filenames in os.walk(ROOT):
-        dirnames[:] = [d for d in dirnames
-                       if d not in (".git", "__pycache__", ".github", "results")]
-        for f in filenames:
-            if f.endswith(".md"):
-                yield os.path.join(dirpath, f)
-
-
-def check_md_links(errors):
-    for path in md_files():
-        base = os.path.dirname(path)
-        with open(path, encoding="utf-8") as f:
-            for ln, line in enumerate(f, 1):
-                for m in MD_LINK.finditer(line):
-                    target = m.group(1)
-                    if "://" in target or target.startswith("mailto:"):
-                        continue
-                    if not os.path.exists(os.path.join(base, target)):
-                        errors.append(f"{os.path.relpath(path, ROOT)}:{ln}: "
-                                      f"dangling link -> {target}")
-
-
-def headings(doc):
-    path = os.path.join(ROOT, doc)
-    if not os.path.exists(path):
-        return None
-    with open(path, encoding="utf-8") as f:
-        return [l.lstrip("#").strip() for l in f if l.startswith("#")]
-
-
-def check_section_citations(errors):
-    heads = {d: headings(f"{d}.md") for d in ("EXPERIMENTS", "DESIGN")}
-    for sub in SRC_DIRS:
-        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, sub)):
-            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
-            for fname in filenames:
-                if not fname.endswith(".py"):
-                    continue
-                path = os.path.join(dirpath, fname)
-                with open(path, encoding="utf-8") as f:
-                    # whole-file scan: the `\s+` crosses docstring line wraps
-                    # ("EXPERIMENTS.md\n    §Roofline"), which a per-line
-                    # scan would silently skip
-                    content = f.read()
-                for m in CITE.finditer(content):
-                    ln = content.count("\n", 0, m.start()) + 1
-                    doc, quoted, word = m.group(1), m.group(2), m.group(3)
-                    # docstring wraps put newlines+indent inside quoted names
-                    name = re.sub(r"\s+", " ", quoted or word)
-                    hs = heads[doc]
-                    if hs is None:
-                        errors.append(f"{os.path.relpath(path, ROOT)}:"
-                                      f"{ln}: cites missing {doc}.md")
-                        continue
-                    if word and word.isdigit():
-                        ok = any(h.startswith(f"{word}.") for h in hs)
-                    else:
-                        ok = any(name.lower() in h.lower() for h in hs)
-                    if not ok:
-                        errors.append(
-                            f"{os.path.relpath(path, ROOT)}:{ln}: "
-                            f"dangling citation {doc}.md §{name}")
+from tools.tracecheck import docs_links  # noqa: E402
 
 
 def main() -> int:
-    errors: list = []
-    check_md_links(errors)
-    check_section_citations(errors)
+    errors = docs_links.check()
     if errors:
         print("docs-link check FAILED:")
         for e in errors:
-            print(f"  {e}")
+            print(f"  {e.path}:{e.line}: {e.message}")
         return 1
     print("docs-link check passed: all markdown links and §-citations resolve")
     return 0

@@ -1,0 +1,29 @@
+"""tracecheck — repo-specific static analysis for the TTQ serving stack.
+
+Four AST passes over ``src/repro`` plus the docs-link checker, one entry
+point (``python -m tools.tracecheck``), one baseline file
+(``tools/tracecheck/baseline.toml``) for intentional exceptions:
+
+* **host-sync** (TC1xx) — implicit device→host transfers on hot paths:
+  ``.item()``, ``int()/float()/bool()`` on array values, ``np.asarray`` /
+  ``jax.device_get`` in functions reachable from ``lm.decode_many`` or
+  ``DeviceRunner``'s decode path, and Python ``if``/``while`` on
+  tracer-typed values inside jitted/scanned bodies;
+* **recompile-hazard** (TC2xx) — unhashable or non-frozen static args at
+  jit callsites, ``static_argnames``/``static_argnums`` drift against the
+  wrapped signature, mutable defaults in jitted signatures;
+* **kernel-contract** (TC3xx) — every ``pallas_call`` kernel must be
+  dispatched through an ``ops.py`` wrapper with a ``use_pallas`` escape
+  hatch backed by a ``ref.py`` oracle; BlockSpec index maps must match the
+  grid rank; no silent f32→bf16 casts; ``dot_general`` inside kernels must
+  pin ``preferred_element_type``;
+* **serving-invariant** (TC4xx) — no device allocation or block-table
+  mutation outside ``DeviceRunner``/``BlockAllocator``, and the
+  ``TTQEngine`` facade keeps its back-compat surface.
+
+See DESIGN.md §"Static analysis & runtime invariants" for the pass
+catalog and the baseline/suppression workflow.
+"""
+from .core import Finding, load_baseline, run, scan_paths  # noqa: F401
+
+__all__ = ["Finding", "load_baseline", "run", "scan_paths"]

@@ -1,0 +1,48 @@
+"""CLI: ``python -m tools.tracecheck [paths] [options]``.
+
+Default paths: ``src/repro``.  Exit 1 iff non-baselined findings remain.
+
+Options:
+  --no-baseline     report baselined findings too (and fail on them)
+  --no-docs         skip the docs-links pass
+  --pass NAME       run only the named pass (repeatable): host-sync,
+                    recompile-hazard, kernel-contract, serving-invariant,
+                    docs-links
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .core import run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.tracecheck")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files/dirs to scan (default: src/repro)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore baseline.toml (report everything)")
+    ap.add_argument("--no-docs", action="store_true",
+                    help="skip the docs-links pass")
+    ap.add_argument("--pass", dest="passes", action="append", default=None,
+                    metavar="NAME", help="run only this pass (repeatable)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src/repro"]
+    new, old = run(paths, use_baseline=not args.no_baseline,
+                   passes=args.passes, docs=not args.no_docs)
+    for f in new:
+        print(f)
+    if new:
+        print(f"\ntracecheck FAILED: {len(new)} finding(s)"
+              + (f" ({len(old)} baselined)" if old else ""))
+        print("fix, suppress with `# tracecheck: ok[RULE]`, or baseline "
+              "in tools/tracecheck/baseline.toml with a reason")
+        return 1
+    print(f"tracecheck passed: 0 new findings ({len(old)} baselined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,361 @@
+"""Best-effort call graph + name resolution over the parsed repo.
+
+Static analysis of a jax codebase needs to see *through* the wrappers the
+code actually uses — ``jax.jit(partial(lm.decode_many, cfg, ...))`` stored
+on ``self._decode_jit``, ``lax.scan(step_fn, ...)``, decorator-jitted
+defs — so this module builds:
+
+* ``funcs``: every (possibly nested) ``def``, keyed by dotted qualname
+  (``repro.serving.runner.DeviceRunner.decode_block``);
+* ``edges``: call edges, including edges through ``jax.jit`` /
+  ``functools.partial`` / ``jax.vmap`` / ``lax.scan`` / ``jax.checkpoint``
+  arguments and through ``self.<attr>`` where ``<attr>`` was assigned a
+  wrapped function in any method of the class;
+* ``traced``: functions whose bodies run under trace (jit-decorated, or
+  passed to jit/vmap/scan/pallas_call anywhere in the repo);
+* ``classes``: dataclass registry with frozen-ness (for the
+  recompile-hazard pass's static-arg checks).
+
+Resolution is intentionally conservative: unknown names resolve to
+``None`` and produce no edges/findings — the passes only act on what can
+be proven from the AST.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Module, Repo
+
+# call wrappers whose function-valued arguments we follow
+WRAPPERS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.scan", "jax.lax.fori_loop",
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.switch", "jax.lax.map",
+    "functools.partial", "jax.experimental.pallas.pallas_call",
+}
+# wrappers that put their function argument under trace
+TRACING = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.scan", "jax.lax.fori_loop",
+    "jax.lax.while_loop", "jax.lax.cond", "jax.lax.switch", "jax.lax.map",
+    "jax.experimental.pallas.pallas_call",
+}
+
+
+@dataclass
+class FuncInfo:
+    qualname: str
+    module: Module
+    node: ast.AST                       # FunctionDef | AsyncFunctionDef
+    class_name: Optional[str] = None    # enclosing class, if a method
+
+
+@dataclass
+class ClassInfo:
+    qualname: str
+    module: Module
+    node: ast.ClassDef
+    is_dataclass: bool = False
+    frozen: bool = False
+
+
+@dataclass
+class CallGraph:
+    repo: Repo
+    funcs: Dict[str, FuncInfo] = field(default_factory=dict)
+    classes: Dict[str, ClassInfo] = field(default_factory=dict)
+    imports: Dict[str, Dict[str, str]] = field(default_factory=dict)
+    edges: Dict[str, Set[str]] = field(default_factory=dict)
+    traced: Set[str] = field(default_factory=set)
+    # (module.Class, attr) -> function qualnames assigned to self.attr
+    attr_funcs: Dict[Tuple[str, str], Set[str]] = field(default_factory=dict)
+
+    # ------------------------------------------------------- name resolution
+
+    def dotted(self, mod: Module, expr: ast.AST,
+               self_class: Optional[str] = None) -> Optional[str]:
+        """Resolve a Name/Attribute chain to a dotted path, through the
+        module's import table.  ``self.x`` resolves against ``self_class``."""
+        parts: List[str] = []
+        node = expr
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        head, rest = parts[0], parts[1:]
+        table = self.imports.get(mod.name, {})
+        if head == "self" and self_class:
+            base = f"{mod.name}.{self_class}"
+        elif head in table:
+            base = table[head]
+        else:
+            base = f"{mod.name}.{head}" if self._local(mod, head) else head
+        return ".".join([base] + rest)
+
+    def _local(self, mod: Module, name: str) -> bool:
+        for stmt in mod.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)) and stmt.name == name:
+                return True
+            if isinstance(stmt, ast.Assign):
+                if any(isinstance(t, ast.Name) and t.id == name
+                       for t in stmt.targets):
+                    return True
+        return False
+
+    def resolve_func(self, dotted: Optional[str],
+                     hops: int = 4) -> Optional[FuncInfo]:
+        """Map a dotted path to a known def, chasing package re-exports
+        (``repro.core.KVCacheConfig`` → ``repro.core.policy.KVCacheConfig``)."""
+        for _ in range(hops):
+            if dotted is None:
+                return None
+            if dotted in self.funcs:
+                return self.funcs[dotted]
+            # chase one re-export hop: longest module prefix whose import
+            # table maps the next component
+            nxt = self._chase(dotted)
+            if nxt == dotted:
+                return None
+            dotted = nxt
+        return None
+
+    def resolve_class(self, dotted: Optional[str],
+                      hops: int = 4) -> Optional[ClassInfo]:
+        for _ in range(hops):
+            if dotted is None:
+                return None
+            if dotted in self.classes:
+                return self.classes[dotted]
+            nxt = self._chase(dotted)
+            if nxt == dotted:
+                return None
+            dotted = nxt
+        return None
+
+    def _chase(self, dotted: str) -> str:
+        parts = dotted.split(".")
+        for i in range(len(parts) - 1, 0, -1):
+            prefix, head = ".".join(parts[:i]), parts[i]
+            table = self.imports.get(prefix)
+            if table and head in table:
+                return ".".join([table[head]] + parts[i + 1:])
+        return dotted
+
+    # --------------------------------------------------------- reachability
+
+    def reachable(self, roots: List[str]) -> Set[str]:
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in self.funcs or r in self.edges]
+        # allow class roots: "…DeviceRunner" pulls in every method
+        for r in roots:
+            seen.update(q for q in self.funcs if q.startswith(r + "."))
+            if r in self.funcs:
+                seen.add(r)
+        stack = list(seen)
+        while stack:
+            cur = stack.pop()
+            for nxt in self.edges.get(cur, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        return seen
+
+
+# ------------------------------------------------------------------ build
+
+def _import_table(mod: Module) -> Dict[str, str]:
+    table: Dict[str, str] = {}
+    pkg = mod.name.rsplit(".", 1)[0] if "." in mod.name else ""
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                table[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:                      # relative import
+                base = mod.name
+                # level 1 from a module == its package; each extra level
+                # strips one more component
+                for _ in range(node.level):
+                    base = base.rsplit(".", 1)[0] if "." in base else ""
+                if node.module:
+                    base = f"{base}.{node.module}" if base else node.module
+            else:
+                base = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                table[a.asname or a.name] = (
+                    f"{base}.{a.name}" if base else a.name)
+    return table
+
+
+def _is_dataclass_deco(deco: ast.AST) -> Tuple[bool, bool]:
+    """(is_dataclass, frozen) for one decorator node."""
+    name = None
+    node = deco
+    frozen = False
+    if isinstance(node, ast.Call):
+        for kw in node.keywords:
+            if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                frozen = bool(kw.value.value)
+        node = node.func
+    if isinstance(node, ast.Attribute):
+        name = node.attr
+    elif isinstance(node, ast.Name):
+        name = node.id
+    return name == "dataclass", frozen
+
+
+def _collect_defs(cg: CallGraph, mod: Module):
+    def visit(body, prefix: str, class_name: Optional[str]):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}.{node.name}"
+                cg.funcs[q] = FuncInfo(q, mod, node, class_name)
+                visit(node.body, q, class_name)
+            elif isinstance(node, ast.ClassDef):
+                q = f"{prefix}.{node.name}"
+                is_dc = frozen = False
+                for d in node.decorator_list:
+                    dc, fr = _is_dataclass_deco(d)
+                    is_dc, frozen = is_dc or dc, frozen or fr
+                cg.classes[q] = ClassInfo(q, mod, node, is_dc, frozen)
+                visit(node.body, q, node.name)
+            elif isinstance(node, (ast.If, ast.Try, ast.With)):
+                for sub in ast.iter_child_nodes(node):
+                    if hasattr(sub, "body"):
+                        visit(getattr(sub, "body"), prefix, class_name)
+
+    visit(mod.tree.body, mod.name, None)
+
+
+def _func_refs(cg: CallGraph, mod: Module, expr: ast.AST,
+               self_class: Optional[str],
+               scope_q: Optional[str] = None) -> Set[str]:
+    """Function qualnames referenced by ``expr``, chasing wrapper calls
+    (``jax.jit(partial(f, ...))`` yields ``f``).  ``scope_q`` lets bare
+    names resolve to defs nested inside the referencing function (the
+    ``lax.scan(step_fn, ...)`` idiom)."""
+    out: Set[str] = set()
+    if isinstance(expr, ast.Call):
+        callee = cg.dotted(mod, expr.func, self_class)
+        if callee is not None and _canon(callee) in WRAPPERS:
+            for a in list(expr.args) + [k.value for k in expr.keywords]:
+                out |= _func_refs(cg, mod, a, self_class, scope_q)
+        return out
+    if isinstance(expr, ast.Name) and scope_q is not None \
+            and f"{scope_q}.{expr.id}" in cg.funcs:
+        out.add(f"{scope_q}.{expr.id}")
+        return out
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        d = cg.dotted(mod, expr, self_class)
+        fi = cg.resolve_func(d)
+        if fi is not None:
+            out.add(fi.qualname)
+    return out
+
+
+def _canon(dotted: str) -> str:
+    """Normalize common aliases (lax → jax.lax, partial → functools.partial,
+    pl.pallas_call → …pallas.pallas_call)."""
+    repl = {
+        "lax.": "jax.lax.", "partial": "functools.partial",
+        "jnp.": "jax.numpy.", "pl.": "jax.experimental.pallas.",
+        "jax.experimental.pallas": "jax.experimental.pallas",
+    }
+    for k, v in repl.items():
+        if k.endswith("."):
+            if dotted.startswith(k):
+                return v + dotted[len(k):]
+        elif dotted == k:
+            return v
+    return dotted
+
+
+def build(repo: Repo) -> CallGraph:
+    cg = CallGraph(repo)
+    for mod in repo:
+        cg.imports[mod.name] = _import_table(mod)
+        _collect_defs(cg, mod)
+
+    # self.<attr> = <wrapped fn> assignments (any method of the class)
+    for q, fi in cg.funcs.items():
+        if fi.class_name is None:
+            continue
+        cls_q = q.rsplit(".", 1)[0]
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Assign):
+                continue
+            refs = _func_refs(cg, fi.module, node.value, fi.class_name)
+            if not refs:
+                continue
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    cg.attr_funcs.setdefault((cls_q, tgt.attr),
+                                             set()).update(refs)
+
+    # edges + traced set
+    for q, fi in cg.funcs.items():
+        edges = cg.edges.setdefault(q, set())
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Call):
+                callee = cg.dotted(fi.module, node.func, fi.class_name)
+                canon = _canon(callee) if callee else None
+                if canon in WRAPPERS:
+                    for a in (list(node.args)
+                              + [k.value for k in node.keywords]):
+                        refs = _func_refs(cg, fi.module, a, fi.class_name,
+                                          scope_q=q)
+                        edges |= refs
+                        if canon in TRACING:
+                            cg.traced |= refs
+                    continue
+                if (isinstance(node.func, ast.Name)
+                        and f"{q}.{node.func.id}" in cg.funcs):
+                    edges.add(f"{q}.{node.func.id}")
+                    continue
+                fi2 = cg.resolve_func(callee)
+                if fi2 is not None:
+                    edges.add(fi2.qualname)
+                    continue
+                # self.<attr>() through the attr-assignment table
+                if (isinstance(node.func, ast.Attribute)
+                        and isinstance(node.func.value, ast.Name)
+                        and node.func.value.id == "self"
+                        and fi.class_name is not None):
+                    cls_q = f"{fi.module.name}.{fi.class_name}"
+                    edges |= cg.attr_funcs.get((cls_q, node.func.attr), set())
+        # decorators: @jax.jit / @partial(jax.jit, ...) put the def on trace
+        deco_list = getattr(fi.node, "decorator_list", [])
+        for d in deco_list:
+            name = cg.dotted(fi.module, d.func if isinstance(d, ast.Call)
+                             else d, fi.class_name)
+            if name is not None and _canon(name) in TRACING:
+                cg.traced.add(q)
+            elif (isinstance(d, ast.Call)
+                  and name is not None and _canon(name) == "functools.partial"
+                  and d.args):
+                inner = cg.dotted(fi.module, d.args[0], fi.class_name)
+                if inner is not None and _canon(inner) in TRACING:
+                    cg.traced.add(q)
+
+    # traced-ness propagates into helpers called from traced functions: a
+    # python `if` on a tracer is just as fatal two frames down
+    frontier = list(cg.traced)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in cg.edges.get(cur, ()):
+            if nxt not in cg.traced and nxt in cg.funcs:
+                # only propagate within the scanned repo
+                cg.traced.add(nxt)
+                frontier.append(nxt)
+    return cg

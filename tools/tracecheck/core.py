@@ -1,0 +1,206 @@
+"""tracecheck core: findings, baseline, suppression, pass registry, CLI.
+
+A *finding* is ``(rule, path, line, message)``.  Two escape hatches:
+
+* inline: append ``# tracecheck: ok[TC103]`` (comma-separate several rule
+  ids) to the offending line — scoped, visible in review;
+* baseline: a ``[[ignore]]`` table in ``baseline.toml`` with ``rule``,
+  ``path`` and a one-line ``reason`` — for findings that are *designed*
+  (e.g. the single host sync per decode chunk) rather than local quirks.
+
+``run(paths)`` parses every ``*.py`` under the given paths once, hands the
+parsed repo to each registered pass, then filters suppressed/baselined
+findings.  Exit status is non-zero iff non-baselined findings remain.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline.toml")
+
+_SUPPRESS = re.compile(r"#\s*tracecheck:\s*ok\[([^\]]+)\]")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One analyzer hit.  ``path`` is repo-relative with ``/`` separators."""
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+@dataclass
+class Module:
+    """A parsed source file: repo-relative path, dotted name, AST, lines."""
+    path: str                  # repo-relative, "/"-separated
+    name: str                  # dotted module name ("repro.serving.runner")
+    tree: ast.Module
+    lines: List[str]           # source lines (1-indexed via lines[i-1])
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        if not 1 <= line <= len(self.lines):
+            return False
+        m = _SUPPRESS.search(self.lines[line - 1])
+        return bool(m) and rule in {r.strip() for r in m.group(1).split(",")}
+
+
+class Repo:
+    """All parsed modules keyed by dotted name, plus path lookup."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+        self.by_name: Dict[str, Module] = {m.name: m for m in modules}
+
+    def __iter__(self):
+        return iter(self.modules)
+
+
+def _module_name(relpath: str) -> str:
+    """Dotted module name for a repo-relative path (src/ layout aware)."""
+    p = relpath.replace("\\", "/")
+    for prefix in ("src/",):
+        if p.startswith(prefix):
+            p = p[len(prefix):]
+            break
+    if p.endswith(".py"):
+        p = p[:-3]
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    return p.replace("/", ".")
+
+
+def parse_paths(paths: Sequence[str], root: str = REPO_ROOT) -> Repo:
+    """Parse every ``*.py`` under ``paths`` (files or directories)."""
+    files: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            files.append(ap)
+        else:
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+    mods = []
+    for f in sorted(set(files)):
+        rel = os.path.relpath(f, root).replace(os.sep, "/")
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            tree = ast.parse(src, filename=rel)
+        except SyntaxError as e:           # surface, don't crash the run
+            mods.append(Module(rel, _module_name(rel),
+                               ast.Module(body=[], type_ignores=[]),
+                               src.splitlines()))
+            tree = mods[-1].tree
+            tree._tracecheck_syntax_error = e  # type: ignore[attr-defined]
+            continue
+        mods.append(Module(rel, _module_name(rel), tree, src.splitlines()))
+    return Repo(mods)
+
+
+# --------------------------------------------------------------- baseline
+
+def load_baseline(path: str = BASELINE_PATH) -> List[dict]:
+    """Read ``[[ignore]]`` entries.  Python 3.10 has no ``tomllib``, so this
+    is a tolerant line parser for the flat subset the baseline uses:
+    ``[[ignore]]`` headers followed by ``key = "value"`` lines."""
+    try:
+        import tomllib  # type: ignore[import-not-found]  # py311+
+        with open(path, "rb") as f:
+            return list(tomllib.load(f).get("ignore", []))
+    except ImportError:
+        pass
+    except FileNotFoundError:
+        return []
+    entries: List[dict] = []
+    cur: Optional[dict] = None
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return []
+    for raw in lines:
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[ignore]]":
+            cur = {}
+            entries.append(cur)
+            continue
+        m = re.match(r'^(\w+)\s*=\s*"(.*)"\s*(?:#.*)?$', line)
+        if m and cur is not None:
+            cur[m.group(1)] = m.group(2)
+    return entries
+
+
+def baselined(finding: Finding, baseline: Iterable[dict]) -> bool:
+    """A baseline entry matches on (rule, path) plus an optional
+    ``contains`` message substring; line numbers are left out on purpose so
+    unrelated edits to a file don't invalidate the entry."""
+    return any(e.get("rule") == finding.rule and e.get("path") == finding.path
+               and e.get("contains", "") in finding.message
+               for e in baseline)
+
+
+# --------------------------------------------------------------- registry
+
+def all_passes():
+    """(name, callable) for each analysis pass; callable(Repo) -> findings."""
+    from . import hostsync, kernelcontract, recompile, serving
+    return [
+        ("host-sync", hostsync.check),
+        ("recompile-hazard", recompile.check),
+        ("kernel-contract", kernelcontract.check),
+        ("serving-invariant", serving.check),
+    ]
+
+
+def scan_paths(paths: Sequence[str], root: str = REPO_ROOT,
+               passes: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the AST passes over ``paths`` and return raw (unfiltered but
+    suppression-aware) findings, sorted."""
+    repo = parse_paths(paths, root)
+    findings: List[Finding] = []
+    for mod in repo:
+        err = getattr(mod.tree, "_tracecheck_syntax_error", None)
+        if err is not None:
+            findings.append(Finding("TC000", mod.path, err.lineno or 1,
+                                    f"syntax error: {err.msg}"))
+    for name, fn in all_passes():
+        if passes is not None and name not in passes:
+            continue
+        findings.extend(fn(repo))
+    out = []
+    for f in findings:
+        mod = next((m for m in repo if m.path == f.path), None)
+        if mod is not None and mod.suppressed(f.line, f.rule):
+            continue
+        out.append(f)
+    return sorted(set(out))
+
+
+def run(paths: Sequence[str], root: str = REPO_ROOT, use_baseline: bool = True,
+        passes: Optional[Sequence[str]] = None, docs: bool = True,
+        ) -> Tuple[List[Finding], List[Finding]]:
+    """Full run: AST passes + docs-links.  Returns (new, baselined)."""
+    findings = scan_paths(paths, root, passes)
+    if docs and (passes is None or "docs-links" in passes):
+        from . import docs_links
+        findings.extend(docs_links.check(root))
+        findings = sorted(set(findings))
+    baseline = load_baseline() if use_baseline else []
+    new = [f for f in findings if not baselined(f, baseline)]
+    old = [f for f in findings if baselined(f, baseline)]
+    return new, old

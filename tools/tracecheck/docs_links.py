@@ -1,0 +1,93 @@
+"""docs-links pass (TCDOC): markdown links and §-citations resolve.
+
+The former ``tools/check_docs_links.py`` (which now shims to this module)
+as a tracecheck pass, so CI runs one entry point:
+
+* TCDOC1 — every relative ``[text](path)`` link in the repo's ``*.md``
+  files resolves to an existing file (anchors/URLs skipped);
+* TCDOC2 — every ``EXPERIMENTS.md §…`` / ``DESIGN.md §…`` citation in
+  ``src``/``benchmarks``/``examples``/``tests``/``tools`` resolves to a
+  section heading of that document (numeric citations need a heading with
+  that number prefix).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional
+
+from .core import Finding, REPO_ROOT
+
+SRC_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+# EXPERIMENTS.md §Roofline | DESIGN.md §"KV-cache layout" | DESIGN.md §4
+CITE = re.compile(r"(EXPERIMENTS|DESIGN)\.md\s+§(?:\"([^\"]+)\"|(\w[\w-]*))")
+
+
+def _md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".github",
+                                    "results")]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def _headings(root: str, doc: str) -> Optional[List[str]]:
+    path = os.path.join(root, doc)
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return [ln.lstrip("#").strip() for ln in f if ln.startswith("#")]
+
+
+def check(root: str = REPO_ROOT) -> List[Finding]:
+    out: List[Finding] = []
+    for path in _md_files(root):
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as f:
+            for ln, line in enumerate(f, 1):
+                for m in MD_LINK.finditer(line):
+                    target = m.group(1)
+                    if "://" in target or target.startswith("mailto:"):
+                        continue
+                    if not os.path.exists(os.path.join(base, target)):
+                        out.append(Finding("TCDOC1", rel, ln,
+                                           f"dangling link -> {target}"))
+
+    heads = {d: _headings(root, f"{d}.md") for d in ("EXPERIMENTS", "DESIGN")}
+    for sub in SRC_DIRS:
+        top = os.path.join(root, sub)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path, encoding="utf-8") as f:
+                    # whole-file scan: the `\s+` crosses docstring line
+                    # wraps, which a per-line scan would silently skip
+                    content = f.read()
+                for m in CITE.finditer(content):
+                    ln = content.count("\n", 0, m.start()) + 1
+                    doc, quoted, word = m.group(1), m.group(2), m.group(3)
+                    name = re.sub(r"\s+", " ", quoted or word)
+                    hs = heads[doc]
+                    if hs is None:
+                        out.append(Finding("TCDOC2", rel, ln,
+                                           f"cites missing {doc}.md"))
+                        continue
+                    if word and word.isdigit():
+                        ok = any(h.startswith(f"{word}.") for h in hs)
+                    else:
+                        ok = any(name.lower() in h.lower() for h in hs)
+                    if not ok:
+                        out.append(Finding(
+                            "TCDOC2", rel, ln,
+                            f"dangling citation {doc}.md §{name}"))
+    return out

@@ -1,0 +1,276 @@
+"""kernel-contract pass (TC3xx): Pallas kernels keep their oracle contract.
+
+The repo's kernel discipline (DESIGN.md §2): every ``pallas_call`` kernel
+lives under a ``kernels/`` package, is *only* reached through a wrapper in
+``kernels/ops.py`` that takes ``use_pallas`` and falls back to a pure-jnp
+oracle in ``kernels/ref.py`` — so every code path runs everywhere and the
+kernel is diffable against reference math.  Rules:
+
+* TC301 — BlockSpec index-map arity must equal the grid rank (plus the
+  ``num_scalar_prefetch`` offset for ``PrefetchScalarGridSpec``): a
+  mismatched lambda fails only at trace time on the kernel path, which CI
+  in interpret mode may not exercise with every config;
+* TC302 — a public kernel entry (top-level def containing a
+  ``pallas_call``) must be dispatched from an ``ops.py`` wrapper that has
+  a ``use_pallas`` parameter (the escape hatch);
+* TC303 — every ``ops.py`` wrapper with ``use_pallas`` must call into the
+  ``ref`` module (the fallback must actually exist, not just the flag);
+* TC304 — no ``astype(bfloat16/float16)`` literal inside ``kernels/``:
+  a silent precision cast the jnp fallback won't replicate (the PR-4 bug
+  class); casts to a dynamic ``x.dtype`` are fine;
+* TC305 — ``dot_general``/``dot``/``matmul``/``einsum`` inside a kernel
+  body must pin ``preferred_element_type`` (MXU accumulates in the output
+  dtype otherwise — bf16 accumulation diverges from the f32 oracle).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import callgraph
+from .core import Finding, Module, Repo
+
+
+def _text(expr: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    node = expr
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _in_kernels_dir(mod: Module) -> bool:
+    return "kernels" in mod.path.split("/")
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    d = _text(node.func)
+    return d is not None and d.split(".")[-1] == "pallas_call"
+
+
+def _local_assigns(fn: ast.AST) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value
+    return out
+
+
+def _grid_rank(expr: ast.AST, local: Dict[str, ast.AST]) -> Optional[int]:
+    if isinstance(expr, ast.Name) and expr.id in local:
+        expr = local[expr.id]
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    return None
+
+
+def _blockspecs(expr: ast.AST, local: Dict[str, ast.AST]) -> List[ast.Call]:
+    """BlockSpec calls inside an in_specs/out_specs expression."""
+    if isinstance(expr, ast.Name) and expr.id in local:
+        expr = local[expr.id]
+    out = []
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call):
+            d = _text(n.func)
+            if d and d.split(".")[-1] == "BlockSpec":
+                out.append(n)
+    return out
+
+
+def _index_map_lambda(spec: ast.Call) -> Optional[ast.Lambda]:
+    for a in list(spec.args) + [k.value for k in spec.keywords]:
+        if isinstance(a, ast.Lambda):
+            return a
+    return None
+
+
+def _kernel_fn_names(first_arg: ast.AST, local: Dict[str, ast.AST]
+                     ) -> Set[str]:
+    """Names of defs referenced by pallas_call's kernel argument, chasing
+    one level of local assignment and ``partial`` wrapping."""
+    out: Set[str] = set()
+    seen = 0
+    stack = [first_arg]
+    while stack and seen < 50:
+        seen += 1
+        node = stack.pop()
+        if isinstance(node, ast.Name):
+            if node.id in local:
+                stack.append(local[node.id])
+            else:
+                out.add(node.id)
+        elif isinstance(node, ast.Call):
+            stack.extend(node.args)
+            stack.extend(k.value for k in node.keywords)
+        elif isinstance(node, ast.Lambda):
+            stack.append(node.body)
+        elif isinstance(node, ast.Attribute):
+            d = _text(node)
+            if d:
+                out.add(d.split(".")[-1])
+    return out
+
+
+_DOTS = {"dot_general", "dot", "matmul", "einsum"}
+
+
+def check(repo: Repo) -> List[Finding]:
+    cg = callgraph.build(repo)
+    out: List[Finding] = []
+
+    kernel_mods = [m for m in repo if _in_kernels_dir(m)]
+    ops_mods = [m for m in kernel_mods
+                if m.path.rsplit("/", 1)[-1] == "ops.py"]
+
+    # ---- collect pallas_call sites, public entries, and kernel-body fns
+    entries: Dict[str, callgraph.FuncInfo] = {}   # qualname -> entry def
+    body_fns: Set[str] = set()                    # qualnames of kernel bodies
+    for q, fi in cg.funcs.items():
+        if not _in_kernels_dir(fi.module):
+            continue
+        base = fi.module.path.rsplit("/", 1)[-1]
+        if base in ("ops.py", "ref.py", "__init__.py"):
+            continue
+        local = _local_assigns(fi.node)
+        has_pc = False
+        for node in ast.walk(fi.node):
+            if not (isinstance(node, ast.Call) and _is_pallas_call(node)):
+                continue
+            has_pc = True
+            # TC301: grid rank vs index-map arity
+            rank: Optional[int] = None
+            prefetch = 0
+            specs: List[ast.Call] = []
+            kw = {k.arg: k.value for k in node.keywords}
+            if "grid" in kw:
+                rank = _grid_rank(kw["grid"], local)
+            gs = kw.get("grid_spec")
+            if gs is not None:
+                if isinstance(gs, ast.Name) and gs.id in local:
+                    gs = local[gs.id]
+                if isinstance(gs, ast.Call):
+                    gkw = {k.arg: k.value for k in gs.keywords}
+                    if "grid" in gkw:
+                        rank = _grid_rank(gkw["grid"], local)
+                    pf = gkw.get("num_scalar_prefetch")
+                    if isinstance(pf, ast.Constant) and isinstance(
+                            pf.value, int):
+                        prefetch = pf.value
+                    for key in ("in_specs", "out_specs"):
+                        if key in gkw:
+                            specs += _blockspecs(gkw[key], local)
+            for key in ("in_specs", "out_specs"):
+                if key in kw:
+                    specs += _blockspecs(kw[key], local)
+            if rank is not None:
+                want = rank + prefetch
+                for spec in specs:
+                    lam = _index_map_lambda(spec)
+                    if lam is None:
+                        continue
+                    arity = len(lam.args.args)
+                    if arity != want:
+                        out.append(Finding(
+                            "TC301", fi.module.path, spec.lineno,
+                            f"BlockSpec index map takes {arity} args but "
+                            f"grid rank is {rank}"
+                            + (f" + {prefetch} scalar-prefetch"
+                               if prefetch else "")
+                            + f" = {want} (in {q})"))
+            # kernel body functions (for TC305)
+            if node.args:
+                names = _kernel_fn_names(node.args[0], local)
+                for n in names:
+                    fi2 = cg.resolve_func(f"{fi.module.name}.{n}")
+                    if fi2 is not None:
+                        body_fns.add(fi2.qualname)
+        if has_pc and fi.class_name is None and "." not in \
+                q[len(fi.module.name) + 1:]:
+            entries[q] = fi
+
+    # ---- ops.py wrappers: use_pallas param + ref fallback + dispatch map
+    dispatched: Set[str] = set()
+    for mod in ops_mods:
+        for q, fi in cg.funcs.items():
+            if fi.module is not mod:
+                continue
+            args = fi.node.args
+            params = [p.arg for p in args.posonlyargs + args.args
+                      + args.kwonlyargs]
+            if "use_pallas" not in params:
+                continue
+            calls_ref = False
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = cg.dotted(mod, node.func)
+                fi2 = cg.resolve_func(d)
+                if fi2 is not None:
+                    if fi2.qualname in entries:
+                        dispatched.add(fi2.qualname)
+                    if fi2.module.path.rsplit("/", 1)[-1] == "ref.py":
+                        calls_ref = True
+                elif d is not None and ".ref." in f".{d}":
+                    calls_ref = True
+            if not calls_ref:
+                out.append(Finding(
+                    "TC303", mod.path, fi.node.lineno,
+                    f"ops wrapper {q.split('.')[-1]} has use_pallas but "
+                    f"never calls a ref.py oracle — the escape hatch has "
+                    f"no fallback"))
+
+    # TC302: every public kernel entry must be dispatched from ops.py
+    for q, fi in entries.items():
+        if q not in dispatched:
+            out.append(Finding(
+                "TC302", fi.module.path, fi.node.lineno,
+                f"pallas kernel entry {q.split('.')[-1]} is not dispatched "
+                f"from any ops.py wrapper with use_pallas — callers can't "
+                f"fall back to the oracle"))
+
+    # ---- TC304 silent low-precision casts anywhere under kernels/
+    for mod in kernel_mods:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                continue
+            arg = node.args[0]
+            target = None
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                target = arg.value
+            else:
+                d = _text(arg)
+                if d:
+                    target = d.split(".")[-1]
+            if target in ("bfloat16", "float16", "fp16", "bf16"):
+                out.append(Finding(
+                    "TC304", mod.path, node.lineno,
+                    f"silent astype({target}) in kernels/ — precision "
+                    f"contract vs the jnp oracle; cast at the boundary "
+                    f"with the caller's dtype instead"))
+
+    # ---- TC305 unpinned accumulation dtype in kernel bodies
+    for q in sorted(body_fns):
+        fi = cg.funcs[q]
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _text(node.func)
+            if d is None or d.split(".")[-1] not in _DOTS:
+                continue
+            if not any(k.arg == "preferred_element_type"
+                       for k in node.keywords):
+                out.append(Finding(
+                    "TC305", fi.module.path, node.lineno,
+                    f"{d.split('.')[-1]} in kernel body "
+                    f"{q.split('.')[-1]} without preferred_element_type — "
+                    f"accumulation dtype follows inputs and diverges from "
+                    f"the f32 oracle"))
+    return out

@@ -1,0 +1,313 @@
+"""recompile-hazard pass (TC2xx): things that silently explode jit caches.
+
+Builds a registry of *jitted callables* — decorator-jitted defs
+(``@jax.jit`` / ``@partial(jax.jit, static_argnames=…)``) and
+``X = jax.jit(f, …)`` / ``self.X = jax.jit(partial(f, a, b), …)``
+assignments — with each one's effective signature (partial-bound args
+stripped) and static params.  Rules:
+
+* TC201 — ``static_argnames``/``static_argnums`` drift: a static name not
+  in the wrapped callable's remaining signature, or a num out of range
+  (jax raises at call time; the analyzer catches it at review time);
+* TC202 — mutable (``list``/``dict``/``set``) default in a jitted def's
+  signature: the default's identity is the cache key, so a fresh literal
+  per import/reload recompiles, and mutation invalidates silently;
+* TC203 — unhashable literal (list/dict/set display) passed to a static
+  param at a jit callsite: ``TypeError: unhashable`` at best, per-call
+  recompile if wrapped in ``tuple(...)`` at each site;
+* TC204 — non-frozen dataclass instance passed to a static param: Python
+  hashes it by identity, so every construction is a cache miss.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import callgraph
+from .core import Finding, Repo
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+_PARTIAL = {"functools.partial", "partial"}
+
+
+def _text(expr: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    node = expr
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _const_strs(expr: ast.AST) -> List[str]:
+    out = []
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.append(n.value)
+    return out
+
+
+def _const_ints(expr: ast.AST) -> List[int]:
+    out = []
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Constant) and isinstance(n.value, int)\
+                and not isinstance(n.value, bool):
+            out.append(n.value)
+    return out
+
+
+@dataclass
+class JitTarget:
+    """One jitted callable and its effective (post-partial) signature."""
+    static_names: Set[str]
+    static_nums: List[int]
+    params: Optional[List[str]]          # effective positional-or-kw names
+    def_node: Optional[ast.AST]          # wrapped def, when resolved
+    site_module: str
+    site_line: int
+
+
+def _def_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _unwrap_partial(cg: callgraph.CallGraph, mod, expr: ast.AST,
+                    self_class: Optional[str]
+                    ) -> Tuple[Optional[callgraph.FuncInfo], int, Set[str]]:
+    """Resolve ``f`` / ``partial(f, a, kw=b)`` → (def, n_bound_pos, bound_kw).
+    Nested partials accumulate."""
+    bound_pos, bound_kw = 0, set()
+    while isinstance(expr, ast.Call):
+        name = _text(expr.func)
+        if name is None or name.split(".")[-1] != "partial":
+            break
+        if not expr.args:
+            return None, 0, set()
+        bound_pos += len(expr.args) - 1
+        bound_kw |= {k.arg for k in expr.keywords if k.arg}
+        expr = expr.args[0]
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        fi = cg.resolve_func(cg.dotted(mod, expr, self_class))
+        return fi, bound_pos, bound_kw
+    return None, bound_pos, bound_kw
+
+
+def _jit_call_info(cg: callgraph.CallGraph, mod, call: ast.Call,
+                   self_class: Optional[str]) -> Optional[JitTarget]:
+    """If ``call`` is ``jax.jit(f_expr, static_…=…)``, build its target."""
+    name = _text(call.func)
+    if name is None or name.split(".")[-1] not in ("jit", "pmap"):
+        return None
+    if not call.args:
+        return None
+    static_names: Set[str] = set()
+    static_nums: List[int] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            static_names |= set(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            static_nums += _const_ints(kw.value)
+    fi, bound_pos, bound_kw = _unwrap_partial(cg, mod, call.args[0],
+                                              self_class)
+    params = None
+    def_node = None
+    if fi is not None:
+        def_node = fi.node
+        allp = _def_params(fi.node)
+        params = [p for p in allp[bound_pos:] if p not in bound_kw]
+    return JitTarget(static_names, static_nums, params, def_node,
+                     mod.path, call.lineno)
+
+
+def _decorated_jit(cg: callgraph.CallGraph, fi: callgraph.FuncInfo
+                   ) -> Optional[JitTarget]:
+    """JitTarget for ``@jax.jit`` / ``@partial(jax.jit, …)`` defs."""
+    for d in getattr(fi.node, "decorator_list", []):
+        names: Set[str] = set()
+        nums: List[int] = []
+        is_jit = False
+        if isinstance(d, ast.Call):
+            dn = _text(d.func)
+            if dn and dn.split(".")[-1] == "partial" and d.args:
+                inner = _text(d.args[0])
+                if inner and inner.split(".")[-1] in ("jit", "pmap"):
+                    is_jit = True
+            elif dn and dn.split(".")[-1] in ("jit", "pmap"):
+                is_jit = True
+            if is_jit:
+                for kw in d.keywords:
+                    if kw.arg == "static_argnames":
+                        names |= set(_const_strs(kw.value))
+                    elif kw.arg == "static_argnums":
+                        nums += _const_ints(kw.value)
+        else:
+            dn = _text(d)
+            is_jit = bool(dn) and dn.split(".")[-1] in ("jit", "pmap")
+        if is_jit:
+            return JitTarget(names, nums, _def_params(fi.node), fi.node,
+                             fi.module.path, fi.node.lineno)
+    return None
+
+
+_MUTABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+            ast.SetComp)
+
+
+def check(repo: Repo) -> List[Finding]:
+    cg = callgraph.build(repo)
+    out: List[Finding] = []
+
+    # registry: how callsites refer to jitted callables
+    by_qualname: Dict[str, JitTarget] = {}        # decorated defs
+    by_attr: Dict[Tuple[str, str], JitTarget] = {}  # (class_q, attr)
+    by_global: Dict[str, JitTarget] = {}          # module-level assigns
+
+    for q, fi in cg.funcs.items():
+        jt = _decorated_jit(cg, fi)
+        if jt is not None:
+            by_qualname[q] = jt
+
+    for mod in repo:
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) and isinstance(stmt.value,
+                                                           ast.Call):
+                jt = _jit_call_info(cg, mod, stmt.value, None)
+                if jt is None:
+                    continue
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        by_global[f"{mod.name}.{t.id}"] = jt
+    for q, fi in cg.funcs.items():
+        if fi.class_name is None:
+            continue
+        cls_q = q.rsplit(".", 1)[0]
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                jt = _jit_call_info(cg, fi.module, node.value, fi.class_name)
+                if jt is None:
+                    continue
+                for t in node.targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        by_attr[(cls_q, t.attr)] = jt
+
+    # ---- TC201 drift + TC202 mutable defaults, per registered target
+    seen_sites = set()
+    for jt in (list(by_qualname.values()) + list(by_global.values())
+               + list(by_attr.values())):
+        key = (jt.site_module, jt.site_line)
+        if key in seen_sites:
+            continue
+        seen_sites.add(key)
+        if jt.params is not None:
+            for n in sorted(jt.static_names):
+                if n not in jt.params:
+                    out.append(Finding(
+                        "TC201", jt.site_module, jt.site_line,
+                        f"static_argnames entry '{n}' not in the wrapped "
+                        f"callable's remaining signature {jt.params}"))
+            for i in jt.static_nums:
+                if not -len(jt.params) <= i < len(jt.params):
+                    out.append(Finding(
+                        "TC201", jt.site_module, jt.site_line,
+                        f"static_argnums entry {i} out of range for "
+                        f"signature {jt.params}"))
+        if jt.def_node is not None:
+            a = jt.def_node.args
+            for p, dflt in list(zip(reversed(a.args + a.posonlyargs),
+                                    reversed(a.defaults))) + \
+                    [(p, d) for p, d in zip(a.kwonlyargs, a.kw_defaults)
+                     if d is not None]:
+                if isinstance(dflt, _MUTABLE):
+                    out.append(Finding(
+                        "TC202", jt.site_module, dflt.lineno,
+                        f"mutable default for '{p.arg}' in jitted "
+                        f"signature — unhashable/identity-keyed cache "
+                        f"entry"))
+
+    # ---- TC203/TC204: callsite args bound to static params
+    def static_params(jt: JitTarget) -> Set[str]:
+        names = set(jt.static_names)
+        if jt.params is not None:
+            for i in jt.static_nums:
+                if -len(jt.params) <= i < len(jt.params):
+                    names.add(jt.params[i])
+        return names
+
+    def check_site(call: ast.Call, jt: JitTarget, mod, fn_q: str,
+                   local_unfrozen: Dict[str, str]):
+        statics = static_params(jt)
+        if not statics:
+            return
+        bindings: List[Tuple[str, ast.AST]] = []
+        if jt.params is not None:
+            for i, a in enumerate(call.args):
+                if i < len(jt.params):
+                    bindings.append((jt.params[i], a))
+        for kw in call.keywords:
+            if kw.arg is not None:
+                bindings.append((kw.arg, kw.value))
+        for pname, val in bindings:
+            if pname not in statics:
+                continue
+            if isinstance(val, _MUTABLE):
+                out.append(Finding(
+                    "TC203", mod.path, val.lineno,
+                    f"unhashable {type(val).__name__.lower()} literal "
+                    f"passed to static arg '{pname}' in {fn_q}"))
+                continue
+            ctor = None
+            if isinstance(val, ast.Call):
+                ctor = cg.resolve_class(cg.dotted(mod, val.func))
+            elif isinstance(val, ast.Name) and val.id in local_unfrozen:
+                ctor = cg.classes.get(local_unfrozen[val.id])
+            if ctor is not None and ctor.is_dataclass and not ctor.frozen:
+                out.append(Finding(
+                    "TC204", mod.path, val.lineno,
+                    f"non-frozen dataclass {ctor.qualname.split('.')[-1]} "
+                    f"passed to static arg '{pname}' in {fn_q} — hashes "
+                    f"by identity, every instance is a cache miss"))
+
+    for q, fi in cg.funcs.items():
+        # local names assigned from non-frozen dataclass ctors
+        local_unfrozen: Dict[str, str] = {}
+        for node in ast.walk(fi.node):
+            if (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                ci = cg.resolve_class(cg.dotted(fi.module, node.value.func,
+                                                fi.class_name))
+                if ci is not None and ci.is_dataclass and not ci.frozen:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            local_unfrozen[t.id] = ci.qualname
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            jt = None
+            d = cg.dotted(fi.module, node.func, fi.class_name)
+            if d is not None:
+                fi2 = cg.resolve_func(d)
+                if fi2 is not None and fi2.qualname in by_qualname:
+                    jt = by_qualname[fi2.qualname]
+                elif d in by_global:
+                    jt = by_global[d]
+                else:
+                    chased = cg._chase(d)
+                    if chased in by_global:
+                        jt = by_global[chased]
+            if (jt is None and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and fi.class_name is not None):
+                jt = by_attr.get((f"{fi.module.name}.{fi.class_name}",
+                                  node.func.attr))
+            if jt is not None:
+                check_site(node, jt, fi.module, q, local_unfrozen)
+    return out
