@@ -35,6 +35,15 @@ decode loop must survive ``jax.transfer_guard("disallow")``.
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--fast]
 Emits results/BENCH_engine.json (picked up by benchmarks/report.py);
 numbers land in EXPERIMENTS.md §Perf.
+
+``--mesh-shape 1,2,4`` runs the mesh-sharded serving sweep instead
+(DESIGN.md §10, EXPERIMENTS.md §"Virtual-device methodology"): the parent
+respawns itself once per mesh size under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must be
+set before the backend initializes, hence the subprocess) and gates
+greedy-token equality across mesh sizes, zero steady-wave recompiles, and
+per-device weight+KV bytes shrinking ≥1.8× at mesh=2.  Emits
+results/BENCH_mesh.json.
 """
 from __future__ import annotations
 
@@ -216,6 +225,153 @@ def transfer_guard_probe(params, max_new: int):
     return ok
 
 
+# --------------------------------------------------------------- mesh sweep
+
+# bigger than CFG so sharded weight/KV shards dominate the replicated
+# residue (norms, embeddings stay whole; the ≥1.8x byte gate needs the
+# sharded fraction large) but still CI-sized
+MESH_CFG = ModelConfig(name="bench-mesh", family="dense", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+                       vocab=512)
+
+
+def _per_device_bytes(tree) -> int:
+    """HBM-resident bytes per device: shard shape × itemsize per leaf (the
+    sharding's shard_shape is exact — this is the quantity TP shrinks)."""
+    tot = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "sharding") and hasattr(leaf, "dtype"):
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            tot += int(np.prod(shard)) * leaf.dtype.itemsize
+    return tot
+
+
+def mesh_worker(n: int, fast: bool):
+    """One mesh size, measured inside the 4-virtual-device subprocess.
+    Prints a single ``MESHROW {json}`` line for the parent to collect."""
+    from repro.core import ttq_policy
+    from repro.launch.mesh import make_ctx, make_mesh
+
+    pctx = make_ctx(make_mesh(1, n)) if n > 1 else None
+    params = lm.init_params(MESH_CFG, jax.random.PRNGKey(0))
+    eng = TTQEngine(MESH_CFG, params, ttq_policy(bits=4, group_size=32,
+                                                 packed=True),
+                    EngineConfig(max_slots=4, max_len=MAX_LEN, decode_chunk=4,
+                                 kv_dtype="int8", kv_paged=True,
+                                 kv_block_size=16, use_kernels=True),
+                    pctx=pctx)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, MESH_CFG.vocab,
+                                 size=int(rng.integers(6, 16))))
+               for _ in range(4)]
+    max_new = 8 if fast else 24
+
+    def wave():
+        rids = [eng.submit(p, max_new=max_new) for p in prompts]
+        outs = eng.run_all()
+        return [list(outs[r]) for r in rids]
+
+    out = wave()                                  # warm wave: jit compiles
+    warm_programs = eng.compiled_programs
+    t0 = time.perf_counter()
+    steady = wave()
+    dt = time.perf_counter() - t0
+    assert steady == out, "steady wave diverged from the warm wave"
+    steady_new = eng.compiled_programs - warm_programs
+    t0 = time.perf_counter()
+    tree = eng.qmodel.requantize()                # full shard-local requant
+    jax.block_until_ready(tree)
+    requant_s = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in steady)
+    row = {
+        "mesh": n, "devices": jax.device_count(), "tokens": n_tok,
+        "tok_s": round(n_tok / dt, 1), "wall_s": round(dt, 4),
+        "weight_bytes_per_device": _per_device_bytes(eng.qmodel.decode_params),
+        "kv_bytes_per_device": _per_device_bytes(eng.runner.state),
+        "requant_wall_s": round(requant_s, 4),
+        "requant_programs": eng.qmodel.compiled_programs,
+        "steady_new_programs": steady_new, "outputs": steady,
+    }
+    print("MESHROW " + json.dumps(row))
+
+
+def mesh_sweep(shapes, fast: bool):
+    """Respawn one worker per mesh size on 4 virtual devices; gate equality,
+    recompiles, and the per-device byte shrink; write BENCH_mesh.json."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    kept.append("--xla_force_host_platform_device_count=4")
+    env["XLA_FLAGS"] = " ".join(kept)
+    rows = []
+    for n in shapes:
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--mesh-worker", str(n)] + (["--fast"] if fast else [])
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        if r.returncode != 0:
+            raise SystemExit(f"mesh worker n={n} failed:\n{r.stdout}\n"
+                             f"{r.stderr}")
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("MESHROW ")][-1]
+        rows.append(json.loads(line[len("MESHROW "):]))
+    ok_all = True
+    outputs = {r["mesh"]: r.pop("outputs") for r in rows}
+    by_mesh = {r["mesh"]: r for r in rows}
+    print("mesh,tok_s,weight_MB_per_dev,kv_MB_per_dev,requant_s,"
+          "steady_new_programs")
+    for r in rows:
+        print(f"{r['mesh']},{r['tok_s']},"
+              f"{r['weight_bytes_per_device'] / 1e6:.3f},"
+              f"{r['kv_bytes_per_device'] / 1e6:.3f},{r['requant_wall_s']},"
+              f"{r['steady_new_programs']}")
+        if r["steady_new_programs"] != 0:
+            print(f"  FAIL mesh={r['mesh']}: steady wave compiled "
+                  f"{r['steady_new_programs']} new program(s)")
+            ok_all = False
+    # token agreement is REPORTED, not gated, at bench scale: col-parallel
+    # psum reorders bf16 partial sums (~ulp logit perturbations), so greedy
+    # ties can flip on any sufficiently large vocab; the hard equality gate
+    # lives in tests/test_mesh_serving.py on a model whose top-2 gaps clear
+    # the reorder noise (EXPERIMENTS.md §"Virtual-device methodology")
+    base = outputs[shapes[0]]
+    agreement = {}
+    for n in shapes[1:]:
+        flat_b = [t for o in base for t in o]
+        flat_n = [t for o in outputs[n] for t in o]
+        same = sum(a == b for a, b in zip(flat_b, flat_n))
+        agreement[n] = round(same / max(1, len(flat_b)), 3)
+        if outputs[n] != base:
+            print(f"  note mesh={n}: greedy tokens diverge from "
+                  f"mesh={shapes[0]} (agreement {agreement[n]:.0%} — "
+                  f"psum tie-breaks, see EXPERIMENTS.md)")
+    shrink = None
+    if 1 in by_mesh and 2 in by_mesh:
+        tot = lambda r: (r["weight_bytes_per_device"]
+                         + r["kv_bytes_per_device"])  # noqa: E731
+        shrink = tot(by_mesh[1]) / tot(by_mesh[2])
+        ok = shrink >= 1.8
+        ok_all = ok_all and ok
+        print(f"acceptance: per-device weight+KV bytes shrink {shrink:.2f}x "
+              f"at mesh=2 ({'PASS' if ok else 'FAIL'} >= 1.8x), zero steady "
+              f"recompiles; token agreement {agreement}")
+    report = {"config": {"shapes": list(shapes), "model": MESH_CFG.name,
+                         "virtual_devices": 4},
+              "rows": rows, "byte_shrink_mesh2": shrink,
+              "token_agreement": agreement,
+              "outputs_equal": all(outputs[n] == base for n in shapes[1:])}
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_mesh.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+    if not ok_all:
+        raise SystemExit("bench_engine mesh acceptance FAILED")
+    return report
+
+
 def main(fast: bool = False, chunk: int = 0):
     """``chunk=0`` sweeps K per slot count; a nonzero K pins the sweep."""
     from repro.serving import pick_decode_chunk
@@ -331,5 +487,17 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--chunk", type=int, default=0,
                     help="pin one decode_chunk instead of sweeping")
+    ap.add_argument("--mesh-shape", default="",
+                    help="comma list of model-mesh sizes (e.g. 1,2,4): run "
+                         "the mesh-sharded serving sweep instead of the "
+                         "dispatch bench (4 virtual CPU devices, "
+                         "DESIGN.md §10)")
+    ap.add_argument("--mesh-worker", type=int, default=0,
+                    help=argparse.SUPPRESS)   # internal: one sweep child
     a = ap.parse_args()
-    main(fast=a.fast, chunk=a.chunk)
+    if a.mesh_worker:
+        mesh_worker(a.mesh_worker, fast=a.fast)
+    elif a.mesh_shape:
+        mesh_sweep([int(s) for s in a.mesh_shape.split(",")], fast=a.fast)
+    else:
+        main(fast=a.fast, chunk=a.chunk)

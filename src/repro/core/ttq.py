@@ -140,7 +140,7 @@ def dequant(qt: QuantizedTensor) -> jnp.ndarray:
 
 def ttq_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
                use_kernel: bool = False, kcfg=None,
-               precision=None) -> jnp.ndarray:
+               precision=None, pctx=None, tp=None) -> jnp.ndarray:
     """y = x @ Ŵᵀ for x: (..., d).  Kernel path uses the Pallas ttq_gemm.
 
     ``kcfg`` (:class:`~repro.core.policy.KernelConfig`) is the policy-driven
@@ -149,14 +149,20 @@ def ttq_matmul(x: jnp.ndarray, qt: QuantizedTensor, *,
     with the D⁻¹ prescale fused into the kernel prologue.  The jnp fallback
     prescales x∘D⁻¹ on the (small) activation; the low-rank branch runs in
     fp on the *unscaled* x either way (BA was subtracted before scaling).
+
+    ``pctx``/``tp``: with an active mesh and a TP role hint ('row'|'col')
+    from the call site's sharding rule, the kernel dispatch is shard_map'd so
+    each device runs ttq_gemm on its local weight shard; the low-rank BA
+    correction is tiny and stays outside the wrap (plain GSPMD).
     """
     if kcfg is not None and kcfg.use_pallas:
         use_kernel = True
     if use_kernel and qt.packed is not None:
         from repro.kernels import ops as kops  # local import: kernels are optional
         kw = kcfg.gemm_kw if kcfg is not None else {}
-        y = kops.ttq_gemm(x, qt.packed, qt.scale, qt.zero, qt.dinv,
-                          bits=qt.bits, group_size=qt.group_size, **kw)
+        y = kops.ttq_gemm_tp(x, qt.packed, qt.scale, qt.zero, qt.dinv,
+                             bits=qt.bits, group_size=qt.group_size,
+                             pctx=pctx, tp=tp, **kw)
     else:
         # f32 prescale + accumulation over the same flattened (T, d)×(d, d')
         # gemm shape the kernel presents, so both paths hit the same backend

@@ -2,9 +2,17 @@
 
 The rest of the framework calls these; ``use_pallas=False`` (or unsupported
 bit-widths) routes to the XLA fallback so every code path runs everywhere.
+
+The ``*_tp`` variants wrap a dispatch in ``shard_map`` when a mesh is active
+so each device runs the kernel on its local weight/KV-head shard
+(DESIGN.md §"Mesh-sharded serving"); when the static shapes don't divide the
+model axis they fall back to the unwrapped call, which GSPMD partitions.
 """
 from __future__ import annotations
 
+from functools import partial
+
+import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
@@ -71,3 +79,118 @@ def ttq_quantize(W, D, *, bits=4, group_size=32, use_pallas=True, **block_kw):
         return _ttq_quantize_pallas(W, D, bits=bits, group_size=group_size,
                                     **block_kw)
     return _ref.ttq_quantize_ref(W, D, bits=bits, group_size=group_size)
+
+
+# ---------------------------------------------------------------- TP wrappers
+
+def _mesh_sizes(pctx):
+    """(model size, data size) — 0 when no usable mesh/model axis."""
+    if pctx is None or pctx.mesh is None:
+        return 0, 1
+    sizes = dict(pctx.mesh.shape)
+    n = sizes.get(pctx.model_axis, 0)
+    ndp = 1
+    for a in pctx.data_axes:
+        ndp *= sizes.get(a, 1)
+    return n, ndp
+
+
+def _tp_gemm_ok(pctx, tp, x, packed, scale, bits, group_size):
+    """Static-shape eligibility for a shard_map'd TP gemm: every sharded dim
+    must divide exactly, and a column (input-feature) split must keep each
+    local slice group- and pack-aligned so scale/zero/packed slices line up."""
+    if tp not in ("row", "col") or x.ndim < 2:
+        return False
+    n, ndp = _mesh_sizes(pctx)
+    if n <= 1 or x.shape[0] % ndp:
+        return False
+    if tp == "row":
+        return packed.shape[0] % n == 0 and scale.shape[0] % n == 0
+    d = x.shape[-1]
+    per = 32 // bits
+    g = group_size or d
+    return (d % n == 0 and (d // n) % g == 0 and (d // n) % per == 0
+            and packed.shape[1] % n == 0 and scale.shape[1] % n == 0)
+
+
+def ttq_gemm_tp(x, packed, scale, zero, dinv=None, *,  # tracecheck: ok[TC303]
+                bits=4, group_size=32, use_pallas=True, pctx=None, tp=None,
+                **block_kw):  # use_pallas forwards to ttq_gemm's own oracle
+    """``ttq_gemm`` with Megatron-style tensor parallelism.
+
+    ``tp='row'``: output features sharded on the model axis — each device
+    multiplies against its (d'/n, d) shard, no collective, output stays
+    sharded.  ``tp='col'``: input features sharded — each device consumes its
+    x shard against a (d', d/n) weight slice and a psum over the model axis
+    rebuilds the full output.  Ineligible shapes use the unwrapped dispatch
+    (GSPMD partitions or replicates it).
+    """
+    gemm = partial(ttq_gemm, bits=bits, group_size=group_size,
+                   use_pallas=use_pallas, **block_kw)
+    if not _tp_gemm_ok(pctx, tp, x, packed, scale, bits, group_size):
+        return gemm(x, packed, scale, zero, dinv)
+    from repro.parallel.compat import shard_map
+    P = jax.sharding.PartitionSpec
+    m, dp = pctx.model_axis, pctx.dp
+    lead = [None] * (x.ndim - 2)
+    if dinv is None:
+        dinv = jnp.ones((x.shape[-1],), jnp.float32)
+    if tp == "row":
+        in_specs = (P(dp, *lead, None), P(m, None), P(m, None), P(m, None),
+                    P(None))
+        out_specs = P(dp, *lead, m)
+
+        def fn(xx, pk, sc, zr, dv):
+            return gemm(xx, pk, sc, zr, dv)
+    else:
+        in_specs = (P(dp, *lead, m), P(None, m), P(None, m), P(None, m), P(m))
+        out_specs = P(dp, *lead, None)
+
+        def fn(xx, pk, sc, zr, dv):
+            return jax.lax.psum(gemm(xx, pk, sc, zr, dv), m)
+    return shard_map(fn, mesh=pctx.mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)(
+        x, packed, scale, zero, dinv)
+
+
+def _tp_attn_ok(pctx, q, kq, batched_cache):
+    n, ndp = _mesh_sizes(pctx)
+    if n <= 1 or q.shape[0] % ndp:
+        return False
+    hkv = kq.shape[1]
+    return q.shape[1] % n == 0 and hkv % n == 0
+
+
+def kv_decode_attention_tp(q, kq, ks, vq, vs, cur_pos, *, pctx=None, **kw):
+    """Head-parallel ``kv_decode_attention``: q heads and KV heads shard the
+    model axis together (the GQA q→kv mapping is block-contiguous, so each
+    device's q-head shard attends exactly its local KV-head shard)."""
+    call = partial(kv_decode_attention, **kw)
+    if not _tp_attn_ok(pctx, q, kq, True):
+        return call(q, kq, ks, vq, vs, cur_pos)
+    from repro.parallel.compat import shard_map
+    P = jax.sharding.PartitionSpec
+    m, dp = pctx.model_axis, pctx.dp
+    hs = P(dp, m, None, None)
+    return shard_map(lambda *a: call(*a), mesh=pctx.mesh,
+                     in_specs=(hs, hs, hs, hs, hs, P(dp)), out_specs=hs,
+                     check_vma=False)(q, kq, ks, vq, vs, cur_pos)
+
+
+def kv_paged_decode_attention_tp(q, kq, ks, vq, vs, block_table, cur_pos, *,
+                                 pctx=None, **kw):
+    """Head-parallel paged decode attention: the (NB, Hkv, bs, ·) pools shard
+    over KV heads (never the physical-block dim — block ids are global), the
+    per-slot block table and positions stay replicated per data shard."""
+    call = partial(kv_paged_decode_attention, **kw)
+    if not _tp_attn_ok(pctx, q, kq, False):
+        return call(q, kq, ks, vq, vs, block_table, cur_pos)
+    from repro.parallel.compat import shard_map
+    P = jax.sharding.PartitionSpec
+    m, dp = pctx.model_axis, pctx.dp
+    qs = P(dp, m, None, None)
+    pool = P(None, m, None, None)
+    return shard_map(lambda *a: call(*a), mesh=pctx.mesh,
+                     in_specs=(qs, pool, pool, pool, pool, P(dp, None), P(dp)),
+                     out_specs=qs, check_vma=False)(
+        q, kq, ks, vq, vs, block_table, cur_pos)

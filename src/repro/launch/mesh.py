@@ -7,6 +7,12 @@ import jax
 from repro.parallel import ParallelCtx
 
 
+def make_mesh(data: int = 1, model: int = 1):
+    """General (data, model) mesh — THE mesh-construction entry for launchers
+    and serving (tracecheck TC405 pins `jax.make_mesh` to this module)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -21,4 +27,4 @@ def make_ctx(mesh, *, moe_impl: str = "a2a") -> ParallelCtx:
 
 
 def make_test_mesh(data: int = 2, model: int = 2):
-    return jax.make_mesh((data, model), ("data", "model"))
+    return make_mesh(data, model)

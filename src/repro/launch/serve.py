@@ -114,6 +114,9 @@ def main():
                          "capacity-equivalent to the dense slab)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared prompt-prefix block reuse")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="model-parallel mesh size (tensor/expert parallel "
+                         "serving, DESIGN.md §10); 1 = single device")
     args = ap.parse_args()
 
     import jax
@@ -123,6 +126,10 @@ def main():
     from repro.models import lm
     from repro.serving import EngineConfig, TTQEngine
 
+    pctx = None
+    if args.mesh > 1:
+        from repro.launch.mesh import make_ctx, make_mesh
+        pctx = make_ctx(make_mesh(1, args.mesh))
     cfg = get(args.arch, smoke=args.smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     policy = build_policy(args)
@@ -137,7 +144,8 @@ def main():
                                  kv_block_size=args.kv_block_size
                                  if args.kv_paged else 0,
                                  kv_pool_blocks=args.kv_pool_blocks,
-                                 prefix_cache=not args.no_prefix_cache))
+                                 prefix_cache=not args.no_prefix_cache),
+                    pctx=pctx)
     layout = (f"paged block={eng.kvcfg.block_size} "
               f"pool={eng.num_blocks} blocks/layer "
               f"prefix_cache={not args.no_prefix_cache}"
@@ -153,6 +161,9 @@ def main():
                else f"every {args.recal_every} admissions")
     print(f"decode-chunk: {eng.ecfg.decode_chunk} tokens/dispatch, "
           f"requant cadence: {cadence}")
+    if pctx is not None:
+        print(f"mesh: (1, {args.mesh}) data×model over "
+              f"{jax.device_count()} device(s)")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

@@ -48,8 +48,8 @@ def main():
     cfg = get(args.arch, smoke=args.smoke)
     pctx = None
     if args.data_parallel * args.model_parallel > 1:
-        mesh = jax.make_mesh((args.data_parallel, args.model_parallel),
-                             ("data", "model"))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(args.data_parallel, args.model_parallel)
         pctx = ParallelCtx(mesh=mesh, data_axes=("data",))
     dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch, seed=0)
     tc = TrainConfig(n_microbatches=args.microbatches, remat=True, zero1=True,

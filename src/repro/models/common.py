@@ -28,17 +28,19 @@ ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 # ---------------------------------------------------------------------------
 
 def linear(x: Array, w, stats: Optional[dict] = None, name: str = "",
-           kcfg=None) -> Array:
+           kcfg=None, pctx=None, tp=None) -> Array:
     """y = x @ wᵀ (w: (out,in) array or QuantizedTensor). Taps Σx² if stats dict given.
 
     ``kcfg`` (:class:`~repro.core.policy.KernelConfig`) selects the Pallas
-    ``ttq_gemm`` path for packed QuantizedTensors (None → jnp fallback)."""
+    ``ttq_gemm`` path for packed QuantizedTensors (None → jnp fallback).
+    ``pctx``/``tp`` ('row'|'col') shard_map the kernel dispatch over the
+    model axis; fp weights ignore both (GSPMD shards the einsum)."""
     if stats is not None:
         xf = x.astype(jnp.float32)
         s = jnp.sum(xf * xf, axis=tuple(range(x.ndim - 1)))
         stats[name] = stats.get(name, 0.0) + s
     if isinstance(w, QuantizedTensor):
-        return ttq_matmul(x, w, kcfg=kcfg).astype(x.dtype)
+        return ttq_matmul(x, w, kcfg=kcfg, pctx=pctx, tp=tp).astype(x.dtype)
     return jnp.einsum("...d,od->...o", x, w.astype(x.dtype))
 
 
@@ -329,18 +331,19 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, cur_pos: Array,
 # MLPs
 # ---------------------------------------------------------------------------
 
-def glu_mlp(x, p, stats=None, prefix="mlp", act="silu", kcfg=None):
+def glu_mlp(x, p, stats=None, prefix="mlp", act="silu", kcfg=None, pctx=None):
     """Gated MLP (SwiGLU/GeGLU): (act(x@Wg) * (x@Wu)) @ Wd."""
-    g = linear(x, p["wg"], stats, f"{prefix}.wg", kcfg)
-    u = linear(x, p["wu"], None, kcfg=kcfg)  # same input stats as wg — tap once
+    g = linear(x, p["wg"], stats, f"{prefix}.wg", kcfg, pctx=pctx, tp="row")
+    u = linear(x, p["wu"], None, kcfg=kcfg, pctx=pctx,
+               tp="row")  # same input stats as wg — tap once
     h = ACT[act](g.astype(jnp.float32)).astype(x.dtype) * u
-    return linear(h, p["wd"], stats, f"{prefix}.wd", kcfg)
+    return linear(h, p["wd"], stats, f"{prefix}.wd", kcfg, pctx=pctx, tp="col")
 
 
-def plain_mlp(x, p, stats=None, prefix="mlp", act="gelu", kcfg=None):
-    h = linear(x, p["w1"], stats, f"{prefix}.w1", kcfg)
+def plain_mlp(x, p, stats=None, prefix="mlp", act="gelu", kcfg=None, pctx=None):
+    h = linear(x, p["w1"], stats, f"{prefix}.w1", kcfg, pctx=pctx, tp="row")
     h = ACT[act](h.astype(jnp.float32)).astype(x.dtype)
-    return linear(h, p["w2"], stats, f"{prefix}.w2", kcfg)
+    return linear(h, p["w2"], stats, f"{prefix}.w2", kcfg, pctx=pctx, tp="col")
 
 
 def init_glu_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16):

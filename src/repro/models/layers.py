@@ -45,12 +45,15 @@ def init_attn(key, cfg: ModelConfig, cross: bool = False):
 
 
 def _qkv(cfg: ModelConfig, p, xq: Array, xkv: Array, stats, prefix: str,
-         kcfg=None):
+         kcfg=None, pctx=None):
     B = xq.shape[0]
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = linear(xq, p["wq"], stats, prefix + "wq", kcfg).reshape(B, -1, H, hd)
-    k = linear(xkv, p["wk"], None, kcfg=kcfg).reshape(B, -1, Hkv, hd)
-    v = linear(xkv, p["wv"], None, kcfg=kcfg).reshape(B, -1, Hkv, hd)
+    q = linear(xq, p["wq"], stats, prefix + "wq", kcfg, pctx=pctx,
+               tp="row").reshape(B, -1, H, hd)
+    k = linear(xkv, p["wk"], None, kcfg=kcfg, pctx=pctx,
+               tp="row").reshape(B, -1, Hkv, hd)
+    v = linear(xkv, p["wv"], None, kcfg=kcfg, pctx=pctx,
+               tp="row").reshape(B, -1, Hkv, hd)
     if cfg.qk_norm:
         q = rmsnorm(q, p["qnorm"]["gamma"])
         k = rmsnorm(k, p["knorm"]["gamma"])
@@ -213,17 +216,18 @@ def _kv_append_paged(state, k: Array, v: Array, pos, block_table, kvcfg):
 
 
 def _kv_attention_paged(q: Array, state, block_table, cur, kvcfg, *,
-                        soft_cap: float = 0.0):
+                        soft_cap: float = 0.0, pctx=None):
     """Decode read over the paged pool.  Quantized pools go through the
     fused paged kernel (``use_pallas`` escape hatch routes to the gather
     oracle); the bf16 pool gathers its block-table view and reuses the
-    dense ``decode_attention`` bit-for-bit."""
+    dense ``decode_attention`` bit-for-bit.  With a mesh, the dispatch is
+    shard_map'd over KV heads (kernels/ops.py TP wrappers)."""
     if kvcfg.quantized:
-        from repro.kernels import kv_paged_decode_attention
-        return kv_paged_decode_attention(
+        from repro.kernels import ops as kops
+        return kops.kv_paged_decode_attention_tp(
             q, state["k_q"], state["k_s"], state["v_q"], state["v_s"],
             block_table, cur, bits=kvcfg.bits, group_size=kvcfg.group_size,
-            soft_cap=soft_cap, use_pallas=kvcfg.use_pallas)
+            soft_cap=soft_cap, use_pallas=kvcfg.use_pallas, pctx=pctx)
     from repro.kernels.ref import gather_paged_kv
     kc = gather_paged_kv(state["k"], block_table)
     vc = gather_paged_kv(state["v"], block_table)
@@ -231,64 +235,71 @@ def _kv_attention_paged(q: Array, state, block_table, cur, kvcfg, *,
 
 
 def _kv_attention(q: Array, state, cur, kvcfg, *, soft_cap: float = 0.0,
-                  window: int = 0):
+                  window: int = 0, pctx=None):
     """Fused dequant attention read over the quantized cache (a nonzero
     ``window`` routes to the jnp oracle, which applies the window mask)."""
-    from repro.kernels import kv_decode_attention
-    return kv_decode_attention(
+    from repro.kernels import ops as kops
+    return kops.kv_decode_attention_tp(
         q, state["k_q"], state["k_s"], state["v_q"], state["v_s"], cur,
         bits=kvcfg.bits, group_size=kvcfg.group_size, soft_cap=soft_cap,
-        window=window, use_pallas=kvcfg.use_pallas)
+        window=window, use_pallas=kvcfg.use_pallas, pctx=pctx)
 
 
 def attn_decode(cfg: ModelConfig, p, x: Array, state, pos, *, window: int = 0,
-                cross_kv=None, kvcfg=None, kcfg=None, block_table=None):
+                cross_kv=None, kvcfg=None, kcfg=None, block_table=None,
+                pctx=None):
     """x: (B,1,D); state: bf16 {'k','v'} or quantized {'k_q','k_s','v_q',
     'v_s'} caches (``kvcfg`` selects); pos: (B,) per-slot positions.
-    ``block_table`` (B, nblk) routes the paged pool layout (DESIGN.md §8)."""
+    ``block_table`` (B, nblk) routes the paged pool layout (DESIGN.md §8).
+    ``pctx``: head-parallel TP — wq/wk/wv row-split, wo column-split, and
+    the quantized-cache attention reads shard over KV heads."""
     if cross_kv is not None:
         k, v = cross_kv
         B = x.shape[0]
         H, hd = cfg.n_heads, cfg.hd
-        q = linear(x, p["wq"], kcfg=kcfg).reshape(B, 1, H, hd)
+        q = linear(x, p["wq"], kcfg=kcfg, pctx=pctx, tp="row").reshape(B, 1, H, hd)
         if cfg.qk_norm:
             q = rmsnorm(q, p["qnorm"]["gamma"])
         q = q.transpose(0, 2, 1, 3)
         o = attention(q, k, v, causal=False, soft_cap=cfg.attn_soft_cap)
-        y = linear(o.transpose(0, 2, 1, 3).reshape(B, 1, -1), p["wo"], kcfg=kcfg)
+        y = linear(o.transpose(0, 2, 1, 3).reshape(B, 1, -1), p["wo"],
+                   kcfg=kcfg, pctx=pctx, tp="col")
         return y, state
-    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg)
+    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg, pctx=pctx)
     if cfg.pos == "rope":
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
     if kvcfg is not None and kvcfg.paged:
         st = _kv_append_paged(state, k, v, pos, block_table, kvcfg)
         o = _kv_attention_paged(q, st, block_table, pos, kvcfg,
-                                soft_cap=cfg.attn_soft_cap)
-        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
+                                soft_cap=cfg.attn_soft_cap, pctx=pctx)
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg,
+                   pctx=pctx, tp="col")
         return y, st
     if kvcfg is not None and kvcfg.quantized:
         st = _kv_append(state, k, v, pos, kvcfg)
         o = _kv_attention(q, st, pos, kvcfg, soft_cap=cfg.attn_soft_cap,
-                          window=window)
-        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
+                          window=window, pctx=pctx)
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg,
+                   pctx=pctx, tp="col")
         return y, st
     kc = cache_update_batched(state["k"], k, pos)
     vc = cache_update_batched(state["v"], v, pos)
     o = decode_attention(q, kc, vc, pos, window=window,
                          soft_cap=cfg.attn_soft_cap)
-    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
+    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg, pctx=pctx,
+               tp="col")
     return y, {"k": kc, "v": vc}
 
 
 def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
-                        window: int, kvcfg=None, kcfg=None):
+                        window: int, kvcfg=None, kcfg=None, pctx=None):
     """Windowed decode with a rolling (B,Hkv,W,hd) cache — O(W) per step.
 
     Slot validity needs no ordering (softmax is set-wise): slot i is valid iff
     i ≤ pos (cache fills left-to-right before wrapping). pos: (B,).
     """
-    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg)
+    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg, pctx=pctx)
     if cfg.pos == "rope":
         q = rope_decode(q, pos, cfg.rope_theta)
         k = rope_decode(k, pos, cfg.rope_theta)
@@ -297,13 +308,16 @@ def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
     cur = jnp.minimum(pos, window - 1)
     if kvcfg is not None and kvcfg.quantized:
         st = _kv_append(state, k, v, wpos, kvcfg)
-        o = _kv_attention(q, st, cur, kvcfg, soft_cap=cfg.attn_soft_cap)
-        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
+        o = _kv_attention(q, st, cur, kvcfg, soft_cap=cfg.attn_soft_cap,
+                          pctx=pctx)
+        y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg,
+                   pctx=pctx, tp="col")
         return y, st
     kc = cache_update_batched(state["k"], k, wpos)
     vc = cache_update_batched(state["v"], v, wpos)
     o = decode_attention(q, kc, vc, cur, soft_cap=cfg.attn_soft_cap)
-    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg)
+    y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg, pctx=pctx,
+               tp="col")
     return y, {"k": kc, "v": vc}
 
 
@@ -324,10 +338,11 @@ def init_mla(key, cfg: ModelConfig):
     }
 
 
-def _mla_expand(cfg, p, latent, stats=None, prefix="", kcfg=None):
+def _mla_expand(cfg, p, latent, stats=None, prefix="", kcfg=None, pctx=None):
     """latent (B,S,r) → k_nope (B,H,S,nope), v (B,H,S,vd)."""
     m, H = cfg.mla, cfg.n_heads
-    kv = linear(latent, p["wkv_b"], stats, prefix + "wkv_b", kcfg)
+    kv = linear(latent, p["wkv_b"], stats, prefix + "wkv_b", kcfg, pctx=pctx,
+                tp="row")
     B, S = kv.shape[0], kv.shape[1]
     kv = kv.reshape(B, S, H, m.qk_nope_dim + m.v_head_dim).transpose(0, 2, 1, 3)
     return kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
@@ -363,7 +378,8 @@ def mla_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), DTYPE)}
 
 
-def mla_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
+def mla_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None,
+               pctx=None):
     """Decode with the compressed cache (latent+rope per token — the MLA win).
 
     pos: (B,) per-slot positions.
@@ -371,7 +387,8 @@ def mla_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
     m, H = cfg.mla, cfg.n_heads
     B = x.shape[0]
     qd = m.qk_nope_dim + m.qk_rope_dim
-    q = linear(x, p["wq"], kcfg=kcfg).reshape(B, 1, H, qd).transpose(0, 2, 1, 3)
+    q = linear(x, p["wq"], kcfg=kcfg, pctx=pctx,
+               tp="row").reshape(B, 1, H, qd).transpose(0, 2, 1, 3)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
     a = linear(x, p["wkv_a"], kcfg=kcfg)
     latent_t = rmsnorm(a[..., : m.kv_lora_rank], p["kv_norm"]["gamma"])
@@ -381,13 +398,13 @@ def mla_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
     latent = seq_update_batched(state["latent"], latent_t, pos)
     k_rope = seq_update_batched(state["k_rope"], k_rope_t[:, None]
                                 if k_rope_t.ndim == 2 else k_rope_t, pos)
-    k_nope, v = _mla_expand(cfg, p, latent, kcfg=kcfg)    # expand full cache
+    k_nope, v = _mla_expand(cfg, p, latent, kcfg=kcfg, pctx=pctx)  # expand full cache
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, None], (B, H, k_rope.shape[1], m.qk_rope_dim))],
         axis=-1)
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     o = decode_attention(qf, k, v, pos, scale=qd ** -0.5)
-    y = linear(o.reshape(B, 1, -1), p["wo"], kcfg=kcfg)
+    y = linear(o.reshape(B, 1, -1), p["wo"], kcfg=kcfg, pctx=pctx, tp="col")
     return y, {"latent": latent, "k_rope": k_rope}
 
 
@@ -478,13 +495,16 @@ def rec_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "conv": jnp.zeros((batch, h.conv_width - 1, dr), DTYPE)}
 
 
-def rec_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
-    br = jax.nn.gelu(linear(x, p["w_branch"], kcfg=kcfg).astype(jnp.float32))
-    u = linear(x, p["w_in"], kcfg=kcfg)
+def rec_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None,
+               pctx=None):
+    br = jax.nn.gelu(linear(x, p["w_branch"], kcfg=kcfg, pctx=pctx,
+                            tp="row").astype(jnp.float32))
+    u = linear(x, p["w_in"], kcfg=kcfg, pctx=pctx, tp="row")
     u, conv_state = _causal_conv(u, p["conv_w"], state["conv"])
     a, b = _rglru_coeffs(p, u)
     h = a[:, 0] * state["h"] + b[:, 0]                     # (B, dr)
-    y = linear((br[:, 0] * h)[:, None].astype(x.dtype), p["w_out"], kcfg=kcfg)
+    y = linear((br[:, 0] * h)[:, None].astype(x.dtype), p["w_out"], kcfg=kcfg,
+               pctx=pctx, tp="col")
     return y, {"h": h, "conv": conv_state}
 
 
@@ -518,14 +538,14 @@ def init_ssd(key, cfg: ModelConfig):
     }
 
 
-def _ssd_split(cfg: ModelConfig, p, x, stats, prefix, kcfg=None):
+def _ssd_split(cfg: ModelConfig, p, x, stats, prefix, kcfg=None, pctx=None):
     """Five projections; stats tapped once on w_x (w_z/w_B/w_C/w_dt alias it)."""
     s, D = cfg.ssm, cfg.d_model
     di = s.expand * D
     nh = di // s.head_dim
     gn = s.n_groups * s.d_state
-    z = linear(x, p["w_z"], None, kcfg=kcfg)
-    xr = linear(x, p["w_x"], stats, prefix + "w_x", kcfg)
+    z = linear(x, p["w_z"], None, kcfg=kcfg, pctx=pctx, tp="row")
+    xr = linear(x, p["w_x"], stats, prefix + "w_x", kcfg, pctx=pctx, tp="row")
     Br = linear(x, p["w_B"], None, kcfg=kcfg)
     Cr = linear(x, p["w_C"], None, kcfg=kcfg)
     dt = linear(x, p["w_dt"], None, kcfg=kcfg)
@@ -627,10 +647,12 @@ def ssd_init_state(cfg: ModelConfig, batch: int, max_len: int):
             "conv_C": jnp.zeros((batch, w, gn), DTYPE)}
 
 
-def ssd_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
+def ssd_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None,
+               pctx=None):
     """Single-step SSM recurrence h ← e^{-A·dt}h + dt·B⊗x ; y = C·h + D·x."""
     s = cfg.ssm
-    z, xr, Br, Cr, dt, di, nh, gn = _ssd_split(cfg, p, x, None, "", kcfg)
+    z, xr, Br, Cr, dt, di, nh, gn = _ssd_split(cfg, p, x, None, "", kcfg,
+                                               pctx=pctx)
     xc, cs_x = _causal_conv(xr, p["conv_x"], state["conv_x"])
     Bc, cs_B = _causal_conv(Br, p["conv_B"], state["conv_B"])
     Cc, cs_C = _causal_conv(Cr, p["conv_C"], state["conv_C"])
@@ -648,7 +670,7 @@ def ssd_decode(cfg: ModelConfig, p, x: Array, state, pos, kcfg=None):
     y = jnp.einsum("bhpn,bhn->bhp", h, Cm) + p["Dskip"][None, :, None] * xi
     y = y.reshape(B, 1, di)
     y = rmsnorm(y.astype(x.dtype), p["norm"]["gamma"]) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
-    out = linear(y, p["w_out"], kcfg=kcfg)
+    out = linear(y, p["w_out"], kcfg=kcfg, pctx=pctx, tp="col")
     return out, {"h": h, "conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
 
 

@@ -67,7 +67,7 @@ def _embed(cfg, params, tokens, pctx, pos0: int = 0):
 
 def _head(cfg, params, x, pctx, kcfg=None):
     w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = linear(x, w, kcfg=kcfg).astype(jnp.float32)
+    logits = linear(x, w, kcfg=kcfg, pctx=pctx, tp="row").astype(jnp.float32)
     dp = None if pctx is None else pctx.data_axes
     mp = None if pctx is None else pctx.model_axis
     return _wsc(logits, P(dp, None, mp), pctx)

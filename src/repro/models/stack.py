@@ -124,9 +124,11 @@ def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg=None):
         return x
     h = norm(x, p["ln2"])
     if mk == "glu":
-        y = glu_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act, kcfg)
+        y = glu_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act, kcfg,
+                    pctx=pctx)
     elif mk == "plain":
-        y = plain_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act, kcfg)
+        y = plain_mlp(h, p["mlp"], stats, prefix + "mlp", cfg.act, kcfg,
+                      pctx=pctx)
     else:  # moe
         pp = prefix + "mlp."
         if pctx is not None and pctx.moe_impl == "a2a" and pctx.mesh is not None:
@@ -137,8 +139,9 @@ def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg=None):
         else:
             y = L.moe_apply_dense(cfg, p["mlp"], h, stats, pp, kcfg=kcfg)
         if cfg.moe.n_shared:
+            # outside the a2a shard_map: TP wrap on the shared expert is legal
             y = y + glu_mlp(h, p["mlp"]["shared"], stats, pp + "shared",
-                            cfg.act, kcfg)
+                            cfg.act, kcfg, pctx=pctx)
     y = _ckpt_name(y, "mlp_out")   # post-AR activation
     return x + y
 
@@ -240,27 +243,29 @@ def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *,
         window = cfg.hybrid.window if (kind == "lattn" and cfg.hybrid) else 0
         if window:
             y, st = L.attn_decode_rolling(cfg, p["mix"], h, state, pos, window,
-                                          kvcfg, kcfg)
+                                          kvcfg, kcfg, pctx=pctx)
         else:
             y, st = L.attn_decode(cfg, p["mix"], h, state, pos, kvcfg=kvcfg,
-                                  kcfg=kcfg, block_table=block_table)
+                                  kcfg=kcfg, block_table=block_table,
+                                  pctx=pctx)
     elif kind == "xdec":
         self_kv = {k_: v_ for k_, v_ in state.items() if k_ not in ("xk", "xv")}
         y, st = L.attn_decode(cfg, p["mix"], h, self_kv, pos, kvcfg=kvcfg,
-                              kcfg=kcfg)
+                              kcfg=kcfg, pctx=pctx)
         x = x + y
         hx = norm(x, p["lnx"])
         yx, _ = L.attn_decode(cfg, p["xattn"], hx, None, pos,
-                              cross_kv=(state["xk"], state["xv"]), kcfg=kcfg)
+                              cross_kv=(state["xk"], state["xv"]), kcfg=kcfg,
+                              pctx=pctx)
         x = x + yx
         st = {**st, "xk": state["xk"], "xv": state["xv"]}
         return _mlp_apply(cfg, kind, p, x, None, "", pctx, kcfg), st
     elif kind == "mla":
-        y, st = L.mla_decode(cfg, p["mix"], h, state, pos, kcfg)
+        y, st = L.mla_decode(cfg, p["mix"], h, state, pos, kcfg, pctx=pctx)
     elif kind == "rec":
-        y, st = L.rec_decode(cfg, p["mix"], h, state, pos, kcfg)
+        y, st = L.rec_decode(cfg, p["mix"], h, state, pos, kcfg, pctx=pctx)
     elif kind == "ssd":
-        y, st = L.ssd_decode(cfg, p["mix"], h, state, pos, kcfg)
+        y, st = L.ssd_decode(cfg, p["mix"], h, state, pos, kcfg, pctx=pctx)
     else:
         raise ValueError(kind)
     x = x + y

@@ -100,6 +100,9 @@ def divisible_spec(spec: P, shape, mesh) -> P:
 
 
 # QuantizedTensor children order: (wint, packed, scale, zero, dinv, B, A)
+_QT_FIELDS = ("wint", "packed", "scale", "zero", "dinv", "B", "A")
+
+
 def _qt_child_specs(base: P, model_axis: str):
     """Derive per-child specs for a QuantizedTensor from its 2-D weight spec.
 
@@ -114,44 +117,69 @@ def _qt_child_specs(base: P, model_axis: str):
     }
 
 
+def qt_specs(path_str: str, shapes, model_axis: str = "model", mesh=None):
+    """Per-child PartitionSpecs for a QuantizedTensor at ``path_str``.
+
+    ``shapes``: dict child-name → shape (or None for absent children, e.g.
+    wint after packing, B/A without low-rank).  Pure spec logic — ``mesh``
+    only needs a ``.shape`` mapping for the divisibility fallback, so
+    property tests can drive this without real devices.
+    """
+    lead = 1 if ("stack" in path_str) else 0
+    ref = shapes.get("wint") or shapes.get("packed")
+    extra = len(ref) - 2 - lead              # e.g. expert dim
+    base = spec_for_path(path_str, 2, model_axis, stacked=False)
+    child = _qt_child_specs(base, model_axis)
+    # experts: leading expert dim sharded on model (EP) → override TP
+    if extra > 0:
+        lead_spec = [None] * lead + [model_axis] + [None] * (extra - 1)
+        child = {k: P(*lead_spec, None, None) if k != "dinv"
+                 else P(*lead_spec, None) for k in child}
+    else:
+        lead_spec = [None] * lead
+        child = {k: P(*lead_spec, *v) for k, v in child.items()}
+    if mesh is not None:
+        child = {k: (divisible_spec(v, shapes[k], mesh) if shapes.get(k)
+                     else v) for k, v in child.items()}
+    return child
+
+
+def qt_sharding(path_str: str, qt, pctx: ParallelCtx):
+    """QuantizedTensor of NamedShardings (None for absent children) for the
+    packed tensor at ``path_str`` — the public per-tensor entry used by the
+    shard-local requant path (quant/api.py) and ``param_sharding``."""
+    from repro.core.ttq import QuantizedTensor
+    shapes = {n: (getattr(qt, n).shape if getattr(qt, n) is not None else None)
+              for n in _QT_FIELDS}
+    child = qt_specs(path_str, shapes, pctx.model_axis, pctx.mesh)
+    vals = [jax.sharding.NamedSharding(pctx.mesh, child[n])
+            if shapes[n] is not None else None for n in _QT_FIELDS]
+    return QuantizedTensor(*vals, qt.bits, qt.group_size,
+                           qt.out_features, qt.in_features)
+
+
+def constrain_qt(path_str: str, qt, pctx: ParallelCtx):
+    """``with_sharding_constraint`` on every child of ``qt`` (trace-time use:
+    pins requant outputs to the serving layout so each weight shard is
+    quantized in place, never gathered)."""
+    from repro.core.ttq import QuantizedTensor
+    sh = qt_sharding(path_str, qt, pctx)
+    vals = [jax.lax.with_sharding_constraint(getattr(qt, n), getattr(sh, n))
+            if getattr(qt, n) is not None else None for n in _QT_FIELDS]
+    return QuantizedTensor(*vals, qt.bits, qt.group_size,
+                           qt.out_features, qt.in_features)
+
+
 def param_sharding(params, pctx: ParallelCtx):
     """Pytree of NamedSharding matching ``params`` (layer-scanned leaves get a
     leading replicated dim; QuantizedTensor nodes get per-child derived specs;
     non-divisible dims fall back to replication)."""
     from repro.core.ttq import QuantizedTensor
     mesh = pctx.mesh
-    _QT_FIELDS = ("wint", "packed", "scale", "zero", "dinv", "B", "A")
-
-    def qt_shardings(path, qt: QuantizedTensor):
-        ps = _path_str(path)
-        lead = 1 if ("stack" in ps) else 0
-        # base 2-D weight rank: children like wint are (lead…, d', d)
-        ref = qt.wint if qt.wint is not None else qt.packed
-        extra = ref.ndim - 2 - lead          # e.g. expert dim
-        base = spec_for_path(ps, 2, pctx.model_axis, stacked=False)
-        child = _qt_child_specs(base, pctx.model_axis)
-        # experts: leading expert dim sharded on model → override
-        if extra > 0:
-            lead_spec = [None] * lead + [pctx.model_axis] + [None] * (extra - 1)
-            child = {k: P(*lead_spec, None, None) if k != "dinv"
-                     else P(*lead_spec, None) for k in child}
-        else:
-            lead_spec = [None] * lead
-            child = {k: P(*lead_spec, *v) for k, v in child.items()}
-
-        def mk(name, leaf):
-            if leaf is None:
-                return None
-            spec = divisible_spec(child[name], leaf.shape, mesh)
-            return jax.sharding.NamedSharding(mesh, spec)
-
-        vals = [mk(n, getattr(qt, n)) for n in _QT_FIELDS]
-        return QuantizedTensor(*vals, qt.bits, qt.group_size,
-                               qt.out_features, qt.in_features)
 
     def per_leaf(path, leaf):
         if isinstance(leaf, QuantizedTensor):
-            return qt_shardings(path, leaf)
+            return qt_sharding(_path_str(path), leaf, pctx)
         ps = _path_str(path)
         in_stack = "stack" in ps
         spec = spec_for_path(ps, leaf.ndim, pctx.model_axis, stacked=in_stack)
@@ -167,13 +195,17 @@ def shard_params(params, pctx: ParallelCtx):
     return jax.tree.map(jax.device_put, params, shardings)
 
 
-def state_sharding(state, pctx: ParallelCtx, batch_axes=None, seq_axis=None):
+def state_sharding(state, pctx: ParallelCtx, batch_axes=None, seq_axis=None,
+                   paged: bool = False):
     """Decode/KV state: batch dim on data axes, head/width dims on model.
 
     Heuristic on rank: (B, Hkv, S, hd)→(dp, m, None|seq, None);
     (B, S, r)→(dp, None|seq, None); (B, dr)→(dp, m); (B, H, p, n)→(dp, m, None, None);
     (B, W, ch)→(dp, None, m); leading run-stacked dims get None.
     ``seq_axis``: shard the KV sequence dim (long-context, batch ≤ data size).
+    ``paged``: KV leaves are slot-free block pools (NB, Hkv, bs, ·) — shard
+    the KV-head dim only (never the block-pool dim: the block allocator's
+    physical indices are global), per-slot block tables stay replicated.
     """
     mesh, m = pctx.mesh, pctx.model_axis
     dp = pctx.dp if batch_axes is None else batch_axes
@@ -185,7 +217,11 @@ def state_sharding(state, pctx: ParallelCtx, batch_axes=None, seq_axis=None):
         core = nd - lead
         if "enc_out" in ps:
             spec = P(dp, None, None)
-        elif re.search(r"\.(k|v|xk|xv)$", ps) and core == 4:
+        elif paged and re.search(r"\.(k|v)(_q|_s)?$", ps) and core == 4:
+            # pool (NB, Hkv, bs, hd|groups): KV heads on model; no data axis
+            # (every device addresses the full pool by physical block id)
+            spec = P(None, m, None, None)
+        elif re.search(r"\.(k|v|xk|xv)(_q|_s)?$", ps) and core == 4:
             # GQA w/ Hkv < tp: heads can't shard over model — fall back to
             # sharding the cache sequence dim (flash-decoding style; the
             # grouped attention einsum turns it into tiny psum/pmax combines).

@@ -215,10 +215,17 @@ class FusedRequantPlan:
     """
 
     def __init__(self, params, stats, policy: QuantPolicy, *,
-                 acfg: Optional[AWQConfig] = None, lowrank_tree=None):
+                 acfg: Optional[AWQConfig] = None, lowrank_tree=None,
+                 pctx=None):
         from .registry import _BaseQuantizer
         base = policy if acfg is None else policy.with_(acfg=acfg)
         self.policy = policy
+        # shard-local requant: with a mesh, every family program pins its
+        # QuantizedTensor outputs to the serving layout (parallel/rules.py)
+        # so each weight shard quantizes in place — the only cross-device
+        # traffic is the per-column diagonal stats (already replicated)
+        self.pctx = pctx if (pctx is not None and pctx.mesh is not None) \
+            else None
         self.families: Dict[tuple, List[_Member]] = {}
         self.eager: List[_Member] = []
         self._family_fns: Dict[tuple, Callable] = {}
@@ -367,14 +374,18 @@ class FusedRequantPlan:
 
             def shaped(x, m=m):
                 return None if x is None else x.reshape(m.lead + x.shape[1:])
-            out.append(QuantizedTensor(
+            qt = QuantizedTensor(
                 wint=shaped(None if wint is None else wint[sl]),
                 packed=shaped(None if pk is None else pk[sl]),
                 scale=shaped(Sc[sl]), zero=shaped(Z[sl]),
                 dinv=shaped(dinv[sl]),
                 B=Bs[i] if has_ba else None, A=As[i] if has_ba else None,
                 bits=qcfg.bits, group_size=qcfg.group_size,
-                out_features=dp, in_features=d))
+                out_features=dp, in_features=d)
+            if self.pctx is not None:
+                from repro.parallel.rules import constrain_qt
+                qt = constrain_qt(m.path_str, qt, self.pctx)
+            out.append(qt)
         return out
 
     def _eager_leaf(self, m: _Member, params, stats, count, lowrank_tree):

@@ -58,12 +58,13 @@ class QuantizedModel:
                  acfg: Optional[AWQConfig] = None, halflife: float = 0.0,
                  session: Optional[CalibrationSession] = None,
                  lowrank: Any = _AUTO, fused: bool = True,
-                 double_buffer: bool = False):
+                 double_buffer: bool = False, pctx=None):
         self.params = params
         self.policy = policy
         self.acfg = acfg
         self.fused = fused
         self.double_buffer = double_buffer
+        self.pctx = pctx                 # mesh → shard-local requant plans
         self.session = session if session is not None else \
             CalibrationSession(halflife=halflife)
         if lowrank is _AUTO:
@@ -115,7 +116,8 @@ class QuantizedModel:
         if self._plan is None or self._plan_key != key:
             self._plan = FusedRequantPlan(self.params, stats, self.policy,
                                           acfg=self.acfg,
-                                          lowrank_tree=self.lowrank_tree)
+                                          lowrank_tree=self.lowrank_tree,
+                                          pctx=self.pctx)
             self._plan_key = key
         return self._plan
 
@@ -203,7 +205,8 @@ class QuantizedModel:
         return QuantizedModel(self.params, self.policy, acfg=self.acfg,
                               session=self.session.fork(),
                               lowrank=self.lowrank_tree, fused=self.fused,
-                              double_buffer=self.double_buffer)
+                              double_buffer=self.double_buffer,
+                              pctx=self.pctx)
 
     def adopt(self, session: CalibrationSession) -> "QuantizedModel":
         """Join a forked stream's statistics into this model's session."""

@@ -16,6 +16,12 @@ block holds what:
 * **accounting** — prefix hit/miss counts, peak utilization, per-request
   block ownership (the leak check's ground truth).
 
+Mesh interplay (DESIGN.md §10): physical block ids are *global* — a sharded
+pool splits the KV-head dim, never the block dim — so this allocator, the
+prefix trie and preemption run identically on every mesh shape; per-slot
+block tables are replicated and the ids handed out here index every
+device's local pool shard.
+
 Allocation is **upfront**: a request reserves every block its prompt plus
 generation budget can touch (``ceil(min(plen + max_new, max_len) / bs)``),
 so decode never allocates and the block table is read-only on device between

@@ -138,15 +138,21 @@ class TTQEngine:
         if ecfg.use_kernels is not None:
             self.kncfg = dataclasses.replace(self.kncfg,
                                              use_pallas=ecfg.use_kernels)
-        self.qmodel = QuantizedModel(params, policy,
-                                     halflife=ecfg.stats_halflife,
-                                     double_buffer=ecfg.double_buffer)
-        self.scheduler = Scheduler(
-            ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"),
-            kvcfg=self.kvcfg, num_blocks=self.num_blocks)
+        # runner first: with a mesh, the fp parameter tree is committed to
+        # its sharded layout through the runner (the one component allowed
+        # to allocate device memory — TC402/TC405) BEFORE the quant model
+        # captures it, so every requant reads already-local weight shards
         self.runner = DeviceRunner(cfg, ecfg, self.kvcfg, kncfg=self.kncfg,
                                    pctx=pctx, key=key,
                                    num_blocks=self.num_blocks)
+        self.params = params = self.runner.place_params(params)
+        self.qmodel = QuantizedModel(params, policy,
+                                     halflife=ecfg.stats_halflife,
+                                     double_buffer=ecfg.double_buffer,
+                                     pctx=pctx)
+        self.scheduler = Scheduler(
+            ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"),
+            kvcfg=self.kvcfg, num_blocks=self.num_blocks)
         self.requant_wall_s = 0.0       # dispatch time spent requantizing
 
     # ------------------------------------------------------------------- TTQ

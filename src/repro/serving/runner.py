@@ -105,14 +105,66 @@ class DeviceRunner:
         # clean — see tests/test_runtime_guards.py)
         self._zero = jnp.asarray(0, jnp.int32)
         self._sink = jnp.asarray(SINK, jnp.int32)
+        # mesh serving: commit the decode state to its canonical layout (KV
+        # heads on the model axis; paged pools shard heads, never blocks) and
+        # the scalar lanes replicated.  The shardings are cached so admission
+        # epilogues can re-pin — the decode jit must only ever see ONE
+        # input-sharding signature (DESIGN.md §"Mesh-sharded serving").
+        if pctx is not None and pctx.mesh is not None:
+            from repro.parallel.rules import state_sharding
+            self._state_shardings = state_sharding(self.state, pctx,
+                                                   paged=self.paged)
+            self._rep = jax.sharding.NamedSharding(
+                pctx.mesh, jax.sharding.PartitionSpec())
+            self.state = jax.tree.map(jax.device_put, self.state,
+                                      self._state_shardings)
+            self._zero = jax.device_put(self._zero, self._rep)
+            self._sink = jax.device_put(self._sink, self._rep)
+        else:
+            self._state_shardings = None
+            self._rep = None
+        self._repin()
+        out_kw = {}
+        if self._state_shardings is not None:
+            rep = self._rep
+            out_kw["out_shardings"] = ((rep, rep),
+                                       (self._state_shardings,
+                                        rep, rep, rep, rep, rep))
         self._decode_jit = jax.jit(partial(
             lm.decode_many, cfg, pctx=pctx, kvcfg=kvcfg, kcfg=kncfg,
             K=K, max_len=ML,
-            temperature=ecfg.temperature, eos_token=ecfg.eos_token))
+            temperature=ecfg.temperature, eos_token=ecfg.eos_token), **out_kw)
         self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
                                             collect_stats=True,
                                             full_logits=True, kvcfg=kvcfg),
                                     static_argnames=("max_len",))
+
+    def place_params(self, params):
+        """Device placement for a parameter tree (fp at engine init, or a
+        freshly quantized tree): mesh-sharded per ``parallel/rules.py`` when
+        a mesh is active, otherwise untouched (jax default placement).  Lives
+        on the runner because device allocation belongs to the runner
+        (tracecheck TC402/TC405)."""
+        if self.pctx is None or self.pctx.mesh is None:
+            return params
+        from repro.parallel.rules import shard_params
+        return shard_params(params, self.pctx)
+
+    def _repin(self):
+        """Pin the slot lanes (and, after admission writes, the decode state)
+        back to their canonical shardings.  Explicit ``device_put`` — legal
+        under ``jax.transfer_guard("disallow")`` and a no-op when the layout
+        already matches — so eager admission scatters can never drift the
+        decode jit's input shardings into a recompile ping-pong."""
+        if self._state_shardings is None:
+            return
+        self.state = jax.tree.map(jax.device_put, self.state,
+                                  self._state_shardings)
+        self.pos = jax.device_put(self.pos, self._rep)
+        self.cur_tok = jax.device_put(self.cur_tok, self._rep)
+        self.done = jax.device_put(self.done, self._rep)
+        self.remaining = jax.device_put(self.remaining, self._rep)
+        self.key = jax.device_put(self.key, self._rep)
 
     @property
     def compiled_programs(self) -> int:
@@ -203,6 +255,7 @@ class DeviceRunner:
                  | (first_h == ecfg.eos_token))
         self.done = self.done.at[idx].set(jnp.asarray(fin_h))
         self.host_syncs += 1
+        self._repin()                    # admission writes → canonical layout
         return first_h, fin_h
 
     def _admit_group_paged(self, params, group, frames=None):
@@ -266,7 +319,8 @@ class DeviceRunner:
         a host scalar, an implicit h2d the guard rejects.)"""
         mask_h = np.zeros((self.ecfg.max_slots,), bool)
         mask_h[list(slots)] = True
-        mask = jax.device_put(mask_h)
+        mask = jax.device_put(mask_h) if self._rep is None \
+            else jax.device_put(mask_h, self._rep)
         self.done = jnp.logical_or(self.done, mask)
         self.remaining = jnp.where(mask, self._zero, self.remaining)
         if self.paged:

@@ -13,7 +13,11 @@ falls back to the per-admission counter (``recalibrate_every``).
 
 No jax arrays live here — the device side is :class:`~repro.serving.runner.
 DeviceRunner` and the two are composed by :class:`~repro.serving.engine.
-TTQEngine`.
+TTQEngine`.  That array-free contract (tracecheck TC402/TC405) is also what
+makes the scheduler mesh-oblivious: on a sharded engine (DESIGN.md §10) the
+same queue/slot/cadence decisions drive every device — admission groups,
+block budgets and requant cadence are global properties, and the runner
+replays them against the sharded state.
 """
 from __future__ import annotations
 

@@ -10,9 +10,16 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def run_subprocess(code: str, devices: int = 1, timeout: int = 600):
-    """Run python code in a subprocess with N fake devices; returns stdout."""
+    """Run python code in a subprocess with N fake devices; returns stdout.
+
+    Any pre-existing --xla_force_host_platform_device_count in the caller's
+    XLA_FLAGS is stripped (ours wins); other flags are preserved.
+    """
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    kept.append(f"--xla_force_host_platform_device_count={devices}")
+    env["XLA_FLAGS"] = " ".join(kept)
     env["PYTHONPATH"] = SRC
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, timeout=timeout)
@@ -24,3 +31,15 @@ def run_subprocess(code: str, devices: int = 1, timeout: int = 600):
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+@pytest.fixture(scope="session")
+def mesh_subproc():
+    """Four-virtual-device CPU backend runner for the mesh test tier.
+
+    The parent pytest process stays single-device; every mesh test runs its
+    workload in a child with XLA_FLAGS=--xla_force_host_platform_device_count=4.
+    """
+    def run(code: str, timeout: int = 600):
+        return run_subprocess(code, devices=4, timeout=timeout)
+    return run

@@ -1,0 +1,110 @@
+"""Mesh-sharded serving equivalence tier.
+
+Greedy-token equality between a single-device engine and the same engine on a
+(1, n) tensor-parallel mesh, across kernels on/off × KV cache dtype × dense vs
+paged KV.  Every test runs its workload in a 4-virtual-device CPU subprocess
+(``mesh_subproc``) so the parent pytest process stays single-device.
+
+Why greedy *tokens* and not bitwise logits: column-parallel projections
+(wo/wd/w2/w_out) psum partial products over the model axis, which reorders the
+f32 accumulation.  The argmax is stable under that reordering for every seed
+and shape used here; the KV caches, row-parallel outputs and the requantized
+weights themselves ARE bitwise identical (see
+``test_requant_bit_equality_on_mesh``).
+"""
+import pytest
+
+# Shared preamble: tiny dense model + engine runner, greedy decode.
+_SETUP = """
+import jax
+import numpy as np
+from repro.serving import TTQEngine, EngineConfig
+from repro.models import ModelConfig, lm
+from repro.core import ttq_policy
+from repro.launch.mesh import make_mesh, make_ctx
+
+cfg = ModelConfig(name='t', family='dense', n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=4, d_ff=128, vocab=128)
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+PROMPTS = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12, 6, 3, 7, 9, 2, 4]]
+BUDGETS = [6, 4, 7]
+
+def run(pctx, kernels, kv, paged):
+    eng = TTQEngine(cfg, params, ttq_policy(bits=4, group_size=16, packed=True),
+                    EngineConfig(max_slots=4, max_len=64, decode_chunk=2,
+                                 kv_dtype=kv, kv_paged=paged, kv_block_size=16,
+                                 use_kernels=kernels),
+                    pctx=pctx, key=jax.random.PRNGKey(7))
+    rids = [eng.submit(p, max_new=b) for p, b in zip(PROMPTS, BUDGETS)]
+    eng.run_all()
+    return [list(eng.scheduler.results()[r]) for r in rids]
+"""
+
+_SWEEP = _SETUP + """
+assert jax.device_count() == 4, jax.device_count()
+for kv, paged in (('bf16', False), ('int8', True), ('int4', False)):
+    base = run(None, KERNELS, kv, paged)
+    for n in (2, 4):
+        got = run(make_ctx(make_mesh(1, n)), KERNELS, kv, paged)
+        assert got == base, (KERNELS, kv, paged, n, got, base)
+        print('OK', KERNELS, kv, paged, n)
+print('SWEEP_OK')
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kernels", [False, True])
+def test_mesh_greedy_equality(mesh_subproc, kernels):
+    """mesh=1 tokens == mesh∈{2,4} tokens for all KV dtype/layout combos."""
+    out = mesh_subproc(f"KERNELS = {kernels}\n" + _SWEEP, timeout=900)
+    assert "SWEEP_OK" in out
+
+
+def test_mesh_greedy_equality_smoke(mesh_subproc):
+    """Fast tier-1 slice of the sweep: kernels on, int8 paged KV, mesh=2."""
+    out = mesh_subproc(_SETUP + """
+base = run(None, True, 'int8', True)
+got = run(make_ctx(make_mesh(1, 2)), True, 'int8', True)
+assert got == base, (got, base)
+print('SMOKE_OK')
+""", timeout=900)
+    assert "SMOKE_OK" in out
+
+
+def test_requant_bit_equality_on_mesh(mesh_subproc):
+    """Shard-local FusedRequantPlan == single-device quantize_params, bitwise.
+
+    The requant math is per-output-row / per-group with a per-*column*
+    activation diagonal, so quantizing each weight shard in place touches
+    exactly the same numbers as the gathered single-device path — every
+    QuantizedTensor child must match bit-for-bit."""
+    out = mesh_subproc(_SETUP + """
+from repro.quant.api import FusedRequantPlan, quantize_params
+from repro.quant.session import CalibrationSession
+from repro.core.ttq import QuantizedTensor
+
+policy = ttq_policy(bits=4, group_size=16, packed=True)
+sess = CalibrationSession()
+_, _, stats = lm.prefill(cfg, params, {"tokens": np.array([PROMPTS[2]])}, 64)
+sess.update(stats, float(len(PROMPTS[2])))
+stats, count = sess.as_calib()
+
+ref = quantize_params(params, stats, policy, count=count)
+pctx = make_ctx(make_mesh(1, 4))
+plan = FusedRequantPlan(params, stats, policy, pctx=pctx)
+got = plan.run(params, stats, count, None)
+
+is_qt = lambda x: isinstance(x, QuantizedTensor)
+refs = [l for l in jax.tree.leaves(ref, is_leaf=is_qt) if is_qt(l)]
+gots = [l for l in jax.tree.leaves(got, is_leaf=is_qt) if is_qt(l)]
+assert len(refs) == len(gots) and refs
+for r, g in zip(refs, gots):
+    for f in ('wint', 'packed', 'scale', 'zero', 'dinv'):
+        a, b = getattr(r, f), getattr(g, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f)
+print('BITEQ_OK', len(refs))
+""", timeout=900)
+    assert "BITEQ_OK" in out

@@ -133,6 +133,80 @@ def test_mixed_length_paged_workload_bounded_compiles(params):
     assert n_fams == len(eng.qmodel._plan._family_fns)
 
 
+# Sharded variants: the guard rails must survive a tensor-parallel mesh.
+# Subprocess with 4 virtual CPU devices (the parent stays single-device).
+
+_MESH_SETUP = """
+import jax
+from repro.core import NO_QUANT, ttq_policy
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, TTQEngine
+from repro.launch.mesh import make_mesh, make_ctx
+
+CFG = ModelConfig(name='t', family='dense', n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+params = lm.init_params(CFG, jax.random.PRNGKey(0))
+PROMPTS = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12, 6, 3, 7, 9, 2, 4],
+           [7, 7, 7, 2, 1]]
+BUDGETS = [9, 4, 7, 12]
+pctx = make_ctx(make_mesh(1, 2))
+
+def serve(eng, guard=False):
+    rids = [eng.submit(p, max_new=b) for p, b in zip(PROMPTS, BUDGETS)]
+    assert eng.step()
+    if guard:
+        with jax.transfer_guard('disallow'):
+            while eng.scheduler.has_work():
+                if not eng.step():
+                    break
+    else:
+        eng.run_all()
+    return [list(eng.scheduler.results()[r]) for r in rids]
+"""
+
+
+def test_sharded_decode_under_transfer_guard(mesh_subproc):
+    """Steady-state decode on a (1, 2) mesh stays transfer-clean: sharded
+    state, replicated control lanes and the post-admission ``_repin`` are all
+    explicit placements, so the guarded loop emits tokens identical to the
+    unguarded sharded engine."""
+    out = mesh_subproc(_MESH_SETUP + """
+def make():
+    return TTQEngine(CFG, params, NO_QUANT, EngineConfig(
+        max_slots=len(PROMPTS), max_len=64, decode_chunk=2,
+        kv_dtype='int8', kv_paged=True, kv_block_size=16), pctx=pctx)
+
+guarded = serve(make(), guard=True)
+plain = serve(make(), guard=False)
+assert guarded == plain, (guarded, plain)
+print('GUARD_OK')
+""", timeout=900)
+    assert "GUARD_OK" in out
+
+
+def test_requant_program_bound_on_mesh(mesh_subproc):
+    """The fused requant plan keeps ONE program per weight family on a mesh —
+    shard-local quantization must not multiply jit entries per shard — and a
+    repeated identical wave compiles zero new engine programs."""
+    out = mesh_subproc(_MESH_SETUP + """
+eng = TTQEngine(CFG, params, ttq_policy(), EngineConfig(
+    max_slots=2, max_len=64, decode_chunk=2, kv_paged=True,
+    kv_block_size=16, prompt_buckets=(8, 16)), pctx=pctx)
+serve(eng)
+n_fams = eng.qmodel.compiled_programs
+assert n_fams == len(eng.qmodel._plan._family_fns), (
+    n_fams, len(eng.qmodel._plan._family_fns))
+serve(eng)                       # warm prefix cache: tail shapes settle
+w2 = eng.compiled_programs
+serve(eng)                       # identical wave: zero new programs
+w3 = eng.compiled_programs
+assert w3 == w2, (w2, w3)
+assert eng.qmodel.compiled_programs == n_fams   # still 1 program / family
+print('BOUND_OK', n_fams)
+""", timeout=900)
+    assert "BOUND_OK" in out
+
+
 def test_compiled_programs_accounting(params):
     """The facade counter grows only with new shapes.  Deltas, not
     absolutes: the prefix-gather term is a module-level jit cache shared

@@ -1,9 +1,10 @@
 """Distribution: sharding rules, MoE a2a == dense, dry-run machinery on a
-small mesh, multi-pod axis — all in subprocesses with fake devices."""
+small mesh, multi-pod axis — all in subprocesses with fake devices; plus
+hypothesis property coverage of the pure spec logic (no devices needed)."""
 import numpy as np
 import pytest
 
-from repro.parallel.rules import spec_for_path
+from repro.parallel.rules import divisible_spec, qt_specs, spec_for_path
 
 
 def test_spec_rules():
@@ -68,6 +69,141 @@ assert any('data' in str(s) for s in specs), specs
 print('OK')
 """, devices=8)
     assert "OK" in out
+
+
+# --------------------------------------------------------------- properties
+# Pure spec logic: qt_specs/divisible_spec only read mesh.shape, so a fake
+# mesh object drives them without any devices (or even importing a backend).
+# Module-level importorskip (the test_property.py idiom) would skip the whole
+# file — including the non-hypothesis tests above — so gate only this section.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in minimal envs
+    _HAS_HYPOTHESIS = False
+
+    def given(*_a, **_k):    # decorators must exist for the defs below
+        return lambda f: pytest.mark.skip(
+            reason="property tests need hypothesis (requirements-dev.txt)")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:                # noqa: N801 - stand-in for hypothesis.strategies
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+        @staticmethod
+        def sampled_from(*_a, **_k):
+            return None
+
+        @staticmethod
+        def booleans(*_a, **_k):
+            return None
+
+SET = settings(max_examples=50, deadline=None)
+
+
+class _FakeMesh:
+    def __init__(self, data, model):
+        self.shape = {"data": data, "model": model}
+
+
+# representative param paths covering every rule family (row, col, expert,
+# replicated) both inside and outside the layer stack
+_PATHS = [
+    "embed", "lm_head",
+    "stack.0.u0.mix.wq", "stack.0.u0.mix.wo", "stack.0.u0.mix.wkv_b",
+    "stack.0.u0.mix.w_in", "stack.0.u0.mix.w_out",
+    "stack.0.u0.mlp.wg", "stack.0.u0.mlp.wd", "stack.0.u0.mlp.w1",
+    "stack.0.u0.mlp.w2", "stack.0.u0.mlp.experts.wg",
+    "stack.0.u0.mlp.experts.wd", "stack.0.u0.mlp.shared.wg",
+    "stack.0.u0.ln1.gamma", "stack.0.u0.mix.qnorm.gamma",
+]
+
+
+def _axis_n(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_PATHS),
+       st.integers(1, 4), st.sampled_from([1, 2, 3, 4, 8]))
+def test_divisible_spec_always_divides(seed, path, ndim, model):
+    """Every axis that survives divisible_spec divides its dim exactly."""
+    rng = np.random.default_rng(seed)
+    mesh = _FakeMesh(int(rng.integers(1, 5)), model)
+    shape = tuple(int(rng.integers(1, 65)) for _ in range(ndim))
+    spec = spec_for_path(path, ndim, "model", stacked="stack" in path)
+    out = divisible_spec(spec, shape, mesh)
+    assert len(out) == len(shape)
+    for dim, ax in zip(shape, out):
+        assert dim % _axis_n(mesh, ax) == 0, (path, shape, out)
+
+
+def _placement(spec, i):
+    return spec[i] if i < len(spec) else None
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_PATHS),
+       st.sampled_from([1, 2, 4, 8]), st.booleans(), st.booleans())
+def test_qt_specs_children_consistent(seed, path, model, lowrank, expert):
+    """QuantizedTensor child specs stay mutually consistent and, with a mesh,
+    always divide the child shapes.
+
+    Consistency: wint/packed/scale/zero share the (row, col) placement; dinv
+    sits on the col placement; B on rows, A on cols (mesh=None form — the
+    divisibility fallback may legitimately drop an axis for one child whose
+    narrower dim doesn't divide, e.g. scale's d/g columns)."""
+    rng = np.random.default_rng(seed)
+    lead = (1,) if "stack" in path else ()
+    bits, per = 4, 8
+    g = int(rng.choice([8, 16, 32]))
+    d = g * per * int(rng.integers(1, 5))         # in-features
+    dp = 8 * int(rng.integers(1, 9))              # out-features
+    ex = (int(rng.choice([2, 4, 8])),) if expert else ()
+    r = int(rng.integers(1, 9))
+    shapes = {
+        "wint": None, "packed": (*lead, *ex, dp, d // per),
+        "scale": (*lead, *ex, dp, d // g), "zero": (*lead, *ex, dp, d // g),
+        "dinv": (*lead, *ex, d),
+        "B": (*lead, *ex, dp, r) if lowrank else None,
+        "A": (*lead, *ex, r, d) if lowrank else None,
+    }
+    pure = qt_specs(path, shapes, "model")
+    nd = len(shapes["packed"])
+    row_i, col_i = nd - 2, nd - 1
+    # shared (row, col) placement across the packed/scale/zero family
+    for k in ("scale", "zero"):
+        assert _placement(pure[k], row_i) == _placement(pure["packed"], row_i)
+        assert _placement(pure[k], col_i) == _placement(pure["packed"], col_i)
+    # dinv rides the input dim; B the output dim; A the input dim
+    assert _placement(pure["dinv"], nd - 2) == _placement(pure["packed"], col_i)
+    assert _placement(pure["B"], row_i) == _placement(pure["packed"], row_i)
+    assert _placement(pure["A"], col_i) == _placement(pure["packed"], col_i)
+    # leading (layer, expert) dims agree everywhere
+    for i in range(nd - 2):
+        want = _placement(pure["packed"], i)
+        for k in ("scale", "zero", "B", "A"):
+            assert _placement(pure[k], i) == want, (path, k, i)
+    # with a mesh, every emitted spec divides its child's shape
+    mesh = _FakeMesh(int(rng.integers(1, 5)), model)
+    sized = qt_specs(path, shapes, "model", mesh)
+    for k, shape in shapes.items():
+        if shape is None:
+            continue
+        for dim, ax in zip(shape, sized[k]):
+            assert dim % _axis_n(mesh, ax) == 0, (path, k, shape, sized[k])
 
 
 @pytest.mark.slow

@@ -438,6 +438,42 @@ def test_tc404_facade_surface(tmp_path):
     assert "host_syncs" in f[0].message
 
 
+def test_tc405_placement_funnel(tmp_path):
+    files = {
+        "src/repro/serving/engine.py": """
+            import jax
+            def place(params, sh):
+                return jax.tree.map(jax.device_put, params, sh)   # TC405
+        """,
+        "src/repro/launch/serve.py": """
+            import jax
+            def build():
+                return jax.make_mesh((1, 2), ('data', 'model'))   # TC405
+        """,
+        # the three sanctioned doors stay clean
+        "src/repro/parallel/rules.py": """
+            import jax
+            def shard(params, sh):
+                return jax.tree.map(jax.device_put, params, sh)
+        """,
+        "src/repro/launch/mesh.py": """
+            import jax
+            def make_mesh(d, m):
+                return jax.make_mesh((d, m), ('data', 'model'))
+        """,
+        "src/repro/serving/runner.py": """
+            import jax
+            def pin(x, sh):
+                return jax.device_put(x, sh)
+        """,
+    }
+    root = write_tree(tmp_path, files)
+    f = [x for x in serving.check(core.parse_paths(sorted(files), root))
+         if x.rule == "TC405"]
+    assert len(f) == 2, f
+    assert {x.path.rsplit("/", 1)[-1] for x in f} == {"engine.py", "serve.py"}
+
+
 # --------------------------------------------------------------- docs-links
 
 
@@ -494,8 +530,10 @@ def test_self_run_src_repro_is_clean():
     """The CI gate: the real tree carries zero non-baselined findings."""
     new, old = core.run(["src/repro"], root=REPO)
     assert new == [], "\n".join(str(f) for f in new)
-    # the baseline documents exactly the designed decode_block sync
-    assert [f.rule for f in old] == ["TC103"]
+    # the baseline documents exactly the designed decode_block sync plus the
+    # three pre-funnel placement sites (trainer ZeRO-1 reshard, checkpoint
+    # restore ×2) grandfathered under TC405
+    assert sorted(f.rule for f in old) == ["TC103"] + ["TC405"] * 3
 
 
 def test_self_run_catches_real_bug_classes():

@@ -18,7 +18,15 @@ can't express, so the analyzer pins them:
   block table;
 * TC404 — the ``TTQEngine`` facade keeps its back-compat surface (the
   properties tests/benchmarks/examples consume) and
-  ``serving/__init__`` keeps re-exporting the public names.
+  ``serving/__init__`` keeps re-exporting the public names;
+* TC405 — device placement and mesh construction stay funneled:
+  ``jax.device_put`` / ``jax.make_mesh`` / ``jax.sharding.Mesh`` appear
+  only under ``parallel/``, in ``launch/mesh.py`` or in
+  ``serving/runner.py`` (repo-wide, call or argument position — passing
+  ``jax.device_put`` to ``tree.map`` places arrays just the same).
+  Scattered placement is how mixed-layout trees and silent resharding
+  transfers creep in; the mesh-sharded engine relies on every array
+  entering the device through one of these three doors.
 """
 from __future__ import annotations
 
@@ -43,6 +51,15 @@ _ALLOCATOR_FNS = {
     "repro.serving.blocks.BlockAllocator._take",
     "repro.models.lm.init_decode_state",
 }
+
+# TC405: placement/mesh primitives and the modules allowed to use them
+_PLACEMENT_ATTRS = {"jax.device_put", "jax.make_mesh", "jax.sharding.Mesh"}
+
+
+def _placement_allowed(path: str) -> bool:
+    return ("/parallel/" in path or path.endswith("launch/mesh.py")
+            or path.endswith("serving/runner.py"))
+
 
 # the facade surface consumers (tests/benchmarks/examples) rely on
 ENGINE_ATTRS = [
@@ -142,6 +159,21 @@ def check(repo: Repo) -> List[Finding]:
                     "TC403", fi.module.path, node.lineno,
                     f"allocator.allocate called from decode-reachable {q} "
                     f"— decode must never allocate"))
+
+    # TC405: placement/mesh primitives only behind the three doors
+    for mod in repo:
+        if _placement_allowed(mod.path):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            d = _text(node)
+            if d in _PLACEMENT_ATTRS:
+                out.append(Finding(
+                    "TC405", mod.path, node.lineno,
+                    f"`{d}` outside parallel/, launch/mesh.py, "
+                    f"serving/runner.py — device placement and mesh "
+                    f"construction are funneled (DESIGN.md §10)"))
 
     # TC404: facade surface + package re-exports
     eng = cg.classes.get("repro.serving.engine.TTQEngine")
