@@ -1,5 +1,8 @@
 """Generate the EXPERIMENTS.md §Roofline + §Perf markdown tables from the
-dry-run cache.
+dry-run cache, plus a headline summary of the serving benchmark JSONs
+(``results/BENCH_*.json``).  Absent JSONs WARN — they are produced by
+separate bench runs that may not have happened on this checkout — the
+report never crashes on a missing file.
 
     PYTHONPATH=src python -m benchmarks.report
 """
@@ -10,6 +13,7 @@ import json
 import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 HILL = [("granite_34b", "decode_32k"), ("gemma_7b", "decode_32k"),
         ("granite_34b", "train_4k")]
 
@@ -82,10 +86,60 @@ def multi_pod_check():
           f"multi-pod {ok_m} compiled + {sk_m} skipped; {er} errors.")
 
 
+def _bench(name):
+    """Load one results/BENCH_*.json; warn (don't crash) when absent."""
+    path = os.path.join(BENCH_DIR, name)
+    if not os.path.exists(path):
+        print(f"  warn: {name} absent — run its bench to regenerate "
+              f"(benchmarks/README in EXPERIMENTS.md §Perf)")
+        return None
+    try:
+        return json.load(open(path))
+    except (json.JSONDecodeError, OSError) as e:
+        print(f"  warn: {name} unreadable ({e})")
+        return None
+
+
+def bench_summary():
+    """Headline numbers from the serving bench JSONs."""
+    print("\n### §Perf — serving bench headlines (results/BENCH_*.json)\n")
+    r = _bench("BENCH_engine.json")
+    if r:
+        print(f"engine: crossover {r.get('crossover_slots')} slot(s), "
+              f"best chunk {r.get('best_chunk')}, prefix savings "
+              f"{r.get('prefix', {}).get('prefill_savings', 0):.0%}")
+    r = _bench("BENCH_kvcache.json")
+    if r:
+        rows = r.get("rows", [])
+        print(f"kvcache: {len(rows)} rows "
+              f"(dtypes × layouts; see EXPERIMENTS.md §Roofline)")
+    r = _bench("BENCH_requant.json")
+    if r:
+        rows = r.get("rows", [])
+        print(f"requant: {len(rows)} rows "
+              f"(fused-plan cadence; see EXPERIMENTS.md §Perf)")
+    r = _bench("BENCH_mesh.json")
+    if r:
+        print(f"mesh: byte shrink at mesh=2 "
+              f"{r.get('byte_shrink_mesh2') or 0:.2f}x, token agreement "
+              f"{r.get('token_agreement')}")
+    r = _bench("BENCH_spec.json")
+    if r and r.get("best"):
+        b = r["best"]
+        br = r.get("best_roofline") or b
+        print(f"speculate: best wall {b.get('speedup', 0):.2f}x "
+              f"(verify={b.get('verify')} draft={b.get('draft')} "
+              f"W={b.get('W')}), best roofline "
+              f"{br.get('roofline_speedup', 0):.2f}x at acceptance "
+              f"{br.get('acceptance')} (see EXPERIMENTS.md "
+              f"§\"Self-speculative methodology\")")
+
+
 def main():
     multi_pod_check()
     roofline_table("single")
     hillclimb_table()
+    bench_summary()
 
 
 if __name__ == "__main__":

@@ -173,6 +173,21 @@ class QuantPolicy:
                 eff = eff._apply(delta)
         return eff
 
+    def draft_variant(self, bits: int = 4, group_size: int = 0) -> "QuantPolicy":
+        """Uniform low-bit sibling for self-speculative drafting
+        (DESIGN.md §11): same method / skip set / KV-cache layout / kernel
+        dispatch, but one flat ``bits`` everywhere (``group_size`` 0 keeps
+        the base group), rank 0 and no per-layer overrides — the draft tree
+        quantizes as ONE family-light pass and its decode matmuls skip the
+        low-rank correction, which is what makes drafting cheap."""
+        if not self.enabled:
+            return self
+        gs = group_size or self.qcfg.group_size
+        return dataclasses.replace(
+            self, qcfg=dataclasses.replace(self.qcfg, bits=bits,
+                                           group_size=gs),
+            rank=0, overrides=())
+
 
 NO_QUANT = QuantPolicy(method="none")
 

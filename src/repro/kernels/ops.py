@@ -74,6 +74,37 @@ def kv_paged_decode_attention(q, kq, ks, vq, vs, block_table, cur_pos, *,
                                   scale=scale, soft_cap=soft_cap)
 
 
+def kv_suffix_attention(q, kq, ks, vq, vs, pos, *, bits=8, group_size=0,
+                        scale=None, soft_cap=0.0, use_pallas=True,
+                        **block_kw):
+    """Speculative-verify attention over an int8/int4 KV cache.
+
+    ``q`` carries the S in-window queries per slot; the window's k/v rows
+    were already scattered into the cache (write-then-read, DESIGN.md §11).
+    Dispatch hint only for now: a Pallas suffix kernel would need a q-tile
+    axis on the decode kernel's S-loop, so every bit-width routes to the
+    pure-jnp oracle (``use_pallas`` accepted for signature parity).
+    """
+    del use_pallas, block_kw
+    return _ref.kv_suffix_attn_ref(q, kq, ks, vq, vs, pos, bits=bits,
+                                   group_size=group_size, scale=scale,
+                                   soft_cap=soft_cap)
+
+
+def kv_paged_suffix_attention(q, kq, ks, vq, vs, block_table, pos, *, bits=8,
+                              group_size=0, scale=None, soft_cap=0.0,
+                              use_pallas=True):
+    """Speculative-verify attention over a block-paged int8/int4 KV pool.
+
+    Gathers the block table's view and runs the contiguous suffix oracle —
+    identical math to the paged decode read (no Pallas suffix kernel yet).
+    """
+    del use_pallas
+    return _ref.kv_paged_suffix_attn_ref(q, kq, ks, vq, vs, block_table, pos,
+                                         bits=bits, group_size=group_size,
+                                         scale=scale, soft_cap=soft_cap)
+
+
 def ttq_quantize(W, D, *, bits=4, group_size=32, use_pallas=True, **block_kw):
     if use_pallas and bits in _PACKABLE:
         return _ttq_quantize_pallas(W, D, bits=bits, group_size=group_size,
@@ -175,6 +206,41 @@ def kv_decode_attention_tp(q, kq, ks, vq, vs, cur_pos, *, pctx=None, **kw):
     return shard_map(lambda *a: call(*a), mesh=pctx.mesh,
                      in_specs=(hs, hs, hs, hs, hs, P(dp)), out_specs=hs,
                      check_vma=False)(q, kq, ks, vq, vs, cur_pos)
+
+
+def kv_suffix_attention_tp(q, kq, ks, vq, vs, pos, *, pctx=None, **kw):
+    """Head-parallel :func:`kv_suffix_attention` — same sharding contract as
+    :func:`kv_decode_attention_tp` (q/KV heads co-shard the model axis; the
+    per-slot window-start positions replicate per data shard)."""
+    call = partial(kv_suffix_attention, **kw)
+    if not _tp_attn_ok(pctx, q, kq, True):
+        return call(q, kq, ks, vq, vs, pos)
+    from repro.parallel.compat import shard_map
+    P = jax.sharding.PartitionSpec
+    m, dp = pctx.model_axis, pctx.dp
+    hs = P(dp, m, None, None)
+    return shard_map(lambda *a: call(*a), mesh=pctx.mesh,
+                     in_specs=(hs, hs, hs, hs, hs, P(dp)), out_specs=hs,
+                     check_vma=False)(q, kq, ks, vq, vs, pos)
+
+
+def kv_paged_suffix_attention_tp(q, kq, ks, vq, vs, block_table, pos, *,
+                                 pctx=None, **kw):
+    """Head-parallel paged suffix attention: pools shard over KV heads, the
+    block table and window-start positions replicate per data shard (mirrors
+    :func:`kv_paged_decode_attention_tp`)."""
+    call = partial(kv_paged_suffix_attention, **kw)
+    if not _tp_attn_ok(pctx, q, kq, False):
+        return call(q, kq, ks, vq, vs, block_table, pos)
+    from repro.parallel.compat import shard_map
+    P = jax.sharding.PartitionSpec
+    m, dp = pctx.model_axis, pctx.dp
+    qs = P(dp, m, None, None)
+    pool = P(None, m, None, None)
+    return shard_map(lambda *a: call(*a), mesh=pctx.mesh,
+                     in_specs=(qs, pool, pool, pool, pool, P(dp, None), P(dp)),
+                     out_specs=qs, check_vma=False)(
+        q, kq, ks, vq, vs, block_table, pos)
 
 
 def kv_paged_decode_attention_tp(q, kq, ks, vq, vs, block_table, cur_pos, *,

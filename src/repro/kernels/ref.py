@@ -59,6 +59,55 @@ def kv_attn_ref(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
     return o.reshape(B, H, 1, Dh).astype(q.dtype)
 
 
+def kv_suffix_attn_ref(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
+                       vq: jnp.ndarray, vs: jnp.ndarray, pos: jnp.ndarray, *,
+                       bits: int = 8, group_size: int = 0,
+                       scale: float | None = None,
+                       soft_cap: float = 0.0) -> jnp.ndarray:
+    """Speculative-window attention over a quantized cache (DESIGN.md §11).
+
+    q: (B,H,S,Dh) — S in-window queries per slot at absolute positions
+    ``pos[b]..pos[b]+S-1``; the window's k/v rows were already written to the
+    cache (write-then-read), so query s attends rows ≤ pos[b]+s.  Same
+    dequantize-then-grouped-query math as :func:`kv_attn_ref` with a query
+    axis, so verify logits match sequential decode bit-for-bit.
+    """
+    from repro.core.kvquant import dequantize_kv
+    B, H, S, Dh = q.shape
+    Hkv, Smax = kq.shape[1], kq.shape[2]
+    G = H // Hkv
+    sc = scale if scale is not None else Dh ** -0.5
+    k = dequantize_kv(kq, ks, jnp.float32, bits=bits, group_size=group_size)
+    v = dequantize_kv(vq, vs, jnp.float32, bits=bits, group_size=group_size)
+    qg = (q.astype(jnp.float32) * sc).reshape(B, Hkv, G, S, Dh)
+    s = jnp.einsum("bhgsd,bhkd->bhgsk", qg, k)
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    ki = jnp.arange(Smax)
+    qi = pos[:, None] + jnp.arange(S)                          # (B, S)
+    mask = ki[None, None, :] <= qi[:, :, None]                 # (B, S, Smax)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgsk,bhkd->bhgsd", p, v)
+    return o.reshape(B, H, S, Dh).astype(q.dtype)
+
+
+def kv_paged_suffix_attn_ref(q: jnp.ndarray, kq: jnp.ndarray, ks: jnp.ndarray,
+                             vq: jnp.ndarray, vs: jnp.ndarray,
+                             block_table: jnp.ndarray, pos: jnp.ndarray, *,
+                             bits: int = 8, group_size: int = 0,
+                             scale: float | None = None,
+                             soft_cap: float = 0.0) -> jnp.ndarray:
+    """Paged speculative-window attention: gather each slot's block-table view
+    into the contiguous layout, then the exact :func:`kv_suffix_attn_ref`
+    math (mirrors :func:`kv_paged_attn_ref`)."""
+    kqg, ksg = gather_paged_kv(kq, block_table), gather_paged_kv(ks, block_table)
+    vqg, vsg = gather_paged_kv(vq, block_table), gather_paged_kv(vs, block_table)
+    return kv_suffix_attn_ref(q, kqg, ksg, vqg, vsg, pos, bits=bits,
+                              group_size=group_size, scale=scale,
+                              soft_cap=soft_cap)
+
+
 def gather_paged_kv(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     """Materialize a per-slot contiguous view of a paged pool.
 

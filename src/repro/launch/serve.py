@@ -114,6 +114,16 @@ def main():
                          "capacity-equivalent to the dense slab)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared prompt-prefix block reuse")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="self-speculative decoding (DESIGN.md §11): draft "
+                         "W tokens per window with the int4 draft tree, "
+                         "verify in one batched dispatch (0 = off; greedy "
+                         "only — ignored when temperature > 0)")
+    ap.add_argument("--draft-bits", type=int, default=0,
+                    help="explicit draft-tree precision (rank-0, g32) for "
+                         "--speculate-k; 0 = the policy's int4 draft_variant."
+                         "  With --no-quant this is draft-only quantization:"
+                         " the quantized draft speculates for the fp model")
     ap.add_argument("--mesh", type=int, default=1,
                     help="model-parallel mesh size (tensor/expert parallel "
                          "serving, DESIGN.md §10); 1 = single device")
@@ -133,6 +143,13 @@ def main():
     cfg = get(args.arch, smoke=args.smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     policy = build_policy(args)
+    draft_policy = None
+    if args.speculate_k > 0 and args.draft_bits > 0:
+        from repro.quant import ttq_policy
+        draft_policy = ttq_policy(bits=args.draft_bits, group_size=32,
+                                  rank=0, kvcache=policy.kvcache,
+                                  kernel=policy.kernel,
+                                  packed=args.use_kernels or args.packed)
     eng = TTQEngine(cfg, params, policy,
                     EngineConfig(max_slots=args.slots, max_len=args.max_len,
                                  decode_chunk=args.decode_chunk,
@@ -144,8 +161,9 @@ def main():
                                  kv_block_size=args.kv_block_size
                                  if args.kv_paged else 0,
                                  kv_pool_blocks=args.kv_pool_blocks,
-                                 prefix_cache=not args.no_prefix_cache),
-                    pctx=pctx)
+                                 prefix_cache=not args.no_prefix_cache,
+                                 speculate_k=args.speculate_k),
+                    pctx=pctx, draft_policy=draft_policy)
     layout = (f"paged block={eng.kvcfg.block_size} "
               f"pool={eng.num_blocks} blocks/layer "
               f"prefix_cache={not args.no_prefix_cache}"
@@ -159,8 +177,15 @@ def main():
           f"packed={policy.packed}, requant: {gate}")
     cadence = (f"every {args.recal_tokens} tokens" if args.recal_tokens
                else f"every {args.recal_every} admissions")
-    print(f"decode-chunk: {eng.ecfg.decode_chunk} tokens/dispatch, "
+    unit = "windows" if eng.ecfg.speculate_k > 0 else "tokens"
+    print(f"decode-chunk: {eng.ecfg.decode_chunk} {unit}/dispatch, "
           f"requant cadence: {cadence}")
+    if eng.ecfg.speculate_k > 0:
+        dp = eng.draft_policy
+        dd = (f"int{dp.qcfg.bits} g{dp.qcfg.group_size}"
+              if dp is not None and dp.any_enabled else "fp (no-quant)")
+        print(f"speculate: W={eng.ecfg.speculate_k} drafted tokens/window, "
+              f"draft tree {dd}")
     if pctx is not None:
         print(f"mesh: (1, {args.mesh}) data×model over "
               f"{jax.device_count()} device(s)")
@@ -184,6 +209,10 @@ def main():
           f"host_syncs/token={eng.host_syncs / max(toks, 1):.2f} "
           f"requant_wall={eng.requant_wall_s:.2f}s "
           f"gate_skipped_layers={skipped}/{total_layers}")
+    if eng.ecfg.speculate_k > 0:
+        print(f"speculate: windows={eng.spec_windows} "
+              f"acceptance={eng.spec_acceptance_rate:.2f} "
+              f"(accepted drafts / drafted tokens)")
     if eng.kvcfg.paged:
         print(f"kv-pool: util_peak={eng.kv_pool_utilization:.2f} "
               f"prefix_hit_rate={eng.prefix_hit_rate:.2f} "

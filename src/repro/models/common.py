@@ -327,6 +327,49 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array, cur_pos: Array,
     return o[:, :, None].astype(q.dtype)
 
 
+def suffix_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
+                     *, scale: float | None = None,
+                     soft_cap: float = 0.0) -> Array:
+    """Multi-query decode attention for a speculated window (DESIGN.md §11).
+
+    q: (B,H,S,Dh) — S in-window queries per slot at absolute positions
+    ``pos[b]..pos[b]+S-1`` over a (B,Hkv,Smax,Dh) cache whose window rows
+    were just written (write-then-read).  Query s attends rows ≤ pos[b]+s.
+    Key-axis layout, masking, and einsum/dtype discipline mirror
+    :func:`decode_attention` exactly so a verify pass over the window
+    reproduces sequential decode logits bit-for-bit.
+    """
+    B, H, S, Dh = q.shape
+    Smax = k_cache.shape[2]
+    scale = scale if scale is not None else Dh ** -0.5
+    ki = jnp.arange(Smax)
+    qi = pos[:, None] + jnp.arange(S)                          # (B, S)
+    mask = ki[None, None, :] <= qi[:, :, None]                 # (B, S, Smax)
+    if opt_level() >= 1:
+        Hkv = k_cache.shape[1]
+        G = H // Hkv
+        qg = (q.astype(jnp.float32) * scale).astype(k_cache.dtype)
+        qg = qg.reshape(B, Hkv, G, S, Dh)
+        s = jnp.einsum("bhgsd,bhkd->bhgsk", qg, k_cache,
+                       preferred_element_type=jnp.float32)
+        if soft_cap > 0:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgsk,bhkd->bhgsd", p.astype(v_cache.dtype), v_cache,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, H, S, -1).astype(q.dtype)
+    kf = _expand_kv(k_cache, H).astype(jnp.float32)
+    vf = _expand_kv(v_cache, H).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhkd->bhsk", q.astype(jnp.float32) * scale, kf)
+    if soft_cap > 0:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhsk,bhkd->bhsd", p, vf)
+    return o.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from .common import (ACT, Array, attention, cache_update, cache_update_batched,
                      decode_attention, glu_mlp, init_glu_mlp, init_linear,
                      init_norm, init_plain_mlp, linear, norm, plain_mlp,
-                     rmsnorm, rope_decode, seq_update_batched, apply_rope)
+                     rmsnorm, rope_decode, seq_update_batched, apply_rope,
+                     suffix_attention)
 from .config import ModelConfig
 
 DTYPE = jnp.bfloat16
@@ -319,6 +320,120 @@ def attn_decode_rolling(cfg: ModelConfig, p, x: Array, state, pos,
     y = linear(o.reshape(x.shape[0], 1, -1), p["wo"], kcfg=kcfg, pctx=pctx,
                tp="col")
     return y, {"k": kc, "v": vc}
+
+
+def _kv_write_rows(cache: Array, new: Array, pos: Array) -> Array:
+    """cache (B,Hkv,Smax,D·) ← new (B,Hkv,S,D·) at rows pos[b]..pos[b]+S-1.
+
+    Window scatter for speculative verify (DESIGN.md §11).  Rows are NOT
+    clamped: a row landing at or beyond Smax is dropped (``mode='drop'``) —
+    clamping would let a later in-window write corrupt row Smax-1 before a
+    still-valid query at the capacity boundary reads it."""
+    B, _, S = new.shape[:3]
+    rows = pos[:, None] + jnp.arange(S)[None, :]               # (B, S)
+    bidx = jnp.arange(B)[:, None]
+    return cache.at[bidx, :, rows].set(
+        new.transpose(0, 2, 1, 3).astype(cache.dtype), mode="drop")
+
+
+def _kv_append_rows(state, k: Array, v: Array, pos, kvcfg):
+    """Quantized-slab window append: the whole (B,Hkv,S,Dh) drafted window's
+    codes and scale rows land at positions pos..pos+S-1 (per-row math is
+    identical to :func:`_kv_append`'s single-token quantize)."""
+    from repro.core.kvquant import quantize_kv
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        codes, scales = quantize_kv(t, bits=kvcfg.bits,
+                                    group_size=kvcfg.group_size)
+        out[name + "_q"] = _kv_write_rows(state[name + "_q"], codes, pos)
+        out[name + "_s"] = _kv_write_rows(state[name + "_s"], scales, pos)
+    return out
+
+
+def _pool_rows_write(pool: Array, new: Array, phys: Array, off: Array) -> Array:
+    """pool (NB,Hkv,bs,D·) ← new (B,Hkv,S,D·) at (phys (B,S), off (B,S)).
+
+    Multi-row sibling of :func:`_pool_row_write`; in-window rows of one slot
+    hit distinct (block, offset) cells, so the only duplicate index is the
+    sink block 0 (done lanes / over-capacity rows), where write order is
+    irrelevant."""
+    return pool.at[phys, :, off].set(new.transpose(0, 2, 1, 3).astype(pool.dtype))
+
+
+def _kv_append_rows_paged(state, k: Array, v: Array, pos, block_table, kvcfg):
+    """Paged window append: row j of the window lands in pool block
+    ``block_table[b, (pos+j) // bs]`` at offset ``(pos+j) % bs``.  Rows at or
+    beyond the slot's logical capacity route to the sink block 0 instead of
+    clamping (same capacity rule as :func:`_kv_write_rows`)."""
+    bs = kvcfg.block_size
+    pos = jnp.asarray(pos, jnp.int32)
+    S = k.shape[2]
+    nblk = block_table.shape[1]
+    rows = pos[:, None] + jnp.arange(S)[None, :]               # (B,S) absolute
+    blk = jnp.clip(rows // bs, 0, nblk - 1)
+    phys = jnp.take_along_axis(block_table, blk, axis=1)       # (B,S)
+    phys = jnp.where(rows < nblk * bs, phys, 0)                # sink overflow
+    off = rows % bs
+    if not kvcfg.quantized:
+        return {"k": _pool_rows_write(state["k"], k, phys, off),
+                "v": _pool_rows_write(state["v"], v, phys, off)}
+    from repro.core.kvquant import quantize_kv
+    out = {}
+    for name, t in (("k", k), ("v", v)):
+        codes, scales = quantize_kv(t, bits=kvcfg.bits,
+                                    group_size=kvcfg.group_size)
+        out[name + "_q"] = _pool_rows_write(state[name + "_q"], codes, phys, off)
+        out[name + "_s"] = _pool_rows_write(state[name + "_s"], scales, phys, off)
+    return out
+
+
+def attn_verify(cfg: ModelConfig, p, x: Array, state, pos, *, kvcfg=None,
+                kcfg=None, block_table=None, pctx=None):
+    """Speculative-verify attention: score a whole drafted window at once.
+
+    x: (B,S,D) — the window's token embeddings at absolute positions
+    ``pos[b]..pos[b]+S-1`` (pos: (B,) per-slot window starts).  Writes the
+    window's k/v rows at the cache's storage dtype FIRST (overwriting the
+    draft pass's rows), then runs the multi-query suffix read over the
+    updated cache — write-then-read keeps the key axis identical to
+    sequential decode, so greedy verify logits match ``attn_decode``
+    bit-for-bit and KV rollback of rejected tokens is just a position
+    rewind (DESIGN.md §11).  Returns (y (B,S,D), new_state)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, x, None, "", kcfg, pctx=pctx)
+    if cfg.pos == "rope":
+        qpos = (pos[:, None] + jnp.arange(S))[:, None, :]      # (B,1,S)
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+    cap = cfg.attn_soft_cap
+    if kvcfg is not None and kvcfg.paged:
+        from repro.kernels import ops as kops
+        st = _kv_append_rows_paged(state, k, v, pos, block_table, kvcfg)
+        if kvcfg.quantized:
+            o = kops.kv_paged_suffix_attention_tp(
+                q, st["k_q"], st["k_s"], st["v_q"], st["v_s"], block_table,
+                pos, bits=kvcfg.bits, group_size=kvcfg.group_size,
+                soft_cap=cap, use_pallas=kvcfg.use_pallas, pctx=pctx)
+        else:
+            from repro.kernels.ref import gather_paged_kv
+            o = suffix_attention(q, gather_paged_kv(st["k"], block_table),
+                                 gather_paged_kv(st["v"], block_table), pos,
+                                 soft_cap=cap)
+    elif kvcfg is not None and kvcfg.quantized:
+        from repro.kernels import ops as kops
+        st = _kv_append_rows(state, k, v, pos, kvcfg)
+        o = kops.kv_suffix_attention_tp(
+            q, st["k_q"], st["k_s"], st["v_q"], st["v_s"], pos,
+            bits=kvcfg.bits, group_size=kvcfg.group_size, soft_cap=cap,
+            use_pallas=kvcfg.use_pallas, pctx=pctx)
+    else:
+        kc = _kv_write_rows(state["k"], k, pos)
+        vc = _kv_write_rows(state["v"], v, pos)
+        st = {"k": kc, "v": vc}
+        o = suffix_attention(q, kc, vc, pos, soft_cap=cap)
+    y = linear(o.transpose(0, 2, 1, 3).reshape(B, S, -1), p["wo"], kcfg=kcfg,
+               pctx=pctx, tp="col")
+    return y, st
 
 
 # ===========================================================================

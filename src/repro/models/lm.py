@@ -261,3 +261,103 @@ def decode_many(cfg: ModelConfig, params, state, token, pos, done, remaining,
     carry = (state, token, pos, done, remaining, key)
     carry, (toks, valid) = jax.lax.scan(step_fn, carry, None, length=K)
     return (toks.T, valid.T), carry
+
+
+def verify_window(cfg: ModelConfig, params, state, tokens, pos, *, pctx=None,
+                  kvcfg=None, kcfg=None):
+    """Score a drafted window in one batched dispatch (DESIGN.md §11).
+
+    tokens: (B,S) int32 — per slot, the current token followed by S-1 drafted
+    tokens, fed at absolute positions ``pos[b]..pos[b]+S-1``.  Writes the
+    window's KV rows with THIS tree's k/v (overwriting whatever the draft
+    pass stored there), then reads the updated cache, so the returned logits
+    (B,S,V) match S sequential :func:`decode_step` calls bit-for-bit.
+    """
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tokens.shape[0],))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos == "learned":
+        idx = pos[:, None] + jnp.arange(tokens.shape[1])
+        x = x + jnp.take(params["pos_embed"], idx, axis=0)
+    dp = None if pctx is None else pctx.data_axes
+    x = _wsc(x, P(dp, None, None), pctx)
+    x, new_states = S.apply_stack_verify(cfg, params["stack"], S.stack_spec(cfg),
+                                         state["stack"], x, pos, pctx=pctx,
+                                         kvcfg=kvcfg, kcfg=kcfg,
+                                         block_table=state.get("block_table"))
+    x = norm(x, params["final_norm"])
+    logits = _head(cfg, params, x, pctx, kcfg)
+    new_state = dict(state)
+    new_state["stack"] = new_states
+    return logits, new_state
+
+
+def speculate_many(cfg: ModelConfig, draft_params, params, state, token, pos,
+                   done, remaining, key, *, K: int, W: int, max_len: int,
+                   eos_token: int = -1, pctx=None, kvcfg=None, kcfg=None):
+    """Self-speculative fused decode: ``K`` draft/verify windows per dispatch
+    (DESIGN.md §11).  Greedy only — the engine auto-disables speculation when
+    sampling temperature > 0.
+
+    Each window drafts ``W`` tokens with ``draft_params`` (a ``lax.scan`` of
+    cheap :func:`decode_step` calls), then scores the whole window — current
+    token plus the W drafts — with ``params`` in ONE batched
+    :func:`verify_window` dispatch.  On-device greedy acceptance keeps the
+    longest agreeing prefix plus the verifier's next token (the standard
+    bonus/correction), so every window emits between 1 and W+1 tokens per
+    live slot.  KV rollback is positional: the verify pass rewrites the
+    window's rows at verify quality, and rejected rows sit at or beyond the
+    new frontier where the next window's write-then-read overwrites them
+    before any valid query reads them — block tables never move (blocks are
+    pre-reserved for ``max_new``), dense slabs just rewind positions.
+
+    Same carry protocol as :func:`decode_many`; returns ``((tokens
+    (B, K·(W+1)) int32, valid (B, K·(W+1)) bool), carry)`` — the acceptance
+    length per window is recoverable from ``valid``, folding it into the
+    existing one-host-transfer-per-chunk protocol.
+    """
+    B = token.shape[0]
+
+    def window_fn(carry, _):
+        st, tok, p, dn, rem, k = carry
+
+        def draft_step(c, _):
+            st_d, tk, pp = c
+            p_in = jnp.minimum(pp, max_len - 1)
+            logits, st_d = decode_step(cfg, draft_params, st_d, tk, p_in,
+                                       pctx=pctx, kvcfg=kvcfg, kcfg=kcfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (st_d, nxt[:, None], pp + 1), nxt
+
+        (st, _, _), drafts = jax.lax.scan(draft_step, (st, tok, p), None,
+                                          length=W)
+        drafts = drafts.T                                   # (B, W)
+        win = jnp.concatenate([tok, drafts], axis=1)        # (B, W+1)
+        logits, st = verify_window(cfg, params, st, win, p, pctx=pctx,
+                                   kvcfg=kvcfg, kcfg=kcfg)
+        v = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, W+1)
+        # longest agreeing draft prefix; candidate i (0-based) is the
+        # verifier's token for position p+i+1 and is emitted iff i <= a
+        agree = (drafts == v[:, :W]).astype(jnp.int32)
+        a = jnp.cumprod(agree, axis=1).sum(axis=1)          # (B,)
+
+        def emit_step(c, xs):
+            tk, pp, d2, rm = c
+            vi, i = xs
+            use = (~d2) & (i <= a)
+            nxt = jnp.where(use, vi, tk[:, 0])
+            rm = rm - use.astype(jnp.int32)
+            pp = pp + use.astype(jnp.int32)
+            stop = (nxt == eos_token) | (pp >= max_len) | (rm <= 0)
+            d2 = d2 | (use & stop)
+            return (nxt[:, None], pp, d2, rm), (nxt, use)
+
+        (tok, p, dn, rem), (toks_w, valid_w) = jax.lax.scan(
+            emit_step, (tok, p, dn, rem), (v.T, jnp.arange(W + 1)))
+        return (st, tok, p, dn, rem, k), (toks_w, valid_w)
+
+    carry = (state, token, pos, done, remaining, key)
+    carry, (toks, valid) = jax.lax.scan(window_fn, carry, None, length=K)
+    # (K, W+1, B) → (B, K·(W+1)), window-major per slot
+    toks = toks.transpose(2, 0, 1).reshape(B, K * (W + 1))
+    valid = valid.transpose(2, 0, 1).reshape(B, K * (W + 1))
+    return (toks, valid), carry

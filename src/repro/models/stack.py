@@ -272,6 +272,46 @@ def apply_layer_decode(cfg: ModelConfig, kind: str, p, x, state, pos, *,
     return _mlp_apply(cfg, kind, p, x, None, "", pctx, kcfg), st
 
 
+def apply_layer_verify(cfg: ModelConfig, kind: str, p, x, state, pos, *,
+                       pctx=None, kvcfg=None, kcfg=None, block_table=None):
+    """Speculative-verify pass: x (B,S,D) is a drafted window at per-slot
+    positions pos..pos+S-1 (DESIGN.md §11). Returns (x, new_state)."""
+    if kind != "attn":
+        raise ValueError(
+            f"self-speculative decoding supports plain attention layers "
+            f"only, got {kind!r} (windowed/latent/recurrent decode states "
+            f"mutate destructively and cannot roll back rejected drafts — "
+            f"DESIGN.md §11)")
+    h = norm(x, p["ln1"])
+    y, st = L.attn_verify(cfg, p["mix"], h, state, pos, kvcfg=kvcfg,
+                          kcfg=kcfg, block_table=block_table, pctx=pctx)
+    x = x + y
+    return _mlp_apply(cfg, kind, p, x, None, "", pctx, kcfg), st
+
+
+def apply_stack_verify(cfg: ModelConfig, run_params, spec, run_states, x, pos,
+                       *, pctx=None, kvcfg=None, kcfg=None, block_table=None):
+    """:func:`apply_stack_decode` with an S-wide token window per slot —
+    one batched dispatch scores every drafted position (DESIGN.md §11)."""
+    new_states = []
+    for (kinds, n), rp, rs in zip(spec, run_params, run_states):
+        def body(carry, xs):
+            up, st_in = xs
+            h = carry
+            st_out = {}
+            for j, kind in enumerate(kinds):
+                h, st = apply_layer_verify(cfg, kind, up[f"u{j}"], h,
+                                           st_in[f"u{j}"], pos, pctx=pctx,
+                                           kvcfg=kvcfg, kcfg=kcfg,
+                                           block_table=block_table)
+                st_out[f"u{j}"] = st
+            return h, st_out
+
+        x, st_new = jax.lax.scan(body, x, (rp, rs))
+        new_states.append(st_new)
+    return x, new_states
+
+
 # ---------------------------------------------------------------------------
 # stack init / apply (scan over runs)
 # ---------------------------------------------------------------------------

@@ -26,6 +26,14 @@ Two execution strategies share the same per-path resolution:
   kernel does not apply).  A whole-model requantization is a handful of
   async-dispatched programs instead of hundreds of per-leaf ops.
 
+Self-speculative decoding (DESIGN.md §11) instantiates TWO plans over the
+same parameter tree — the verify policy and a uniform low-bit
+``policy.draft_variant()`` — and runs both against one calibration snapshot:
+the families differ only in their (bits, group, rank) key, so requant stays
+~1 program/family/tree and the draft+verify pair emits at most 2× the
+single-tree program count (:class:`~repro.quant.model.QuantizedModel` owns
+the pairing and the per-tree delta-gate snapshots).
+
 ``repro.core`` keeps thin delegating shims so historical imports
 (``repro.core.quantize_params``) continue to work.
 """

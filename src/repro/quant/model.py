@@ -58,7 +58,8 @@ class QuantizedModel:
                  acfg: Optional[AWQConfig] = None, halflife: float = 0.0,
                  session: Optional[CalibrationSession] = None,
                  lowrank: Any = _AUTO, fused: bool = True,
-                 double_buffer: bool = False, pctx=None):
+                 double_buffer: bool = False, pctx=None,
+                 draft_policy: Optional[QuantPolicy] = None):
         self.params = params
         self.policy = policy
         self.acfg = acfg
@@ -80,7 +81,26 @@ class QuantizedModel:
         self._qt_by_path: dict = {}      # path_str → last QuantizedTensor
         self._last_D: dict = {}          # path_str → (lead..., d) f32 snapshot
         self._pending = None             # double buffer: not-yet-ready tree
-        # delta-gate accounting (read by the engine / serve summary)
+        # self-speculative draft tree (DESIGN.md §11): a second quantized
+        # tree from the SAME calibration snapshot.  None → no draft tree;
+        # a disabled draft policy (e.g. NO_QUANT) keeps draft_params on the
+        # fp weights while the verify tree quantizes normally.
+        self.draft_policy = draft_policy
+        self._draft_enabled = (draft_policy is not None
+                               and draft_policy.any_enabled)
+        if self._draft_enabled and not fused:
+            raise ValueError("draft_policy (self-speculative decoding) needs "
+                             "the fused requant plan; construct "
+                             "QuantizedModel(fused=True) (the default)")
+        self.draft_lowrank_tree = lowrank_tree(params, draft_policy) \
+            if self._draft_enabled and draft_policy.rank > 0 else None
+        self.draft_qparams = None
+        self._draft_plan: Optional[FusedRequantPlan] = None
+        self._draft_qt_by_path: dict = {}
+        self._draft_last_D: dict = {}
+        self._draft_pending = None
+        # delta-gate accounting (read by the engine / serve summary;
+        # verify-tree counts — the draft tree gates with its own snapshots)
         self.last_requant_layers = 0
         self.last_skipped_layers = 0
         self.total_requant_layers = 0
@@ -95,8 +115,10 @@ class QuantizedModel:
 
     def _active(self) -> bool:
         from .registry import get_quantizer
-        active = [q for q in map(get_quantizer, self.policy.methods())
-                  if q.enabled]
+        pols = [self.policy] + \
+            ([self.draft_policy] if self._draft_enabled else [])
+        active = [q for pol in pols for q in map(get_quantizer,
+                                                 pol.methods()) if q.enabled]
         if not active:
             return False
         if not self.session.calibrated and all(q.requires_stats
@@ -106,18 +128,33 @@ class QuantizedModel:
 
     @property
     def compiled_programs(self) -> int:
-        """Jit-cache entries of the fused requant plan (0 before the first
-        requant builds it)."""
-        return self._plan.compiled_programs if self._plan is not None else 0
+        """Jit-cache entries of the fused requant plan(s) (0 before the first
+        requant builds them; draft + verify trees sum — the ≤2× budget of
+        DESIGN.md §11)."""
+        n = self._plan.compiled_programs if self._plan is not None else 0
+        if self._draft_plan is not None:
+            n += self._draft_plan.compiled_programs
+        return n
 
-    def _ensure_plan(self, stats) -> FusedRequantPlan:
+    def _ensure_plan(self, stats) -> Optional[FusedRequantPlan]:
+        """Build the fused plan(s) for the current tree structures.
+
+        Returns the *verify* plan, or None when the verify policy is fully
+        disabled (draft-only mode: a quantized draft speculates for the fp
+        model — DESIGN.md §11); the draft plan is built either way.
+        """
         key = (jax.tree_util.tree_structure(self.params),
                jax.tree_util.tree_structure(stats))
-        if self._plan is None or self._plan_key != key:
+        if self._plan_key != key:
             self._plan = FusedRequantPlan(self.params, stats, self.policy,
                                           acfg=self.acfg,
                                           lowrank_tree=self.lowrank_tree,
-                                          pctx=self.pctx)
+                                          pctx=self.pctx) \
+                if self.policy.any_enabled else None
+            if self._draft_enabled:
+                self._draft_plan = FusedRequantPlan(
+                    self.params, stats, self.draft_policy, acfg=self.acfg,
+                    lowrank_tree=self.draft_lowrank_tree, pctx=self.pctx)
             self._plan_key = key
         return self._plan
 
@@ -150,14 +187,47 @@ class QuantizedModel:
             self.n_requants += 1
             return self.qparams
         plan = self._ensure_plan(stats)
+        tree = None
+        if plan is not None:
+            tree, n_requant, n_skip = self._run_plan(
+                plan, self.lowrank_tree, self._qt_by_path, self._last_D,
+                stats, count, threshold)
+            self.last_requant_layers = n_requant
+            self.last_skipped_layers = n_skip
+            self.total_requant_layers += n_requant
+            self.total_skipped_layers += n_skip
+            if self.double_buffer and self.qparams is not None:
+                self._pending = tree     # swap when device-ready (opt-in:
+            else:                        # token timing becomes device-bound)
+                self.qparams = tree
+        if self._draft_plan is not None:
+            # draft tree: same stats snapshot, same delta-gate semantics,
+            # its own D snapshots (the gates may fire on different steps)
+            dtree, _, _ = self._run_plan(
+                self._draft_plan, self.draft_lowrank_tree,
+                self._draft_qt_by_path, self._draft_last_D,
+                stats, count, threshold)
+            if self.double_buffer and self.draft_qparams is not None:
+                self._draft_pending = dtree
+            else:
+                self.draft_qparams = dtree
+            if tree is None:
+                tree = dtree             # draft-only mode: report the draft
+        self.n_requants += 1             # tree so cadence accounting (the
+        return tree                      # engine's note_requant) still fires
+
+    def _run_plan(self, plan, lowrank, qt_by_path, last_D, stats, count,
+                  threshold):
+        """Run one tree's fused plan (gate → family programs → snapshot
+        refresh).  Returns (tree, n_requant, n_skip)."""
         only = None
         n_requant, n_skip = plan.n_layers, 0
-        if threshold is not None and self._qt_by_path:
-            drifts = plan.drift(stats, count, self._last_D)
+        if threshold is not None and qt_by_path:
+            drifts = plan.drift(stats, count, last_D)
             only, n_requant, n_skip = plan.gate(drifts, threshold,
-                                                set(self._qt_by_path))
-        tree = plan.run(self.params, stats, count, self.lowrank_tree,
-                        only=only, reuse=self._qt_by_path)
+                                                set(qt_by_path))
+        tree = plan.run(self.params, stats, count, lowrank,
+                        only=only, reuse=qt_by_path)
         # refresh the per-path snapshot for everything that was requantized
         from repro.core.ttq import QuantizedTensor
 
@@ -165,30 +235,25 @@ class QuantizedModel:
             if isinstance(leaf, QuantizedTensor):
                 from .api import _path_str
                 ps = _path_str(path)
-                if self._qt_by_path.get(ps) is not leaf:
-                    self._last_D[ps] = 1.0 / leaf.dinv
-                self._qt_by_path[ps] = leaf
+                if qt_by_path.get(ps) is not leaf:
+                    last_D[ps] = 1.0 / leaf.dinv
+                qt_by_path[ps] = leaf
 
         jax.tree_util.tree_map_with_path(
             lambda p, l: note(p, l),
             tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
-        self.last_requant_layers = n_requant
-        self.last_skipped_layers = n_skip
-        self.total_requant_layers += n_requant
-        self.total_skipped_layers += n_skip
-        if self.double_buffer and self.qparams is not None:
-            self._pending = tree         # swap when device-ready (opt-in:
-        else:                            # token timing becomes device-bound)
-            self.qparams = tree
-        self.n_requants += 1
-        return tree
+        return tree, n_requant, n_skip
 
     def _swap_if_ready(self):
-        if self._pending is None:
-            return
-        leaves = jax.tree.leaves(self._pending)
-        if all(l.is_ready() for l in leaves if hasattr(l, "is_ready")):
-            self.qparams, self._pending = self._pending, None
+        if self._pending is not None:
+            leaves = jax.tree.leaves(self._pending)
+            if all(l.is_ready() for l in leaves if hasattr(l, "is_ready")):
+                self.qparams, self._pending = self._pending, None
+        if self._draft_pending is not None:
+            leaves = jax.tree.leaves(self._draft_pending)
+            if all(l.is_ready() for l in leaves if hasattr(l, "is_ready")):
+                self.draft_qparams, self._draft_pending = \
+                    self._draft_pending, None
 
     @property
     def decode_params(self):
@@ -198,6 +263,15 @@ class QuantizedModel:
         self._swap_if_ready()
         return self.qparams if self.qparams is not None else self.params
 
+    @property
+    def draft_params(self):
+        """Latest device-ready DRAFT tree (DESIGN.md §11); the fp parameters
+        before the first requantization or when the draft policy is disabled
+        (a fp draft is a valid — maximally accurate — speculator)."""
+        self._swap_if_ready()
+        return self.draft_qparams if self.draft_qparams is not None \
+            else self.params
+
     # ------------------------------------------------------------ fork / join
 
     def fork(self) -> "QuantizedModel":
@@ -206,7 +280,7 @@ class QuantizedModel:
                               session=self.session.fork(),
                               lowrank=self.lowrank_tree, fused=self.fused,
                               double_buffer=self.double_buffer,
-                              pctx=self.pctx)
+                              pctx=self.pctx, draft_policy=self.draft_policy)
 
     def adopt(self, session: CalibrationSession) -> "QuantizedModel":
         """Join a forked stream's statistics into this model's session."""

@@ -94,15 +94,46 @@ class EngineConfig:
                                     # no preemption ever needed); smaller
                                     # budgets oversubscribe and preempt
     prefix_cache: bool = True       # share quantized prompt-prefix blocks
+    # ---- self-speculative decoding (DESIGN.md §11) ----
+    speculate_k: int = 0            # W: drafted tokens per verify window
+                                    # (0 = off).  Greedy only — auto-off
+                                    # when temperature > 0 (rejection-
+                                    # sampling acceptance is future work).
+                                    # decode_chunk then counts WINDOWS per
+                                    # dispatch (auto shrinks it so tokens/
+                                    # dispatch stays comparable).
 
 
 class TTQEngine:
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
-                 ecfg: EngineConfig = EngineConfig(), pctx=None, key=None):
+                 ecfg: EngineConfig = EngineConfig(), pctx=None, key=None,
+                 draft_policy: Optional[QuantPolicy] = None):
+        if ecfg.speculate_k > 0 and ecfg.temperature > 0.0:
+            # greedy acceptance would bias sampled streams — auto-off until
+            # rejection-sampling acceptance lands (DESIGN.md §11)
+            ecfg = dataclasses.replace(ecfg, speculate_k=0)
+        if ecfg.speculate_k > 0:
+            from repro.models.stack import stack_spec
+            kinds = {k for ks, _ in stack_spec(cfg) for k in ks}
+            if kinds != {"attn"}:
+                raise ValueError(
+                    f"speculate_k needs a plain-attention family, got "
+                    f"{sorted(kinds)} (windowed/latent/recurrent decode "
+                    f"states cannot roll back rejected drafts — "
+                    f"DESIGN.md §11)")
         if ecfg.decode_chunk <= 0:
             ecfg = dataclasses.replace(
-                ecfg, decode_chunk=pick_decode_chunk(ecfg.max_slots))
+                ecfg, decode_chunk=pick_decode_chunk(ecfg.max_slots,
+                                                     ecfg.speculate_k))
         self.cfg, self.params, self.policy, self.ecfg = cfg, params, policy, ecfg
+        # self-speculative draft tree: the default draft is the policy's
+        # uniform low-bit variant; with a NO_QUANT verify policy pass an
+        # enabled draft_policy for draft-only quantization (the quantized
+        # model speculates for its fp self — see EXPERIMENTS.md)
+        self.draft_policy = None
+        if ecfg.speculate_k > 0:
+            self.draft_policy = (draft_policy if draft_policy is not None
+                                 else policy.draft_variant())
         self.pctx = pctx
         # KV-cache memory layout: policy-driven, EngineConfig.kv_dtype wins
         # when set.  Static across the engine's lifetime — every slot cache,
@@ -149,7 +180,8 @@ class TTQEngine:
         self.qmodel = QuantizedModel(params, policy,
                                      halflife=ecfg.stats_halflife,
                                      double_buffer=ecfg.double_buffer,
-                                     pctx=pctx)
+                                     pctx=pctx,
+                                     draft_policy=self.draft_policy)
         self.scheduler = Scheduler(
             ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"),
             kvcfg=self.kvcfg, num_blocks=self.num_blocks)
@@ -169,6 +201,24 @@ class TTQEngine:
     @property
     def decode_params(self):
         return self.qmodel.decode_params
+
+    @property
+    def draft_params(self):
+        """The speculation draft tree (None when speculation is off)."""
+        if self.ecfg.speculate_k <= 0:
+            return None
+        return self.qmodel.draft_params
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Accepted drafts / drafted tokens across all speculation windows
+        (EXPERIMENTS.md §"Self-speculative methodology")."""
+        r = self.runner
+        return r.spec_accepted / r.spec_drafted if r.spec_drafted else 0.0
+
+    @property
+    def spec_windows(self) -> int:
+        return self.runner.spec_windows
 
     @property
     def qparams(self):
@@ -330,7 +380,8 @@ class TTQEngine:
         self.admit()
         if not self.scheduler.active_slots():
             return False
-        toks, valid, done = self.runner.decode_block(self.decode_params)
+        toks, valid, done = self.runner.decode_block(self.decode_params,
+                                                     self.draft_params)
         self.scheduler.record_block(toks, valid, done)
         self._flush_releases()       # freed blocks must not be written again
         if self.scheduler.should_requant():

@@ -134,6 +134,19 @@ class DeviceRunner:
             lm.decode_many, cfg, pctx=pctx, kvcfg=kvcfg, kcfg=kncfg,
             K=K, max_len=ML,
             temperature=ecfg.temperature, eos_token=ecfg.eos_token), **out_kw)
+        # self-speculative decode (DESIGN.md §11): K draft/verify windows of
+        # W drafted tokens per dispatch; one program alongside decode_many —
+        # the engine picks per block by passing (or not) a draft tree
+        self._spec_jit = None
+        W = getattr(ecfg, "speculate_k", 0)
+        if W > 0:
+            self._spec_jit = jax.jit(partial(
+                lm.speculate_many, cfg, pctx=pctx, kvcfg=kvcfg, kcfg=kncfg,
+                K=K, W=W, max_len=ML, eos_token=ecfg.eos_token), **out_kw)
+        # acceptance telemetry (host math over the per-chunk token block)
+        self.spec_windows = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
         self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
                                             collect_stats=True,
                                             full_logits=True, kvcfg=kvcfg),
@@ -173,9 +186,12 @@ class DeviceRunner:
         module-level prefix gather.  The engine's ``compiled_programs``
         facade adds the requant plan; benchmarks gate on the steady-state
         delta being zero."""
-        return (self._decode_jit._cache_size()
-                + self._prefill_jit._cache_size()
-                + _gather_prefix._cache_size())
+        n = (self._decode_jit._cache_size()
+             + self._prefill_jit._cache_size()
+             + _gather_prefix._cache_size())
+        if self._spec_jit is not None:
+            n += self._spec_jit._cache_size()
+        return n
 
     # -------------------------------------------------------------- admission
 
@@ -329,18 +345,40 @@ class DeviceRunner:
 
     # ----------------------------------------------------------------- decode
 
-    def decode_block(self, params):
-        """Run ``decode_chunk`` fused decode steps over every slot.
+    def decode_block(self, params, draft_params=None):
+        """Run one fused decode dispatch over every slot.
 
-        Returns host copies ``(tokens (B, K), valid (B, K), done (B,))`` —
-        one blocking transfer for the whole block."""
-        (toks, valid), carry = self._decode_jit(
-            params, self.state, self.cur_tok, self.pos, self.done,
-            self.remaining, self.key)
+        Default: ``decode_chunk`` scanned decode steps (``lm.decode_many``).
+        With ``draft_params`` (and ``EngineConfig.speculate_k`` > 0): the
+        self-speculative program instead — ``decode_chunk`` draft/verify
+        windows of ``speculate_k`` drafted tokens each (DESIGN.md §11), so
+        the block widens to ``K·(speculate_k+1)`` candidate columns with the
+        per-window acceptance length folded into ``valid``.
+
+        Returns host copies ``(tokens (B, cols), valid (B, cols),
+        done (B,))`` — one blocking transfer for the whole block either way.
+        """
+        if draft_params is not None and self._spec_jit is not None:
+            (toks, valid), carry = self._spec_jit(
+                draft_params, params, self.state, self.cur_tok, self.pos,
+                self.done, self.remaining, self.key)
+        else:
+            (toks, valid), carry = self._decode_jit(
+                params, self.state, self.cur_tok, self.pos, self.done,
+                self.remaining, self.key)
         (self.state, self.cur_tok, self.pos, self.done, self.remaining,
          self.key) = carry
         self.host_syncs += 1
-        return jax.device_get((toks, valid, self.done))
+        out = jax.device_get((toks, valid, self.done))
+        if draft_params is not None and self._spec_jit is not None:
+            W = self.ecfg.speculate_k
+            v = np.asarray(out[1]).reshape(out[1].shape[0], -1, W + 1)
+            live = v[:, :, 0]                     # a live window always emits
+            emitted = v.sum(axis=2)
+            self.spec_windows += int(live.sum())
+            self.spec_drafted += int(live.sum()) * W
+            self.spec_accepted += int(np.maximum(emitted - 1, 0).sum())
+        return out
 
 
 @partial(jax.jit, static_argnames=("kvcfg",))

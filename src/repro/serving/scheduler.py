@@ -27,15 +27,26 @@ from collections import deque
 from typing import Any, Dict, List, Optional
 
 
-def pick_decode_chunk(slots: int) -> int:
+def pick_decode_chunk(slots: int, speculate_k: int = 0) -> int:
     """Default fused-decode chunk per slot count (EXPERIMENTS.md §Perf
     iteration 7).  At 1 slot fused decode at K=8 measured *slower* than
     per-token on short generation budgets (fixed-K steps are wasted past
     EOS/budget — the PR-3 snapshot: 165 vs 724 tok/s at max_new=16), and
     there is no batching to amortize, so stay per-token; from 2 slots up
     the dispatch amortization dominates for every measured budget and K=8
-    sits past the crossover (`bench_engine.py` sweeps K and reports it)."""
-    return 1 if slots <= 1 else 8
+    sits past the crossover (`bench_engine.py` sweeps K and reports it).
+
+    With self-speculative decoding (DESIGN.md §11) the chunk counts
+    *windows*, and each window emits up to ``speculate_k + 1`` tokens per
+    lane — the effective tokens/dispatch is ``chunk × (W+1) × acceptance``.
+    To keep the wasted-work exposure past EOS/budget comparable to the
+    non-speculative tuning above, divide the chunk by the per-window token
+    ceiling (floor 1); the 1-slot case stays per-window for the same
+    crossover reason it stays per-token without speculation."""
+    base = 1 if slots <= 1 else 8
+    if speculate_k <= 0:
+        return base
+    return max(1, base // (speculate_k + 1))
 
 
 @dataclasses.dataclass

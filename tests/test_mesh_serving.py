@@ -71,6 +71,31 @@ print('SMOKE_OK')
     assert "SMOKE_OK" in out
 
 
+def test_mesh_speculative_equality(mesh_subproc):
+    """Sharded self-speculative decoding (DESIGN.md §11): speculate_k on a
+    (1, 2) mesh emits the same greedy tokens as the single-device
+    non-speculative engine — draft scan, batched verify and the dual
+    requant trees all run shard-local."""
+    out = mesh_subproc(_SETUP + """
+def run_spec(pctx, W):
+    eng = TTQEngine(cfg, params, ttq_policy(bits=8, group_size=16),
+                    EngineConfig(max_slots=4, max_len=64, kv_dtype='bf16',
+                                 speculate_k=W),
+                    pctx=pctx, key=jax.random.PRNGKey(7))
+    rids = [eng.submit(p, max_new=b) for p, b in zip(PROMPTS, BUDGETS)]
+    eng.run_all()
+    assert eng.qmodel.compiled_programs > 0
+    return [list(eng.scheduler.results()[r]) for r in rids]
+
+base = run_spec(None, 0)
+for n in (2,):
+    got = run_spec(make_ctx(make_mesh(1, n)), 2)
+    assert got == base, (n, got, base)
+print('SPEC_MESH_OK')
+""", timeout=900)
+    assert "SPEC_MESH_OK" in out
+
+
 def test_requant_bit_equality_on_mesh(mesh_subproc):
     """Shard-local FusedRequantPlan == single-device quantize_params, bitwise.
 

@@ -1,0 +1,234 @@
+"""Self-speculative decoding (DESIGN.md §11): draft/verify greedy
+equivalence, the dual-tree requant budget, the speculation-aware chunk
+heuristic, and scheduler interactions (cancel / preemption mid-window —
+rolled-back tokens must never leak into GenResult or the prefix trie)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (KVCacheConfig, NO_QUANT, QuantizedTensor, ttq_policy)
+from repro.models import ModelConfig, lm
+from repro.quant.model import QuantizedModel
+from repro.serving import EngineConfig, TTQEngine, pick_decode_chunk
+
+CFG = ModelConfig(name="spec-t", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=96, vocab=128)
+
+PROMPTS = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12, 6, 3], [7, 7, 7, 2]]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(params, policy=NO_QUANT, speculate_k=0, slots=3, **kw):
+    return TTQEngine(CFG, params, policy,
+                     EngineConfig(max_slots=slots, max_len=64,
+                                  speculate_k=speculate_k, **kw))
+
+
+def _run(eng, prompts=PROMPTS, max_new=8):
+    rids = [eng.submit(p, max_new=max_new) for p in prompts]
+    outs = eng.run_all()
+    return [outs[r] for r in rids]
+
+
+# ------------------------------------------------------- greedy equivalence
+
+@pytest.mark.parametrize("W", [2, 4])
+def test_spec_matches_nonspec_dense_fp(params, W):
+    """Greedy outputs token-identical at every W — the verify tree decides
+    every emitted token; the draft only proposes (CI fast tier)."""
+    base = _run(_engine(params))
+    eng = _engine(params, speculate_k=W)
+    assert _run(eng) == base
+    assert eng.spec_windows > 0
+    assert 0.0 <= eng.spec_acceptance_rate <= 1.0
+
+
+def test_spec_matches_nonspec_quantized(params):
+    """int8 verify tree + default int4 draft companion: identical tokens."""
+    pol = ttq_policy(bits=8, group_size=32, rank=0)
+    base = _run(_engine(params, pol))
+    assert _run(_engine(params, pol, speculate_k=3)) == base
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "bf16"])
+def test_spec_matches_nonspec_paged(params, kv_dtype):
+    """Paged pool: per-slot block-table row writes + rewind-by-overwrite
+    keep speculative greedy outputs identical to the dense non-speculative
+    engine."""
+    pol = NO_QUANT.with_(kvcache=KVCacheConfig(dtype=kv_dtype, paged=True))
+    base = _run(_engine(params))
+    assert _run(_engine(params, pol, speculate_k=2, slots=2)) == base
+
+
+def test_spec_uneven_lengths_and_eos(params):
+    """Budgets that end mid-window: emitted counts stay exact per lane."""
+    base_eng = _engine(params)
+    rids = [base_eng.submit(p, max_new=n)
+            for p, n in zip(PROMPTS, (1, 5, 9, 3))]
+    base = [base_eng.run_all()[r] for r in rids]
+    eng = _engine(params, speculate_k=3)
+    rids = [eng.submit(p, max_new=n) for p, n in zip(PROMPTS, (1, 5, 9, 3))]
+    outs = [eng.run_all()[r] for r in rids]
+    assert outs == base
+    assert [len(o) for o in outs] == [1, 5, 9, 3]
+
+
+# ------------------------------------------------------------ engine gates
+
+def test_spec_auto_off_when_sampling(params):
+    eng = _engine(params, speculate_k=4, temperature=0.7)
+    assert eng.ecfg.speculate_k == 0
+
+
+def test_spec_rejects_non_attention_families():
+    from repro.configs import get
+    cfg = get("mamba2_1p3b", smoke=True)
+    p = lm.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention"):
+        TTQEngine(cfg, p, NO_QUANT,
+                  EngineConfig(max_slots=1, max_len=64, speculate_k=2))
+
+
+def test_pick_decode_chunk_speculation_aware():
+    """Satellite pin: the chunk counts windows when speculating — effective
+    tokens/dispatch is chunk × (W+1) × acceptance — and 1 slot stays
+    per-window (the PR-3 per-token crossover, unchanged by speculation)."""
+    assert pick_decode_chunk(1) == 1
+    assert pick_decode_chunk(4) == 8
+    assert pick_decode_chunk(1, 4) == 1          # 1-slot case pinned
+    assert pick_decode_chunk(4, 1) == 4
+    assert pick_decode_chunk(4, 3) == 2
+    assert pick_decode_chunk(4, 7) == 1          # floor at 1 window
+    assert pick_decode_chunk(8, 0) == pick_decode_chunk(8)
+
+
+# ------------------------------------------------------ dual-tree requant
+
+def test_draft_tree_program_budget(params):
+    """Draft + verify plans together compile ≤ 2× the single-tree plan."""
+    pol = ttq_policy(bits=8, group_size=32, rank=0)
+    single = _engine(params, pol)
+    _run(single, prompts=PROMPTS[:1], max_new=2)
+    spec = _engine(params, pol, speculate_k=2)
+    _run(spec, prompts=PROMPTS[:1], max_new=2)
+    assert single.qmodel.compiled_programs > 0
+    assert spec.qmodel.compiled_programs <= 2 * single.qmodel.compiled_programs
+    # the draft tree really is a second quantized tree, not an alias
+    dq = [l for l in jax.tree.leaves(
+        spec.qmodel.draft_params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor)]
+    assert dq, "draft tree has no quantized leaves"
+
+
+def test_draft_params_fp_fallback(params):
+    """A disabled draft policy (NO_QUANT) keeps draft_params on the fp
+    weights while the verify tree quantizes — the maximally accurate
+    speculator."""
+    qm = QuantizedModel(params, ttq_policy(bits=8, group_size=32),
+                        draft_policy=NO_QUANT)
+    assert qm.draft_params is params
+    toks = np.array([PROMPTS[0]])
+    _, _, stats = lm.prefill(CFG, params, {"tokens": toks}, max_len=16)
+    qm.calibrate(stats, float(toks.size))
+    qm.requantize()
+    assert qm.decode_params is not params
+    assert qm.draft_params is params
+
+
+def test_draft_only_quantization(params):
+    """Disabled verify policy + enabled draft (the CPU-favourable config:
+    a quantized draft speculates for the full-precision model).  The verify
+    tree must stay on the fp weights, the draft tree must quantize, and
+    greedy engine outputs must match the non-speculative fp run."""
+    qm = QuantizedModel(params, NO_QUANT,
+                        draft_policy=ttq_policy(bits=8, group_size=32,
+                                                rank=0))
+    toks = np.array([PROMPTS[0]])
+    _, _, stats = lm.prefill(CFG, params, {"tokens": toks}, max_len=16)
+    qm.calibrate(stats, float(toks.size))
+    tree = qm.requantize()
+    assert tree is not None          # cadence accounting still fires
+    assert qm.qparams is None and qm.decode_params is params
+    d_leaves = jax.tree_util.tree_leaves(
+        qm.draft_qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    assert any(isinstance(l, QuantizedTensor) for l in d_leaves)
+    assert qm.compiled_programs > 0
+    # end-to-end: greedy tokens identical to the plain fp engine
+    base = _run(_engine(params, NO_QUANT))
+    spec = _run(_engine(params, NO_QUANT, speculate_k=3))
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=3, max_len=64, speculate_k=3),
+                    draft_policy=ttq_policy(bits=8, group_size=32, rank=0))
+    rids = [eng.submit(p, max_new=8) for p in PROMPTS]
+    outs = eng.run_all()
+    got = [outs[r] for r in rids]
+    assert got == base == spec
+    assert eng.qmodel.qparams is None
+
+
+def test_draft_policy_requires_fused_plan(params):
+    with pytest.raises(ValueError, match="fused"):
+        QuantizedModel(params, ttq_policy(bits=8, group_size=32),
+                       fused=False,
+                       draft_policy=ttq_policy(bits=4, group_size=32))
+
+
+def test_draft_variant_policy():
+    pol = ttq_policy(bits=8, group_size=32, rank=8)
+    d = pol.draft_variant()
+    assert d.qcfg.bits == 4 and d.rank == 0 and not d.overrides
+    assert d.qcfg.group_size == pol.qcfg.group_size
+    assert NO_QUANT.draft_variant() is NO_QUANT
+
+
+# ---------------------------------------- scheduler: cancel / preemption
+
+def test_cancel_mid_speculation_window(params):
+    """cancel(rid) between speculative chunks: the cancelled lane's
+    rolled-back tokens never reach GenResult; survivors are unaffected."""
+    base = _run(_engine(params), prompts=[PROMPTS[1]], max_new=20)
+    eng = _engine(params, speculate_k=3, slots=2)
+    r1 = eng.submit(PROMPTS[0], max_new=20)
+    r2 = eng.submit(PROMPTS[1], max_new=20)
+    eng.step()                                  # admission + first chunk
+    assert eng.cancel(r1)
+    outs = eng.run_all()
+    assert outs[r1].cancelled and outs[r1].unfinished
+    assert len(outs[r1]) < 20
+    assert list(outs[r2]) == list(base[0])
+
+
+def test_preemption_mid_speculation_window(params):
+    """An oversubscribed paged pool preempts lanes between speculative
+    chunks; requeued requests replay their tokens and finish with outputs
+    identical to the unconstrained non-speculative engine, and every block
+    (incl. prefix-trie nodes touched by speculative writes) is freed."""
+    base = _run(_engine(params))
+    pol = NO_QUANT.with_(kvcache=KVCacheConfig(dtype="int8", paged=True))
+    eng = _engine(params, pol, speculate_k=2, slots=2,
+                  kv_block_size=4, kv_pool_blocks=7)
+    out = _run(eng)
+    assert out == base
+    assert eng.preemptions > 0
+    eng.allocator.assert_quiescent()
+
+
+def test_spec_prefix_cache_not_polluted(params):
+    """Speculative (draft-quality, later overwritten) rows must not be
+    shared via the prefix trie: a follow-up request hitting the cached
+    prefix still decodes exactly like the cold engine."""
+    sysp = list(range(1, 21))
+    ps = [sysp + [40, 41], sysp + [50, 51, 52]]
+    pol = NO_QUANT.with_(kvcache=KVCacheConfig(dtype="bf16", paged=True))
+    cold = _run(_engine(params, pol, prefix_cache=False, slots=2),
+                prompts=ps, max_new=6)
+    eng = _engine(params, pol, speculate_k=2, slots=2)
+    warm = _run(eng, prompts=ps, max_new=6)
+    assert warm == cold
+    assert eng.prefix_hit_rate > 0
+    eng.allocator.assert_quiescent()
