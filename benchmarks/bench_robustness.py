@@ -1,0 +1,290 @@
+"""Fault-injection robustness bench — the recovery-equality gates.
+
+Every scenario drives the guarded TTQEngine through a seeded, deterministic
+fault (``serving/faults.py``) and holds it to the ISSUE-9 acceptance bar:
+
+  * **recovery equality** — requests the fault does not touch produce
+    greedy tokens **bitwise identical** to a fault-free (or clean-twin)
+    run.  For calibration poisoning the twin is a ``drop`` injector that
+    skips the same update the guard quarantines — both runs fold the same
+    statistics, so any token difference means poison leaked through;
+  * **detection reconciliation** — the engine's guard counters
+    (``calib_rejections`` / ``requant_rejections`` / ``lane_faults`` /
+    ``deadline_expirations``) equal the number of faults the injector
+    logged as fired.  A rejected calibration update must never reach a
+    weight swap;
+  * **zero steady-wave recompiles** — after a fault wave warms every
+    program (including any degradation-ladder program), a clean wave on
+    the same engine compiles nothing new.
+
+Scenarios: NaN / outlier calibration stats (poisoned-prompt stand-ins),
+requant-tree corruption (health gate + in-step retry), KV-pool exhaustion
+(stolen blocks → bounded admission retries), a poisoned decode lane
+(isolation with and without retry budget), and a virtual-clock deadline
+expiry.  Pool/decode scenarios run NO_QUANT so lanes are batch-independent
+and equality is exact by construction; calibration scenarios run the real
+TTQ pipeline because the *weights* are the attack surface.
+
+Run:  PYTHONPATH=src python benchmarks/bench_robustness.py [--fast]
+Emits results/BENCH_robustness.json (picked up by benchmarks/report.py);
+methodology in EXPERIMENTS.md §"Recovery-equality methodology".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import NO_QUANT, ttq_policy
+from repro.models import ModelConfig, lm
+from repro.quant import GuardConfig
+from repro.serving import (EngineConfig, Fault, FaultInjector, TTQEngine,
+                           VirtualClock)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+CFG = ModelConfig(name="bench-robust", family="dense", n_layers=2,
+                  d_model=64, n_heads=2, n_kv_heads=1, d_ff=128, vocab=128)
+MAX_LEN = 128
+TTQ = ttq_policy(bits=8, group_size=32, rank=0)
+PARAMS = None            # initialized once in main()
+
+
+def prompts_for(n: int):
+    rng = np.random.default_rng(0)
+    return [list(rng.integers(1, CFG.vocab, size=int(rng.integers(4, 12))))
+            for _ in range(n)]
+
+
+def make_engine(policy, faults=(), clock=None, **kw):
+    inj = FaultInjector(faults, clock=clock)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("decode_chunk", 2)
+    return TTQEngine(CFG, PARAMS, policy, EngineConfig(**kw), faults=inj), inj
+
+
+def run_wave(eng, prompts, max_new, deadlines=None):
+    """Submit every prompt, drive to completion; returns outputs keyed by
+    prompt index (GenResult: token list + unfinished/error flags)."""
+    dls = deadlines or {}
+    rids = [eng.submit(p, max_new=max_new, deadline_s=dls.get(i))
+            for i, p in enumerate(prompts)]
+    outs = eng.run_all()
+    return {i: outs[r] for i, r in enumerate(rids)}
+
+
+def equal_tokens(a, b, skip=()):
+    return all(list(a[i]) == list(b[i]) for i in a if i not in skip)
+
+
+def steady_recompiles(eng, prompts, max_new) -> int:
+    """One clean wave on an already-warm engine; programs compiled by it."""
+    warm = eng.compiled_programs
+    run_wave(eng, prompts, max_new)
+    return eng.compiled_programs - warm
+
+
+# ---------------------------------------------------------------- scenarios
+
+
+def scenario_calib_poison(kind: str, max_new: int):
+    """Poisoned calibration statistics (``nan``/``inf``/``outlier``) vs the
+    clean-twin ``drop`` injector that skips the same update.  The guard
+    must quarantine exactly the injected update and the quantized weights
+    — hence every token — must match the twin bitwise."""
+    prompts = prompts_for(6)
+    fault = [Fault("calib.stats", at=1, kind=kind)]
+    twin = [Fault("calib.stats", at=1, kind="drop")]
+    eng_f, inj_f = make_engine(TTQ, fault)
+    eng_t, inj_t = make_engine(TTQ, twin)
+    out_f = run_wave(eng_f, prompts, max_new)
+    out_t = run_wave(eng_t, prompts, max_new)
+    fired = sum(1 for s, _, _ in inj_f.fired if s == "calib.stats")
+    row = {
+        "scenario": f"calib-{kind}", "injected": fired,
+        "calib_rejections": eng_f.calib_rejections,
+        "quarantined": len(eng_f.quarantine),
+        "requant_rejections": eng_f.requant_rejections,
+        "tokens_equal": equal_tokens(out_f, out_t),
+        "steady_new_programs": steady_recompiles(eng_f, prompts, max_new),
+        "harness_errors": inj_f.errors + inj_t.errors,
+    }
+    ok = (row["tokens_equal"] and fired == 1
+          and row["calib_rejections"] == fired
+          and row["quarantined"] == fired
+          and row["requant_rejections"] == 0
+          and row["steady_new_programs"] == 0
+          and not row["harness_errors"])
+    return row, ok
+
+
+def scenario_requant_corruption(max_new: int):
+    """A corrupted candidate quantized tree (NaN scales) at the first
+    requant dispatch.  The health gate must reject it, the in-step retry
+    must rebuild a clean tree, and tokens must match a fault-free run."""
+    prompts = prompts_for(4)
+    eng_f, inj_f = make_engine(TTQ, [Fault("requant.tree", at=0,
+                                           kind="nan-scale")])
+    eng_b, _ = make_engine(TTQ)
+    out_f = run_wave(eng_f, prompts, max_new)
+    out_b = run_wave(eng_b, prompts, max_new)
+    fired = sum(1 for s, _, _ in inj_f.fired if s == "requant.tree")
+    row = {
+        "scenario": "requant-corruption", "injected": fired,
+        "requant_rejections": eng_f.requant_rejections,
+        "n_requants": eng_f.n_requants,
+        "tokens_equal": equal_tokens(out_f, out_b),
+        "harness_errors": inj_f.errors,
+    }
+    ok = (row["tokens_equal"] and fired == 1
+          and row["requant_rejections"] == fired
+          and eng_f.n_requants == eng_b.n_requants
+          and not row["harness_errors"])
+    return row, ok
+
+
+def scenario_pool_exhaustion(max_new: int):
+    """Steal most free KV-pool blocks for a few engine steps: admissions
+    hit MemoryError, the bounded retry loop (preempt → backoff → starve
+    wait) rides it out, and once the blocks return every request finishes
+    with tokens bitwise equal to the fault-free run (NO_QUANT — weights
+    cannot drift, and preemption resume is token-exact)."""
+    prompts = prompts_for(4)
+    kw = dict(kv_dtype="int8", kv_paged=True, kv_block_size=16)
+    # window sized to straddle the first lane turnover (~max_new/chunk
+    # steps in), so mid-run admissions really do meet an exhausted pool
+    eng_f, inj_f = make_engine(NO_QUANT, [Fault("pool.steal", at=1,
+                                                magnitude=64,
+                                                count=max_new // 2 + 4)],
+                               **kw)
+    eng_b, _ = make_engine(NO_QUANT, **kw)
+    out_f = run_wave(eng_f, prompts, max_new)
+    out_b = run_wave(eng_b, prompts, max_new)
+    eng_f.allocator.assert_quiescent()
+    row = {
+        "scenario": "pool-exhaustion",
+        "injected": sum(1 for s, _, _ in inj_f.fired if s == "pool.steal"),
+        "preemptions": eng_f.preemptions,
+        "admission_failures": eng_f.admission_failures,
+        "all_finished": all(not out_f[i].unfinished for i in out_f),
+        "tokens_equal": equal_tokens(out_f, out_b),
+        "steady_new_programs": steady_recompiles(eng_f, prompts, max_new),
+        "harness_errors": inj_f.errors,
+    }
+    ok = (row["tokens_equal"] and row["all_finished"]
+          and row["admission_failures"] == 0
+          and row["steady_new_programs"] == 0
+          and not row["harness_errors"])
+    return row, ok
+
+
+def scenario_poison_lane(retries: int, max_new: int):
+    """Non-finite logits on one lane.  With a retry budget the request
+    replays from its original prompt and every output matches the
+    fault-free run; with retries=0 it fails alone (``error`` set) while
+    the other lanes stay bitwise identical."""
+    prompts = prompts_for(3)
+    gcfg = GuardConfig(max_retries=retries)
+    eng_f, inj_f = make_engine(NO_QUANT, [Fault("decode.logits", at=0,
+                                                rid=1, count=1)],
+                               guard_cfg=gcfg)
+    eng_b, _ = make_engine(NO_QUANT, guard_cfg=gcfg)
+    out_f = run_wave(eng_f, prompts, max_new)
+    out_b = run_wave(eng_b, prompts, max_new)
+    fired = sum(1 for s, _, _ in inj_f.fired if s == "decode.logits")
+    failed = [i for i in out_f if out_f[i].error]
+    row = {
+        "scenario": f"poison-lane-retries{retries}", "injected": fired,
+        "lane_faults": eng_f.lane_faults, "failed": failed,
+        "errors": {i: out_f[i].error for i in failed},
+        "tokens_equal_unaffected": equal_tokens(out_f, out_b, skip=(1,)),
+        "victim_recovered": list(out_f[1]) == list(out_b[1]),
+        "harness_errors": inj_f.errors,
+    }
+    ok = (fired == 1 and row["lane_faults"] == fired
+          and row["tokens_equal_unaffected"]
+          and not row["harness_errors"])
+    if retries > 0:
+        ok = ok and row["victim_recovered"] and not failed
+    else:
+        ok = ok and failed == [1] \
+            and row["errors"][1] == "non-finite logits"
+    return row, ok
+
+
+def scenario_deadline(max_new: int):
+    """Virtual-clock deadline expiry: a skew fault jumps the clock past
+    one request's budget mid-generation.  That request fails with
+    ``error == "deadline"`` (partial output kept); the undeadlined lane
+    matches the no-skew baseline bitwise."""
+    prompts = prompts_for(2)
+    deadlines = {1: 0.5}
+    skew = [Fault("clock.skew", at=3, magnitude=1.0)]
+    eng_f, inj_f = make_engine(NO_QUANT, skew, clock=VirtualClock())
+    eng_b, _ = make_engine(NO_QUANT, clock=VirtualClock())
+    out_f = run_wave(eng_f, prompts, max_new, deadlines=deadlines)
+    out_b = run_wave(eng_b, prompts, max_new, deadlines=deadlines)
+    row = {
+        "scenario": "deadline-skew",
+        "injected": sum(1 for s, _, _ in inj_f.fired if s == "clock.skew"),
+        "deadline_expirations": eng_f.deadline_expirations,
+        "expired_error": out_f[1].error,
+        "partial_kept": len(out_f[1]) > 0,
+        "tokens_equal_unaffected": equal_tokens(out_f, out_b, skip=(1,)),
+        "harness_errors": inj_f.errors,
+    }
+    ok = (row["deadline_expirations"] == 1
+          and row["expired_error"] == "deadline"
+          and row["tokens_equal_unaffected"]
+          and eng_b.deadline_expirations == 0
+          and not row["harness_errors"])
+    return row, ok
+
+
+def main(fast: bool = False):
+    global PARAMS
+    PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+    max_new = 12 if fast else 24
+    scenarios = [
+        lambda: scenario_calib_poison("nan", max_new),
+        lambda: scenario_pool_exhaustion(max_new),
+    ]
+    if not fast:
+        scenarios += [
+            lambda: scenario_calib_poison("inf", max_new),
+            lambda: scenario_calib_poison("outlier", max_new),
+            lambda: scenario_requant_corruption(max_new),
+            lambda: scenario_poison_lane(1, max_new),
+            lambda: scenario_poison_lane(0, max_new),
+            lambda: scenario_deadline(max_new),
+        ]
+    report = {"config": {"model": CFG.name, "max_new": max_new,
+                         "fast": fast}, "rows": []}
+    ok_all = True
+    for fn in scenarios:
+        row, ok = fn()
+        row["pass"] = ok
+        report["rows"].append(row)
+        ok_all = ok_all and ok
+        detail = {k: v for k, v in row.items()
+                  if k not in ("scenario", "pass")}
+        print(f"{row['scenario']}: {'PASS' if ok else 'FAIL'}  {detail}")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_robustness.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+    if not ok_all:
+        raise SystemExit("bench_robustness acceptance FAILED")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: NaN-stats + pool-exhaustion only")
+    main(fast=ap.parse_args().fast)

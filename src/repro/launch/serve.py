@@ -31,6 +31,13 @@ smaller budgets oversubscribe — admissions preempt running slots under
 pressure instead of stalling), and ``--no-prefix-cache`` disables shared
 prompt-prefix block reuse.  The summary then adds ``kv_pool_util`` (peak),
 ``prefix_hit_rate`` and the preemption count.
+
+``--deadline-s T`` gives every request a T-second deadline (expired
+requests fail cleanly, never stall the drain loop); ``--inject NAME``
+runs a named deterministic fault recipe (``serving.faults.demo_injector``)
+against the live engine and the summary reports what fired and what the
+guards caught; ``--no-guards`` strips the robustness layer entirely
+(DESIGN.md §12) — byte-identical to the pre-guard engine.
 """
 import argparse
 import time
@@ -127,6 +134,21 @@ def main():
     ap.add_argument("--mesh", type=int, default=1,
                     help="model-parallel mesh size (tensor/expert parallel "
                          "serving, DESIGN.md §10); 1 = single device")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds (DESIGN.md §12); "
+                         "expired requests fail cleanly with error="
+                         "'deadline exceeded' (0 = no deadline)")
+    ap.add_argument("--inject", default="",
+                    help="named fault-injection recipe (serving.faults."
+                         "demo_injector): nan-stats, outlier-stats, "
+                         "bad-requant, pool-steal, poison-lane.  Seeded and "
+                         "deterministic; the summary reports what fired and "
+                         "what the guards caught")
+    ap.add_argument("--no-guards", action="store_true",
+                    help="disable the robustness layer (calibration guards, "
+                         "requant health gate, lane fault isolation, "
+                         "degradation ladder) — restores the exact pre-guard "
+                         "engine")
     args = ap.parse_args()
 
     import jax
@@ -143,6 +165,10 @@ def main():
     cfg = get(args.arch, smoke=args.smoke)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     policy = build_policy(args)
+    faults = None
+    if args.inject:
+        from repro.serving import demo_injector
+        faults = demo_injector(args.inject)
     draft_policy = None
     if args.speculate_k > 0 and args.draft_bits > 0:
         from repro.quant import ttq_policy
@@ -162,8 +188,10 @@ def main():
                                  if args.kv_paged else 0,
                                  kv_pool_blocks=args.kv_pool_blocks,
                                  prefix_cache=not args.no_prefix_cache,
-                                 speculate_k=args.speculate_k),
-                    pctx=pctx, draft_policy=draft_policy)
+                                 speculate_k=args.speculate_k,
+                                 guards=not args.no_guards,
+                                 deadline_s=args.deadline_s),
+                    pctx=pctx, draft_policy=draft_policy, faults=faults)
     layout = (f"paged block={eng.kvcfg.block_size} "
               f"pool={eng.num_blocks} blocks/layer "
               f"prefix_cache={not args.no_prefix_cache}"
@@ -189,6 +217,9 @@ def main():
     if pctx is not None:
         print(f"mesh: (1, {args.mesh}) data×model over "
               f"{jax.device_count()} device(s)")
+    dl = f"{args.deadline_s:.1f}s" if args.deadline_s > 0 else "none"
+    print(f"guards: {'off' if args.no_guards else 'on'} deadline={dl} "
+          f"inject={args.inject or 'none'}")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -218,6 +249,19 @@ def main():
               f"prefix_hit_rate={eng.prefix_hit_rate:.2f} "
               f"preemptions={eng.preemptions} "
               f"prefill_tokens={eng.prefill_tokens:.0f}")
+    if not args.no_guards:
+        print(f"guards: calib_rejections={eng.calib_rejections} "
+              f"requant_rejections={eng.requant_rejections} "
+              f"lane_faults={eng.lane_faults} "
+              f"deadline_expirations={eng.deadline_expirations} "
+              f"admission_failures={eng.admission_failures} "
+              f"degrade_events={eng.degrade_events}")
+    if faults is not None:
+        fired = ", ".join(f"{s}@{n}" for s, n, _ in faults.fired) or "none"
+        print(f"faults fired: {fired}")
+        failed = [r for r, v in sorted(outs.items()) if v.error]
+        if failed:
+            print(f"  failed rids: {failed}")
     for rid, v in sorted(outs.items())[:4]:
         print(f"  rid={rid}: {v[:10]}{'…' if len(v) > 10 else ''}")
 

@@ -217,8 +217,10 @@ def decode_step(cfg: ModelConfig, params, state, token, pos, *, pctx=None,
 
 
 def decode_many(cfg: ModelConfig, params, state, token, pos, done, remaining,
-                key, *, K: int, max_len: int, temperature: float = 0.0,
-                eos_token: int = -1, pctx=None, kvcfg=None, kcfg=None):
+                key, poison=None, *, K: int, max_len: int,
+                temperature: float = 0.0, eos_token: int = -1,
+                detect_faults: bool = False, pctx=None, kvcfg=None,
+                kcfg=None):
     """Fused multi-token decode: ``lax.scan`` over ``K`` decode steps keeping
     sampling, EOS detection, per-slot done-masking, budget accounting, and
     position advance entirely on device — one host transfer per K tokens
@@ -242,24 +244,46 @@ def decode_many(cfg: ModelConfig, params, state, token, pos, done, remaining,
     done, remaining, key))``.  ``valid[b, k]`` marks tokens actually emitted
     by a live slot; with greedy sampling those tokens are identical to ``K``
     repeated :func:`decode_step` calls.
+
+    **Fault isolation (DESIGN.md §12):** with ``detect_faults=True`` the
+    per-step logits are checked for finiteness on device; a lane whose
+    logits go non-finite emits *nothing* from that step on (its done flag
+    trips, position/token hold) and the output triple gains a per-slot
+    ``fault (B,) bool`` — ``((tokens, valid, fault), carry)`` — so the
+    scheduler can fail just that lane.  ``poison`` ((B,) bool or None) is
+    the deterministic injection site: flagged lanes get their logits forced
+    to NaN post-projection, exercising the exact detection path a real
+    numerical fault would take.  Both default off, preserving the original
+    signature and program for every existing caller.
     """
     def step_fn(carry, _):
         st, tok, p, dn, rem, k = carry
         p_in = jnp.minimum(p, max_len - 1)      # done lanes: in-bounds writes
         logits, st = decode_step(cfg, params, st, tok, p_in, pctx=pctx,
                                  kvcfg=kvcfg, kcfg=kcfg)
+        if poison is not None:
+            logits = jnp.where(poison[:, None], jnp.float32(jnp.nan), logits)
         k, sk = jax.random.split(k)
-        nxt = sample_logits(logits, sk, temperature)
         live = ~dn
+        if detect_faults:
+            flt = live & ~jnp.isfinite(logits).all(axis=-1)
+            live = live & ~flt                  # faulted lane: emit nothing,
+            dn = dn | flt                       # hold token/pos, trip done
+        nxt = sample_logits(logits, sk, temperature)
         nxt = jnp.where(live, nxt, tok[:, 0])
         rem = rem - live.astype(jnp.int32)
         p = p + live.astype(jnp.int32)
         stop = (nxt == eos_token) | (p >= max_len) | (rem <= 0)
         dn = dn | (live & stop)
-        return (st, nxt[:, None], p, dn, rem, k), (nxt, live)
+        ys = (nxt, live, flt) if detect_faults else (nxt, live)
+        return (st, nxt[:, None], p, dn, rem, k), ys
 
     carry = (state, token, pos, done, remaining, key)
-    carry, (toks, valid) = jax.lax.scan(step_fn, carry, None, length=K)
+    carry, ys = jax.lax.scan(step_fn, carry, None, length=K)
+    if detect_faults:
+        toks, valid, flts = ys
+        return (toks.T, valid.T, flts.any(axis=0)), carry
+    toks, valid = ys
     return (toks.T, valid.T), carry
 
 
@@ -292,8 +316,10 @@ def verify_window(cfg: ModelConfig, params, state, tokens, pos, *, pctx=None,
 
 
 def speculate_many(cfg: ModelConfig, draft_params, params, state, token, pos,
-                   done, remaining, key, *, K: int, W: int, max_len: int,
-                   eos_token: int = -1, pctx=None, kvcfg=None, kcfg=None):
+                   done, remaining, key, poison=None, *, K: int, W: int,
+                   max_len: int, eos_token: int = -1,
+                   detect_faults: bool = False, pctx=None, kvcfg=None,
+                   kcfg=None):
     """Self-speculative fused decode: ``K`` draft/verify windows per dispatch
     (DESIGN.md §11).  Greedy only — the engine auto-disables speculation when
     sampling temperature > 0.
@@ -314,6 +340,13 @@ def speculate_many(cfg: ModelConfig, draft_params, params, state, token, pos,
     (B, K·(W+1)) int32, valid (B, K·(W+1)) bool), carry)`` — the acceptance
     length per window is recoverable from ``valid``, folding it into the
     existing one-host-transfer-per-chunk protocol.
+
+    ``poison`` / ``detect_faults`` mirror :func:`decode_many` (DESIGN.md
+    §12): the *verify* logits are the checked (and poisoned) site — the
+    verify tree decides every emitted token, so a non-finite draft can only
+    lower acceptance while a non-finite verify window trips the lane's
+    fault flag and emits nothing.  With ``detect_faults`` the output triple
+    gains the per-slot ``fault (B,) bool``.
     """
     B = token.shape[0]
 
@@ -334,6 +367,13 @@ def speculate_many(cfg: ModelConfig, draft_params, params, state, token, pos,
         win = jnp.concatenate([tok, drafts], axis=1)        # (B, W+1)
         logits, st = verify_window(cfg, params, st, win, p, pctx=pctx,
                                    kvcfg=kvcfg, kcfg=kcfg)
+        if poison is not None:
+            logits = jnp.where(poison[:, None, None], jnp.float32(jnp.nan),
+                               logits)
+        flt = jnp.zeros((B,), bool)
+        if detect_faults:
+            flt = (~dn) & ~jnp.isfinite(logits).all(axis=(-2, -1))
+            dn = dn | flt                   # faulted lane: whole window out
         v = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, W+1)
         # longest agreeing draft prefix; candidate i (0-based) is the
         # verifier's token for position p+i+1 and is emitted iff i <= a
@@ -353,11 +393,15 @@ def speculate_many(cfg: ModelConfig, draft_params, params, state, token, pos,
 
         (tok, p, dn, rem), (toks_w, valid_w) = jax.lax.scan(
             emit_step, (tok, p, dn, rem), (v.T, jnp.arange(W + 1)))
-        return (st, tok, p, dn, rem, k), (toks_w, valid_w)
+        ys = (toks_w, valid_w, flt) if detect_faults else (toks_w, valid_w)
+        return (st, tok, p, dn, rem, k), ys
 
     carry = (state, token, pos, done, remaining, key)
-    carry, (toks, valid) = jax.lax.scan(window_fn, carry, None, length=K)
+    carry, ys = jax.lax.scan(window_fn, carry, None, length=K)
+    toks, valid = ys[0], ys[1]
     # (K, W+1, B) → (B, K·(W+1)), window-major per slot
     toks = toks.transpose(2, 0, 1).reshape(B, K * (W + 1))
     valid = valid.transpose(2, 0, 1).reshape(B, K * (W + 1))
+    if detect_faults:
+        return (toks, valid, ys[2].any(axis=0)), carry
     return (toks, valid), carry

@@ -19,15 +19,16 @@ from repro.core.policy import (FUSED_KERNELS, KernelConfig, NO_QUANT,
                                QuantPolicy, override, ttq_policy)
 
 from .api import FusedRequantPlan, lowrank_tree, quantize_params
+from .guards import GuardConfig
 from .model import QuantizedModel
 from .registry import (Quantizer, get_quantizer, register_quantizer,
                        registered_methods)
-from .session import CalibrationSession
+from .session import CalibrationSession, QuarantineRecord
 
 __all__ = [
     "BF16_KV", "CalibrationSession", "FUSED_KERNELS", "FusedRequantPlan",
-    "KVCacheConfig", "KernelConfig", "NO_QUANT",
-    "QuantPolicy", "QuantizedModel",
+    "GuardConfig", "KVCacheConfig", "KernelConfig", "NO_QUANT",
+    "QuantPolicy", "QuantizedModel", "QuarantineRecord",
     "Quantizer", "get_quantizer", "lowrank_tree", "override",
     "quantize_params", "register_quantizer", "registered_methods",
     "ttq_policy",

@@ -1,0 +1,150 @@
+"""Robustness guards for the TTQ lifecycle (DESIGN.md §12).
+
+TTQ's online calibration makes the shared statistics stream the engine's
+most dangerous mutable state: one degenerate prompt (NaN/Inf activations,
+an extreme outlier) gets tree-added into the session and the next fused
+requant bakes the poison into the weights served to *every* subsequent
+request.  This module owns the two validation points that keep that from
+happening, plus the knobs for the serving-side isolation machinery:
+
+* :func:`stats_summary` — one tiny jitted reduction per stats-tree
+  structure returning ``(all_finite, mean_abs)``; the
+  :class:`~repro.quant.session.CalibrationSession` guard calls it on every
+  incoming update (and once on the running tree for the outlier gate);
+* :func:`qt_health` — validates a candidate quantized tree *before* it can
+  reach a weight swap: every scale/zero/D⁻¹ leaf finite, and (optionally)
+  the relative drift of D⁻¹ against the last-good tree bounded;
+* :class:`GuardConfig` — the frozen knob bundle ``EngineConfig.guard_cfg``
+  carries through the scheduler (retry/backoff, admission-attempt cap),
+  the engine (degradation-ladder hysteresis) and the quant model.
+
+Both validators cost one blocking host transfer of two scalars — they run
+per admission / per requant, never inside the decode hot loop, so the
+transfer-guard and host-syncs/token invariants are untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Knobs for the robustness layer (DESIGN.md §12).  Frozen so it can
+    ride the (frozen) ``EngineConfig`` and be shared across components."""
+    calib_outlier_factor: float = 100.0   # reject updates whose per-token
+                                          # mean |stat| exceeds factor × the
+                                          # running per-token mean
+    calib_warmup_updates: int = 1         # accepted updates before the
+                                          # outlier gate arms (the first
+                                          # update defines the distribution)
+    snapshot_ring: int = 4                # last-good pre-update snapshots
+                                          # kept for rollback
+    quarantine_max: int = 16              # rejected-update records retained
+    requant_max_drift: float = -1.0       # max relative L2 drift of D⁻¹ per
+                                          # swap (<0 = finiteness check only)
+    max_retries: int = 1                  # per-request decode-fault retries
+                                          # before the request errors out
+    max_admission_attempts: int = 8       # MemoryError→preempt retries per
+                                          # request per planning round (the
+                                          # scheduler lifts this to at least
+                                          # max_slots+1 so legitimate
+                                          # preemption chains never trip it)
+    degrade_pressure: float = 0.95        # pool pressure that climbs the
+                                          # degradation ladder one rung
+    recover_pressure: float = 0.5         # pressure that climbs back down
+
+
+@jax.jit
+def _summarize(tree):
+    """(all_finite, mean |leaf|) over every array leaf of ``tree``."""
+    leaves = jax.tree.leaves(tree)
+    finite = jnp.asarray(True)
+    total = jnp.asarray(0.0, jnp.float32)
+    n = 0
+    for leaf in leaves:
+        finite = finite & jnp.isfinite(leaf).all()
+        total = total + jnp.abs(leaf).astype(jnp.float32).sum()
+        n += leaf.size
+    return finite, total / max(n, 1)
+
+
+def stats_summary(tree: Any) -> Tuple[bool, float]:
+    """Host-side ``(all_finite, mean_abs)`` of a stats tree.
+
+    One jitted program per tree *structure* (the engine sees exactly one:
+    its model's stats layout), one blocking transfer of two scalars."""
+    fin, mean = jax.device_get(_summarize(tree))
+    return bool(fin), float(mean)
+
+
+@jax.jit
+def _qt_summarize(arrs, pairs):
+    """Finiteness over ``arrs`` + max relative L2 drift over ``pairs``."""
+    finite = jnp.asarray(True)
+    for a in arrs:
+        finite = finite & jnp.isfinite(a).all()
+    drift = jnp.asarray(0.0, jnp.float32)
+    for new, prev in pairs:
+        num = jnp.linalg.norm((new - prev).astype(jnp.float32).ravel())
+        den = jnp.maximum(jnp.linalg.norm(prev.astype(jnp.float32).ravel()),
+                          1e-12)
+        drift = jnp.maximum(drift, num / den)
+    return finite, drift
+
+
+def qt_health(tree: Any, prev_dinv: Dict[str, Any],
+              max_drift: float) -> Tuple[bool, float]:
+    """Validate a candidate quantized tree before it can reach a weight
+    swap: every ``QuantizedTensor`` scale / zero / D⁻¹ leaf finite, and —
+    when ``max_drift >= 0`` — the per-leaf relative L2 drift of D⁻¹ against
+    the last-good tree (``prev_dinv``: path → previous dinv) bounded.
+
+    Returns ``(healthy, max_drift_observed)``.  Leaves the delta gate
+    untouched: a rejected tree's snapshots are never refreshed, so the
+    next attempt re-quantizes from the same last-good state."""
+    from repro.core.ttq import QuantizedTensor
+
+    from .api import _path_str
+
+    arrs, pairs = [], []
+
+    def visit(path, leaf):
+        if not isinstance(leaf, QuantizedTensor):
+            return leaf
+        for a in (leaf.scale, leaf.zero, leaf.dinv):
+            if a is not None:
+                arrs.append(a)
+        prev = prev_dinv.get(_path_str(path))
+        if prev is not None and leaf.dinv is not None \
+                and prev.shape == leaf.dinv.shape:
+            pairs.append((leaf.dinv, prev))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    if not arrs:
+        return True, 0.0
+    fin, drift = jax.device_get(_qt_summarize(arrs, pairs))
+    ok = bool(fin) and (max_drift < 0 or float(drift) <= float(max_drift))
+    return ok, float(drift)
+
+
+def token_count_ok(tokens: float) -> bool:
+    """Token-count sanity for a calibration update: finite and positive."""
+    try:
+        t = float(tokens)
+    except (TypeError, ValueError):
+        return False
+    return math.isfinite(t) and t > 0
+
+
+def compiled_programs() -> int:
+    """Jit-cache entries of the guard reductions (module-level caches —
+    counted into ``TTQEngine.compiled_programs`` so the zero-steady-state
+    recompile gates see them)."""
+    return _summarize._cache_size() + _qt_summarize._cache_size()

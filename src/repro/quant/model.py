@@ -47,6 +47,7 @@ from repro.core.awq import AWQConfig
 from repro.core.policy import QuantPolicy
 
 from .api import FusedRequantPlan, lowrank_tree, quantize_params
+from .guards import GuardConfig, qt_health
 from .session import CalibrationSession
 
 
@@ -59,7 +60,8 @@ class QuantizedModel:
                  session: Optional[CalibrationSession] = None,
                  lowrank: Any = _AUTO, fused: bool = True,
                  double_buffer: bool = False, pctx=None,
-                 draft_policy: Optional[QuantPolicy] = None):
+                 draft_policy: Optional[QuantPolicy] = None,
+                 health_gate: Optional[GuardConfig] = None):
         self.params = params
         self.policy = policy
         self.acfg = acfg
@@ -81,6 +83,16 @@ class QuantizedModel:
         self._qt_by_path: dict = {}      # path_str → last QuantizedTensor
         self._last_D: dict = {}          # path_str → (lead..., d) f32 snapshot
         self._pending = None             # double buffer: not-yet-ready tree
+        # requant health gate (DESIGN.md §12): with a GuardConfig, every
+        # candidate tree is validated (finite scales/zero/D⁻¹, bounded D⁻¹
+        # drift) BEFORE it can reach a swap or refresh the delta-gate
+        # snapshots; rejections keep serving the last-good tree
+        self.health_gate = health_gate
+        self.requant_rejections = 0
+        self.last_health_drift = 0.0
+        self._fault_hook = None          # designated injection site: called
+                                         # with the candidate tree pre-
+                                         # validation (serving/faults.py)
         # self-speculative draft tree (DESIGN.md §11): a second quantized
         # tree from the SAME calibration snapshot.  None → no draft tree;
         # a disabled draft policy (e.g. NO_QUANT) keeps draft_params on the
@@ -108,9 +120,12 @@ class QuantizedModel:
 
     # -------------------------------------------------------------- lifecycle
 
-    def calibrate(self, stats: Any, tokens: float) -> "QuantizedModel":
-        """Fold one prefill's activation statistics into the session."""
-        self.session.update(stats, tokens)
+    def calibrate(self, stats: Any, tokens: float,
+                  provenance: tuple = ()) -> "QuantizedModel":
+        """Fold one prefill's activation statistics into the session.
+        ``provenance`` (request ids) rides into the quarantine log when a
+        guarded session rejects the update."""
+        self.session.update(stats, tokens, provenance=provenance)
         return self
 
     def _active(self) -> bool:
@@ -189,9 +204,16 @@ class QuantizedModel:
         plan = self._ensure_plan(stats)
         tree = None
         if plan is not None:
-            tree, n_requant, n_skip = self._run_plan(
+            tree, n_requant, n_skip = self._attempt(
                 plan, self.lowrank_tree, self._qt_by_path, self._last_D,
                 stats, count, threshold)
+            if tree is None:
+                # sustained corruption (the immediate clean retry failed
+                # too): the newest accepted calibration update is the prime
+                # suspect — drop it and keep serving the last-good tree.
+                # n_requants stays put, so the engine's cadence re-arms.
+                self.session.rollback(1)
+                return None
             self.last_requant_layers = n_requant
             self.last_skipped_layers = n_skip
             self.total_requant_layers += n_requant
@@ -203,23 +225,47 @@ class QuantizedModel:
         if self._draft_plan is not None:
             # draft tree: same stats snapshot, same delta-gate semantics,
             # its own D snapshots (the gates may fire on different steps)
-            dtree, _, _ = self._run_plan(
+            dtree, _, _ = self._attempt(
                 self._draft_plan, self.draft_lowrank_tree,
                 self._draft_qt_by_path, self._draft_last_D,
                 stats, count, threshold)
-            if self.double_buffer and self.draft_qparams is not None:
-                self._draft_pending = dtree
-            else:
-                self.draft_qparams = dtree
-            if tree is None:
-                tree = dtree             # draft-only mode: report the draft
+            if dtree is None and plan is None:
+                # draft-only mode: the draft IS the primary tree
+                self.session.rollback(1)
+                return None
+            if dtree is not None:
+                if self.double_buffer and self.draft_qparams is not None:
+                    self._draft_pending = dtree
+                else:
+                    self.draft_qparams = dtree
+                if tree is None:
+                    tree = dtree         # draft-only mode: report the draft
+            # a rejected draft beside a healthy verify tree keeps its old
+            # draft (speculation stays token-correct — the verify tree
+            # decides every emitted token; only acceptance rate suffers)
         self.n_requants += 1             # tree so cadence accounting (the
         return tree                      # engine's note_requant) still fires
 
+    def _attempt(self, plan, lowrank, qt_by_path, last_D, stats, count,
+                 threshold):
+        """One tree's requant with the health gate: a rejected candidate is
+        retried once immediately (transient corruption — a flipped device
+        buffer, an injected fault — yields a clean tree on the very next
+        dispatch from the same stats), then given up on."""
+        tries = 2 if self.health_gate is not None else 1
+        for _ in range(tries):
+            tree, n_requant, n_skip = self._run_plan(
+                plan, lowrank, qt_by_path, last_D, stats, count, threshold)
+            if tree is not None:
+                return tree, n_requant, n_skip
+        return None, 0, 0
+
     def _run_plan(self, plan, lowrank, qt_by_path, last_D, stats, count,
                   threshold):
-        """Run one tree's fused plan (gate → family programs → snapshot
-        refresh).  Returns (tree, n_requant, n_skip)."""
+        """Run one tree's fused plan (gate → family programs → health gate →
+        snapshot refresh).  Returns (tree, n_requant, n_skip); a
+        health-rejected candidate returns (None, 0, 0) *without* touching
+        the delta-gate snapshots — nothing of it survives."""
         only = None
         n_requant, n_skip = plan.n_layers, 0
         if threshold is not None and qt_by_path:
@@ -228,6 +274,17 @@ class QuantizedModel:
                                                 set(qt_by_path))
         tree = plan.run(self.params, stats, count, lowrank,
                         only=only, reuse=qt_by_path)
+        if self._fault_hook is not None:
+            tree = self._fault_hook(tree)
+        if self.health_gate is not None:
+            prev = {p: qt.dinv for p, qt in qt_by_path.items()
+                    if qt.dinv is not None}
+            ok, drift = qt_health(tree, prev,
+                                  self.health_gate.requant_max_drift)
+            self.last_health_drift = drift
+            if not ok:
+                self.requant_rejections += 1
+                return None, 0, 0
         # refresh the per-path snapshot for everything that was requantized
         from repro.core.ttq import QuantizedTensor
 
@@ -280,7 +337,8 @@ class QuantizedModel:
                               session=self.session.fork(),
                               lowrank=self.lowrank_tree, fused=self.fused,
                               double_buffer=self.double_buffer,
-                              pctx=self.pctx, draft_policy=self.draft_policy)
+                              pctx=self.pctx, draft_policy=self.draft_policy,
+                              health_gate=self.health_gate)
 
     def adopt(self, session: CalibrationSession) -> "QuantizedModel":
         """Join a forked stream's statistics into this model's session."""

@@ -11,18 +11,35 @@ multi-stream serving:
   functionally and never mutate a snapshot).
 * ``merge(other)`` — join two sessions by summing their sufficient statistics
   (exact, because the statistics are additive): fork per stream, join at
-  requantization time.
+  requantization time.  Merging sessions with different halflives is a
+  ``ValueError`` — their stats carry incompatible decay weighting, so the
+  sum would silently misweight one stream.
 
 Decay: with ``halflife=h`` (measured in updates), every ``update`` first
 scales existing stats and count by ``0.5**(1/h)``, so a request admitted h
 updates ago carries half the weight of the current one.  ``halflife=0``
 disables decay (plain accumulation).
+
+**Poisoning defense (DESIGN.md §12):** constructed with a
+:class:`~repro.quant.guards.GuardConfig`, every ``update`` is validated
+before it folds — non-finite stats, a bad token count, or a per-token
+magnitude beyond ``calib_outlier_factor`` × the running distribution is
+*quarantined* (a bounded provenance log, ``n_rejected`` counter) instead of
+accumulated.  Accepted folds push the pre-update state onto a bounded
+last-good ring, so a poisoned stream that slipped past the gate (or a
+downstream requant health rejection) can ``rollback(n)`` to the state
+before the last n accepted updates.  Without a guard config the session
+behaves exactly as before — validation is strictly opt-in.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from collections import deque
+from typing import Any, Optional, Tuple
 
 import jax
+
+from .guards import GuardConfig, stats_summary, token_count_ok
 
 
 def _tree_add(a: Any, b: Any) -> Any:
@@ -39,20 +56,75 @@ def _tree_scale(a: Any, s: float) -> Any:
     return jax.tree.map(lambda x: x * s, a)
 
 
+@dataclasses.dataclass(frozen=True)
+class QuarantineRecord:
+    """One rejected calibration update, with provenance for the audit
+    trail: why it was rejected, which update index it would have been,
+    which request ids produced it, and its measured per-leaf magnitude."""
+    reason: str                  # "non-finite-stats" | "bad-token-count"
+                                 # | "outlier-stats"
+    tokens: float                # claimed token count of the update
+    update_idx: int              # n_updates at rejection time
+    provenance: Tuple[int, ...]  # request ids that produced the stats
+    mean_abs: float              # measured mean |stat| of the update
+
+
 class CalibrationSession:
     """Accumulates activation statistics for online (re)quantization."""
 
     def __init__(self, halflife: float = 0.0,
-                 stats: Any = None, count: float = 0.0, n_updates: int = 0):
+                 stats: Any = None, count: float = 0.0, n_updates: int = 0,
+                 guard: Optional[GuardConfig] = None):
         self.halflife = float(halflife)
         self.stats = stats
         self.count = float(count)
         self.n_updates = int(n_updates)
+        self.guard = guard
+        self.n_rejected = 0
+        self.quarantine: deque = deque(
+            maxlen=guard.quarantine_max if guard is not None else 16)
+        # last-good ring: (stats, count, n_updates) BEFORE each accepted
+        # fold, newest last — rollback(n) pops n entries
+        self._ring: deque = deque(
+            maxlen=guard.snapshot_ring if guard is not None else 4)
 
     # ------------------------------------------------------------- lifecycle
 
-    def update(self, stats: Any, tokens: float) -> "CalibrationSession":
-        """Fold one prefill's statistics in (with decay if halflife > 0)."""
+    def _validate(self, stats: Any, tokens: float) -> Tuple[str, float]:
+        """(reason, mean_abs): empty reason = accept.  One summary program
+        for the update and (once armed) one for the running tree — both
+        outside the decode hot loop."""
+        if not token_count_ok(tokens):
+            return "bad-token-count", 0.0
+        fin, mean = stats_summary(stats)
+        if not fin:
+            return "non-finite-stats", mean
+        g = self.guard
+        if (self.stats is not None and self.n_updates >= g.calib_warmup_updates
+                and g.calib_outlier_factor > 0):
+            _, run_mean = stats_summary(self.stats)
+            run_rate = run_mean / max(self.count, 1.0)
+            rate = mean / float(tokens)
+            if run_rate > 0 and rate > g.calib_outlier_factor * run_rate:
+                return "outlier-stats", mean
+        return "", mean
+
+    def update(self, stats: Any, tokens: float,
+               provenance: Tuple[int, ...] = ()) -> "CalibrationSession":
+        """Fold one prefill's statistics in (with decay if halflife > 0).
+
+        With a guard config the update is validated first; rejections are
+        quarantined (with ``provenance`` — typically the admitted request
+        ids) and leave the session state untouched."""
+        if self.guard is not None:
+            reason, mean = self._validate(stats, tokens)
+            if reason:
+                self.n_rejected += 1
+                self.quarantine.append(QuarantineRecord(
+                    reason, float(tokens) if token_count_ok(tokens) else
+                    float("nan"), self.n_updates, tuple(provenance), mean))
+                return self
+            self._ring.append((self.stats, self.count, self.n_updates))
         if self.halflife > 0 and self.stats is not None:
             decay = 0.5 ** (1.0 / self.halflife)
             self.stats = _tree_scale(self.stats, decay)
@@ -62,26 +134,51 @@ class CalibrationSession:
         self.n_updates += 1
         return self
 
+    def rollback(self, n: int = 1) -> int:
+        """Restore the state before the last ``n`` accepted updates (bounded
+        by the ring depth).  Returns how many updates were actually undone —
+        0 when the ring is empty (guard off, or nothing accepted yet)."""
+        undone = 0
+        for _ in range(n):
+            if not self._ring:
+                break
+            self.stats, self.count, self.n_updates = self._ring.pop()
+            undone += 1
+        return undone
+
     def reset(self) -> "CalibrationSession":
         self.stats, self.count, self.n_updates = None, 0.0, 0
+        self._ring.clear()
         return self
 
     # ----------------------------------------------------------- fork / join
 
     def snapshot(self) -> "CalibrationSession":
-        """Immutable-by-construction copy sharing the current stats tree."""
+        """Immutable-by-construction copy sharing the current stats tree
+        (fresh quarantine/ring — the copy starts its own audit trail)."""
         return CalibrationSession(self.halflife, self.stats,
-                                  self.count, self.n_updates)
+                                  self.count, self.n_updates,
+                                  guard=self.guard)
 
     fork = snapshot
 
     def merge(self, other: "CalibrationSession") -> "CalibrationSession":
-        """Join: sum of sufficient statistics (exact for additive stats)."""
+        """Join: sum of sufficient statistics (exact for additive stats).
+        The halflives must agree — each stream's stats are weighted by its
+        own decay schedule, so summing across schedules would silently
+        misweight one of them."""
+        if self.halflife != other.halflife:
+            raise ValueError(
+                f"cannot merge sessions with different halflives "
+                f"({self.halflife} vs {other.halflife}): their statistics "
+                f"carry incompatible decay weighting — fork from one parent "
+                f"or resample one stream")
         return CalibrationSession(
             self.halflife,
             _tree_add(self.stats, other.stats),
             self.count + other.count,
             self.n_updates + other.n_updates,
+            guard=self.guard,
         )
 
     # ------------------------------------------------------------ inspection
@@ -95,6 +192,8 @@ class CalibrationSession:
         return self.stats, max(self.count, 1.0)
 
     def __repr__(self) -> str:
+        extra = (f", rejected={self.n_rejected}"
+                 if self.guard is not None else "")
         return (f"CalibrationSession(count={self.count:.0f}, "
                 f"n_updates={self.n_updates}, halflife={self.halflife}, "
-                f"calibrated={self.calibrated})")
+                f"calibrated={self.calibrated}{extra})")

@@ -1,9 +1,10 @@
 from .blocks import BlockAllocator
 from .engine import EngineConfig, TTQEngine
+from .faults import Fault, FaultInjector, VirtualClock, demo_injector
 from .runner import DeviceRunner
 from .sampling import sample
 from .scheduler import GenResult, Request, Scheduler, pick_decode_chunk
 
-__all__ = ["BlockAllocator", "DeviceRunner", "EngineConfig", "GenResult",
-           "Request", "Scheduler", "TTQEngine", "pick_decode_chunk",
-           "sample"]
+__all__ = ["BlockAllocator", "DeviceRunner", "EngineConfig", "Fault",
+           "FaultInjector", "GenResult", "Request", "Scheduler", "TTQEngine",
+           "VirtualClock", "demo_injector", "pick_decode_chunk", "sample"]

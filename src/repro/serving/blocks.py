@@ -118,6 +118,20 @@ class BlockAllocator:
         else:
             self.free.append(blk)
 
+    def drop_cached(self) -> int:
+        """Evict every unreferenced cached prefix block back to the plain
+        free list (degradation-ladder rung 3: trade prefix reuse for
+        allocatable headroom).  Live shared blocks are untouched.  Returns
+        the number of blocks reclaimed."""
+        n = 0
+        while self.cached:
+            blk, _ = self.cached.popitem(last=False)
+            h = self.block_hash.pop(blk)
+            del self.trie[h]
+            self.free.append(blk)
+            n += 1
+        return n
+
     # ------------------------------------------------------------ admission
 
     def match_prefix(self, prompt) -> Tuple[List[int], List[int]]:

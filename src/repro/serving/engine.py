@@ -51,7 +51,8 @@ from typing import Dict, Optional
 
 from repro.core import QuantPolicy
 from repro.models.config import ModelConfig
-from repro.quant import QuantizedModel
+from repro.quant import CalibrationSession, GuardConfig, QuantizedModel
+from repro.quant import guards as _guards
 
 from .runner import DeviceRunner
 from .scheduler import GenResult, Request, Scheduler, pick_decode_chunk
@@ -102,12 +103,23 @@ class EngineConfig:
                                     # decode_chunk then counts WINDOWS per
                                     # dispatch (auto shrinks it so tokens/
                                     # dispatch stays comparable).
+    # ---- robustness layer (DESIGN.md §12) ----
+    guards: bool = True             # calibration validation, requant health
+                                    # gate, decode fault isolation and the
+                                    # degradation ladder.  Off = the exact
+                                    # pre-guard engine (decode program
+                                    # included — detection costs one
+                                    # isfinite reduction per step)
+    guard_cfg: GuardConfig = GuardConfig()  # knobs (frozen, shareable)
+    deadline_s: float = 0.0         # default per-request wall budget from
+                                    # submit (0 = none; submit() overrides
+                                    # per request)
 
 
 class TTQEngine:
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  ecfg: EngineConfig = EngineConfig(), pctx=None, key=None,
-                 draft_policy: Optional[QuantPolicy] = None):
+                 draft_policy: Optional[QuantPolicy] = None, faults=None):
         if ecfg.speculate_k > 0 and ecfg.temperature > 0.0:
             # greedy acceptance would bias sampled streams — auto-off until
             # rejection-sampling acceptance lands (DESIGN.md §11)
@@ -177,15 +189,37 @@ class TTQEngine:
                                    pctx=pctx, key=key,
                                    num_blocks=self.num_blocks)
         self.params = params = self.runner.place_params(params)
-        self.qmodel = QuantizedModel(params, policy,
-                                     halflife=ecfg.stats_halflife,
-                                     double_buffer=ecfg.double_buffer,
-                                     pctx=pctx,
-                                     draft_policy=self.draft_policy)
+        # robustness layer (DESIGN.md §12): one GuardConfig drives the
+        # session's update validation, the model's requant health gate, the
+        # scheduler's retry budget and the degradation ladder below.  The
+        # session/model guards are strictly opt-in at their constructors,
+        # so direct QuantizedModel users are untouched.
+        guard = ecfg.guard_cfg if ecfg.guards else None
+        self.qmodel = QuantizedModel(
+            params, policy,
+            session=CalibrationSession(halflife=ecfg.stats_halflife,
+                                       guard=guard),
+            double_buffer=ecfg.double_buffer, pctx=pctx,
+            draft_policy=self.draft_policy, health_gate=guard)
         self.scheduler = Scheduler(
             ecfg, exact_buckets=cfg.family in ("hybrid", "ssm"),
             kvcfg=self.kvcfg, num_blocks=self.num_blocks)
         self.requant_wall_s = 0.0       # dispatch time spent requantizing
+        # fault injection (serving/faults.py): deterministic, seeded faults
+        # at named sites; the injector may supply a virtual clock so
+        # deadline scenarios replay bit-for-bit
+        self.faults = faults
+        self._clock = time.monotonic
+        if faults is not None:
+            if getattr(faults, "clock", None) is not None:
+                self._clock = faults.clock
+            if getattr(faults, "requant_hook", None) is not None:
+                self.qmodel._fault_hook = faults.requant_hook
+        # graceful-degradation ladder under sustained KV-pool pressure:
+        # 0 = normal, 1 = speculation off, 2 = K=1 decode chunks,
+        # 3 = cached prefix blocks dropped — all before preemption bites
+        self.degrade_level = 0
+        self.degrade_events = 0
 
     # ------------------------------------------------------------------- TTQ
 
@@ -292,7 +326,8 @@ class TTQEngine:
         a zero steady-state delta (DESIGN.md §"Static analysis & runtime
         invariants")."""
         return (self.runner.compiled_programs
-                + self.qmodel.compiled_programs)
+                + self.qmodel.compiled_programs
+                + _guards.compiled_programs())
 
     # ------------------------------------------------- paged-pool metrics
 
@@ -322,11 +357,51 @@ class TTQEngine:
         """Padded tokens dispatched to prefill (prefix hits shrink this)."""
         return self.scheduler.prefill_tokens
 
+    # -------------------------------------------- robustness telemetry (§12)
+
+    @property
+    def calib_rejections(self) -> int:
+        """Calibration updates the session's guard quarantined (never
+        folded into the running statistics)."""
+        return self.qmodel.session.n_rejected
+
+    @property
+    def quarantine(self):
+        """The session's bounded quarantine log (QuarantineRecord deque)."""
+        return self.qmodel.session.quarantine
+
+    @property
+    def requant_rejections(self) -> int:
+        """Candidate quantized trees the health gate refused to swap in."""
+        return self.qmodel.requant_rejections
+
+    @property
+    def lane_faults(self) -> int:
+        return self.scheduler.lane_faults
+
+    @property
+    def deadline_expirations(self) -> int:
+        return self.scheduler.deadline_expirations
+
+    @property
+    def admission_failures(self) -> int:
+        """Requests failed after exhausting the bounded admission-retry
+        budget (``guard_cfg.max_admission_attempts``)."""
+        return self.scheduler.admission_failures
+
     # --------------------------------------------------------------- serving
 
-    def submit(self, prompt, max_new: int = 16, frames=None) -> int:
-        """Queue a request; rejects prompts the engine cannot admit."""
-        return self.scheduler.submit(prompt, max_new, frames=frames)
+    def submit(self, prompt, max_new: int = 16, frames=None,
+               deadline_s=None) -> int:
+        """Queue a request; rejects prompts the engine cannot admit.
+
+        ``deadline_s`` (seconds from now, 0 = none) bounds the request's
+        wall-clock lifetime: expired requests — queued or running — are
+        failed with ``error == "deadline"`` instead of occupying a lane
+        forever.  Defaults to ``EngineConfig.deadline_s``."""
+        return self.scheduler.submit(prompt, max_new, frames=frames,
+                                     deadline_s=deadline_s,
+                                     now=self._clock())
 
     def cancel(self, rid: int) -> bool:
         """Abort a queued or running request immediately: its slot and
@@ -363,7 +438,14 @@ class TTQEngine:
                 # on device (the facade never allocates arrays)
                 first, fin, stats = self.runner.admit_group(self.params,
                                                             group)
-                self.qmodel.calibrate(stats, tokens=group.tokens)
+                rids = tuple(r.rid for r in group.requests)
+                tokens = group.tokens
+                if self.faults is not None:
+                    stats, tokens = self.faults.calib_site(stats, tokens,
+                                                           rids)
+                if stats is not None:    # a "drop" fault skips the fold
+                    self.qmodel.calibrate(stats, tokens=tokens,
+                                          provenance=rids)
                 self.scheduler.note_admitted(len(group.requests), group.tokens)
                 for i, (slot, req) in enumerate(zip(group.slots,
                                                     group.requests)):
@@ -374,15 +456,57 @@ class TTQEngine:
         if self.scheduler.should_requant():
             self._requantize()
 
+    def _update_ladder(self):
+        """Graceful-degradation ladder under KV-pool pressure (paged pool
+        only).  Pressure = fraction of pool blocks currently allocated;
+        above ``guard_cfg.degrade_pressure`` the engine climbs one rung,
+        below ``recover_pressure`` it steps back down (hysteresis keeps it
+        from flapping):
+
+          0  normal service
+          1  speculation off (draft tree unused — verify program only)
+          2  decode chunk shrunk to K=1 (separate small jit, compiled
+             lazily once)
+          3  cached prefix blocks evicted back to the plain free list
+
+        Each rung climbed bumps ``degrade_events``."""
+        a = self.allocator
+        gcfg = self.scheduler.gcfg
+        if a is None or gcfg is None or not self.ecfg.guards:
+            return
+        pressure = 1.0 - len(a.free) / max(a.capacity, 1)
+        if pressure >= gcfg.degrade_pressure and self.degrade_level < 3:
+            self.degrade_level += 1
+            self.degrade_events += 1
+            if self.degrade_level >= 3:
+                a.drop_cached()
+        elif pressure <= gcfg.recover_pressure and self.degrade_level > 0:
+            self.degrade_level -= 1
+
     def step(self) -> bool:
-        """One engine iteration: admit waiting requests, decode one fused
-        block of ``decode_chunk`` tokens per active slot."""
+        """One engine iteration: expire deadlines, admit waiting requests,
+        decode one fused block of ``decode_chunk`` tokens per active slot.
+
+        Returns True while the engine still has work to drive — including
+        rounds where every runnable request is waiting out a retry backoff
+        (no decode dispatched, but ``run_all`` must keep stepping)."""
+        now = self._clock()
+        if self.faults is not None:
+            self.faults.on_step(self)
+        self.scheduler.expire_deadlines(now)
+        self._flush_releases()       # deadline-evicted slots → sink
         self.admit()
+        self._update_ladder()
         if not self.scheduler.active_slots():
-            return False
-        toks, valid, done = self.runner.decode_block(self.decode_params,
-                                                     self.draft_params)
-        self.scheduler.record_block(toks, valid, done)
+            return self.scheduler.has_deferred_work()
+        draft = None if self.degrade_level >= 1 else self.draft_params
+        if self.faults is not None and self.runner.detect_faults:
+            slots = self.faults.decode_site(self.scheduler.slot_req,
+                                            self.scheduler._round)
+            self.runner.set_poison(slots)
+        toks, valid, done, fault = self.runner.decode_block(
+            self.decode_params, draft, small_chunk=self.degrade_level >= 2)
+        self.scheduler.record_block(toks, valid, done, fault=fault)
         self._flush_releases()       # freed blocks must not be written again
         if self.scheduler.should_requant():
             self._requantize()

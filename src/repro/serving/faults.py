@@ -1,0 +1,242 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §12).
+
+This module is the engine's *designated fault boundary*: the one place in
+``serving/`` allowed to hold broad exception handlers (tracecheck TC406
+exempts it by name), because a bug in the injection harness itself must
+never take down the serving run it is probing.
+
+Faults are declarative: a :class:`Fault` names a **site** (a seam the
+engine already exposes), a site-local trigger index ``at``, a ``kind`` and
+a repeat ``count``.  The :class:`FaultInjector` holds a list of them plus
+an optional :class:`VirtualClock`, and the engine calls its hooks at fixed
+points of the serving loop — so a given (faults, seed, workload) triple
+replays bit-for-bit, and ``benchmarks/bench_robustness.py`` can assert the
+recovery-equality gate: *unaffected requests produce bitwise-identical
+greedy tokens to a fault-free run*.
+
+Sites and kinds:
+
+==================  ====================================================
+``calib.stats``     corrupt the admission-time calibration update before
+                    it reaches ``CalibrationSession.update``.  Kinds:
+                    ``nan`` / ``inf`` (non-finite stats), ``outlier``
+                    (scale by ``magnitude``), ``bad-tokens`` (zero token
+                    count), ``drop`` (skip the fold entirely — the clean
+                    twin used as the equality baseline).
+``requant.tree``    corrupt the candidate quantized tree between the
+                    fused requant dispatch and the health gate (float
+                    leaves → NaN).  Exercises retry-then-rollback.
+``pool.steal``      steal up to ``magnitude`` free KV-pool blocks for
+                    ``count`` engine steps (admission sees a full pool →
+                    bounded retries / preemption), then return them.
+``decode.logits``   poison the decode logits of the lane running request
+                    ``rid`` (all lanes when ``rid < 0``) for ``count``
+                    decode blocks — the runner's fault detector must fail
+                    only that lane.
+``clock.skew``      jump the virtual clock forward by ``magnitude``
+                    seconds at engine step ``at`` (deadline scenarios).
+==================  ====================================================
+
+No device placement happens here: stats/tree corruption is arithmetic on
+arrays the engine already owns, and lane poisoning only *selects slots* —
+the :class:`~repro.serving.runner.DeviceRunner` owns the device-side mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["Fault", "FaultInjector", "VirtualClock", "demo_injector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One declarative fault: fire at site-local index ``at`` (each site
+    keeps its own event counter), ``count`` consecutive times."""
+    site: str                 # calib.stats | requant.tree | pool.steal |
+                              # decode.logits | clock.skew
+    at: int = 0               # site-local trigger index
+    kind: str = ""            # site-specific (see module docstring)
+    rid: int = -1             # decode.logits: target request (-1 = all)
+    magnitude: float = 1e6    # outlier factor / blocks stolen / skew sec
+    count: int = 1            # consecutive triggers
+
+
+class VirtualClock:
+    """A monotonic clock the test harness owns.  The engine reads it via
+    ``FaultInjector.clock`` so deadline expiry replays deterministically;
+    ``tick`` advances it by a fixed step per engine iteration."""
+
+    def __init__(self, start: float = 0.0, tick: float = 0.0):
+        self.now = float(start)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float):
+        self.now += float(dt)
+
+
+def _nan_floats(tree):
+    """NaN-corrupt every floating leaf of a pytree (ints — packed codes,
+    block tables — keep dtype and value)."""
+    def leaf(x):
+        if hasattr(x, "dtype") and np.issubdtype(x.dtype, np.floating):
+            return x * float("nan")
+        return x
+    return jax.tree.map(leaf, tree)
+
+
+class FaultInjector:
+    """Replays a fault list against the engine's injection sites.
+
+    The engine wires the hooks itself when constructed with
+    ``TTQEngine(..., faults=injector)``: ``on_step`` runs at the top of
+    every :meth:`~repro.serving.engine.TTQEngine.step`, ``calib_site``
+    intercepts each admission-group stats fold, ``requant_hook`` each
+    candidate quantized tree, and ``decode_site`` picks the lanes to
+    poison before each decode block.  ``fired`` logs every injection as
+    ``(site, index, detail)`` so benchmarks can reconcile *injected*
+    against *detected* counts exactly.
+    """
+
+    def __init__(self, faults, clock: Optional[VirtualClock] = None):
+        self.faults: List[Fault] = list(faults)
+        self.clock = clock
+        self.fired: List[Tuple[str, int, str]] = []
+        self.errors: List[str] = []          # harness bugs, never re-raised
+        self._step_n = 0
+        self._calib_n = 0
+        self._requant_n = 0
+        self._decode_n = 0
+        self._decode_fired: Dict[int, int] = {}
+        self._stolen: List[Tuple[int, object, List[int]]] = []
+
+    # ------------------------------------------------------------ plumbing
+
+    def _active(self, site: str, n: int) -> Optional[Fault]:
+        for f in self.faults:
+            if f.site == site and f.at <= n < f.at + f.count:
+                return f
+        return None
+
+    def _log(self, f: Fault, n: int, detail: str = ""):
+        self.fired.append((f.site, n, detail or f.kind or str(f.rid)))
+
+    # ------------------------------------------------------- engine hooks
+
+    def on_step(self, engine):
+        """Step-indexed sites: clock skew and pool-block theft.  This is
+        the fault boundary proper — a harness bug is recorded and
+        swallowed so it cannot crash the serving loop it is probing."""
+        n = self._step_n
+        self._step_n += 1
+        try:
+            if self.clock is not None and self.clock.tick:
+                self.clock.advance(self.clock.tick)
+            f = self._active("clock.skew", n)
+            if f is not None and self.clock is not None:
+                self.clock.advance(f.magnitude)
+                self._log(f, n, f"+{f.magnitude}s")
+            self._pool_site(engine, n)
+        except Exception as e:          # tracecheck: ok[TC406]
+            self.errors.append(f"on_step[{n}]: {e!r}")
+
+    def _pool_site(self, engine, n: int):
+        a = getattr(engine, "allocator", None)
+        if a is None:
+            return
+        # return blocks whose theft window closed (before new theft so a
+        # back-to-back fault pair sees a consistent pool)
+        keep = []
+        for until, alloc, blocks in self._stolen:
+            if n >= until:
+                alloc.free.extend(blocks)
+            else:
+                keep.append((until, alloc, blocks))
+        self._stolen = keep
+        f = self._active("pool.steal", n)
+        if f is not None and n == f.at:      # steal once per fault window
+            take = min(int(f.magnitude), len(a.free))
+            blocks = [a.free.pop() for _ in range(take)]
+            self._stolen.append((f.at + f.count, a, blocks))
+            self._log(f, n, f"stole {take} blocks")
+
+    def calib_site(self, stats, tokens: int, rids: Tuple[int, ...]):
+        """Intercept one admission group's calibration fold; returns the
+        (possibly corrupted) ``(stats, tokens)`` — stats ``None`` means
+        the engine skips the fold (the clean-drop twin)."""
+        n = self._calib_n
+        self._calib_n += 1
+        f = self._active("calib.stats", n)
+        if f is None or stats is None:
+            return stats, tokens
+        self._log(f, n, f"{f.kind} rids={list(rids)}")
+        if f.kind == "drop":
+            return None, tokens
+        if f.kind == "nan":
+            return _nan_floats(stats), tokens
+        if f.kind == "inf":
+            return jax.tree.map(lambda x: x * float("inf"), stats), tokens
+        if f.kind == "outlier":
+            return jax.tree.map(lambda x: x * f.magnitude, stats), tokens
+        if f.kind == "bad-tokens":
+            return stats, 0
+        return stats, tokens
+
+    def requant_hook(self, tree):
+        """Corrupt a candidate quantized tree (float leaves → NaN) before
+        the health gate sees it.  Called once per fused-requant dispatch;
+        with ``count=1`` the gate's in-step retry rebuilds a clean tree."""
+        n = self._requant_n
+        self._requant_n += 1
+        f = self._active("requant.tree", n)
+        if f is None:
+            return tree
+        self._log(f, n, f.kind or "nan-scale")
+        return _nan_floats(tree)
+
+    def decode_site(self, slot_req, round_: int = 0) -> List[int]:
+        """Pick the slots to poison for the next decode block: lanes whose
+        request matches a live ``decode.logits`` fault.  Fires at most
+        ``count`` blocks per fault, and only once the target is actually
+        running — so the trigger is deterministic without the harness
+        having to predict admission timing."""
+        n = self._decode_n
+        self._decode_n += 1
+        slots: List[int] = []
+        for f in self.faults:
+            if f.site != "decode.logits" or n < f.at:
+                continue
+            done = self._decode_fired.get(id(f), 0)
+            if done >= f.count:
+                continue
+            hit = [s for s, r in enumerate(slot_req)
+                   if r is not None and (f.rid < 0 or r.rid == f.rid)]
+            if not hit:
+                continue
+            self._decode_fired[id(f)] = done + 1
+            self._log(f, n, f"slots={hit}")
+            slots.extend(hit)
+        return sorted(set(slots))
+
+
+def demo_injector(name: str) -> FaultInjector:
+    """Named single-fault injectors for ``launch/serve.py --inject`` and
+    quick interactive probing.  Benchmarks build their own fault lists."""
+    recipes = {
+        "nan-stats": [Fault("calib.stats", at=1, kind="nan")],
+        "outlier-stats": [Fault("calib.stats", at=1, kind="outlier",
+                                magnitude=1e6)],
+        "bad-requant": [Fault("requant.tree", at=0, kind="nan-scale")],
+        "pool-steal": [Fault("pool.steal", at=2, magnitude=4, count=3)],
+        "poison-lane": [Fault("decode.logits", at=0, rid=0)],
+    }
+    if name not in recipes:
+        raise ValueError(f"unknown fault recipe {name!r}; "
+                         f"choose from {sorted(recipes)}")
+    return FaultInjector(recipes[name])

@@ -100,6 +100,12 @@ class DeviceRunner:
         self.done = jnp.ones((B,), bool)        # empty slot = done lane
         self.remaining = jnp.zeros((B,), jnp.int32)
         self.host_syncs = 0                     # blocking device→host copies
+        # fault isolation (DESIGN.md §12): with guards on, decode checks
+        # per-step logit finiteness on device and reports a per-slot fault
+        # mask; the poison lane is the deterministic injection site
+        # (serving/faults.py) — all-False outside fault-injection runs
+        self.detect_faults = bool(getattr(ecfg, "guards", False))
+        self._poison = jnp.zeros((B,), bool) if self.detect_faults else None
         # device-resident constants so steady-state lane updates stay free of
         # implicit host→device transfers (jax.transfer_guard("disallow")
         # clean — see tests/test_runtime_guards.py)
@@ -120,6 +126,8 @@ class DeviceRunner:
                                       self._state_shardings)
             self._zero = jax.device_put(self._zero, self._rep)
             self._sink = jax.device_put(self._sink, self._rep)
+            if self._poison is not None:
+                self._poison = jax.device_put(self._poison, self._rep)
         else:
             self._state_shardings = None
             self._rep = None
@@ -127,13 +135,19 @@ class DeviceRunner:
         out_kw = {}
         if self._state_shardings is not None:
             rep = self._rep
-            out_kw["out_shardings"] = ((rep, rep),
+            ys = (rep, rep, rep) if self.detect_faults else (rep, rep)
+            out_kw["out_shardings"] = (ys,
                                        (self._state_shardings,
                                         rep, rep, rep, rep, rep))
+        self._out_kw = out_kw
         self._decode_jit = jax.jit(partial(
             lm.decode_many, cfg, pctx=pctx, kvcfg=kvcfg, kcfg=kncfg,
-            K=K, max_len=ML,
+            K=K, max_len=ML, detect_faults=self.detect_faults,
             temperature=ecfg.temperature, eos_token=ecfg.eos_token), **out_kw)
+        # degradation ladder rung 2 (DESIGN.md §12): a K=1 decode program,
+        # built lazily on the first degradation — small chunks bound the
+        # wasted-work exposure when the pool is starving
+        self._decode_small = None
         # self-speculative decode (DESIGN.md §11): K draft/verify windows of
         # W drafted tokens per dispatch; one program alongside decode_many —
         # the engine picks per block by passing (or not) a draft tree
@@ -142,7 +156,8 @@ class DeviceRunner:
         if W > 0:
             self._spec_jit = jax.jit(partial(
                 lm.speculate_many, cfg, pctx=pctx, kvcfg=kvcfg, kcfg=kncfg,
-                K=K, W=W, max_len=ML, eos_token=ecfg.eos_token), **out_kw)
+                K=K, W=W, max_len=ML, detect_faults=self.detect_faults,
+                eos_token=ecfg.eos_token), **out_kw)
         # acceptance telemetry (host math over the per-chunk token block)
         self.spec_windows = 0
         self.spec_drafted = 0
@@ -178,6 +193,8 @@ class DeviceRunner:
         self.done = jax.device_put(self.done, self._rep)
         self.remaining = jax.device_put(self.remaining, self._rep)
         self.key = jax.device_put(self.key, self._rep)
+        if self._poison is not None:
+            self._poison = jax.device_put(self._poison, self._rep)
 
     @property
     def compiled_programs(self) -> int:
@@ -191,7 +208,23 @@ class DeviceRunner:
              + _gather_prefix._cache_size())
         if self._spec_jit is not None:
             n += self._spec_jit._cache_size()
+        if self._decode_small is not None:
+            n += self._decode_small._cache_size()
         return n
+
+    def set_poison(self, slots):
+        """Arm the decode-logits fault-injection site: lanes in ``slots``
+        get NaN logits on every step of the next decode block
+        (``lm.decode_many``'s ``poison`` input — DESIGN.md §12).  Only
+        callable with guards on (the fault-detecting decode program); the
+        mask crosses via one explicit ``device_put``, so injection runs
+        stay transfer-guard clean."""
+        if self._poison is None:
+            raise RuntimeError("fault injection needs EngineConfig.guards")
+        mask_h = np.zeros((self.ecfg.max_slots,), bool)
+        mask_h[list(slots)] = True
+        self._poison = jax.device_put(mask_h) if self._rep is None \
+            else jax.device_put(mask_h, self._rep)
 
     # -------------------------------------------------------------- admission
 
@@ -345,7 +378,21 @@ class DeviceRunner:
 
     # ----------------------------------------------------------------- decode
 
-    def decode_block(self, params, draft_params=None):
+    def _small_decode_jit(self):
+        """Lazy K=1 decode program for degradation-ladder rung 2 — one
+        compile at the first degradation, cached (and counted) afterwards,
+        so an oscillating ladder never grows the jit caches."""
+        if self._decode_small is None:
+            ecfg = self.ecfg
+            self._decode_small = jax.jit(partial(
+                lm.decode_many, self.cfg, pctx=self.pctx, kvcfg=self.kvcfg,
+                kcfg=self.kncfg, K=1, max_len=ecfg.max_len,
+                detect_faults=self.detect_faults,
+                temperature=ecfg.temperature, eos_token=ecfg.eos_token),
+                **self._out_kw)
+        return self._decode_small
+
+    def decode_block(self, params, draft_params=None, small_chunk=False):
         """Run one fused decode dispatch over every slot.
 
         Default: ``decode_chunk`` scanned decode steps (``lm.decode_many``).
@@ -354,23 +401,40 @@ class DeviceRunner:
         windows of ``speculate_k`` drafted tokens each (DESIGN.md §11), so
         the block widens to ``K·(speculate_k+1)`` candidate columns with the
         per-window acceptance length folded into ``valid``.
+        ``small_chunk`` (degradation-ladder rung 2, DESIGN.md §12) swaps in
+        the K=1 program; the engine only sets it after it has already
+        dropped speculation (rung 1), so the two flags never combine.
 
-        Returns host copies ``(tokens (B, cols), valid (B, cols),
-        done (B,))`` — one blocking transfer for the whole block either way.
+        Returns host copies ``(tokens (B, cols), valid (B, cols), done (B,),
+        fault (B,) | None)`` — one blocking transfer for the whole block
+        either way; ``fault`` is None with guards off and marks lanes whose
+        logits went non-finite otherwise (the lane emitted nothing from the
+        faulting step on — the scheduler fails just that request).
         """
-        if draft_params is not None and self._spec_jit is not None:
-            (toks, valid), carry = self._spec_jit(
-                draft_params, params, self.state, self.cur_tok, self.pos,
-                self.done, self.remaining, self.key)
+        spec = draft_params is not None and self._spec_jit is not None \
+            and not small_chunk
+        if spec:
+            args = (draft_params, params, self.state, self.cur_tok, self.pos,
+                    self.done, self.remaining, self.key)
+            fn = self._spec_jit
         else:
-            (toks, valid), carry = self._decode_jit(
-                params, self.state, self.cur_tok, self.pos, self.done,
-                self.remaining, self.key)
+            fn = self._small_decode_jit() if small_chunk else self._decode_jit
+            args = (params, self.state, self.cur_tok, self.pos, self.done,
+                    self.remaining, self.key)
+        if self.detect_faults:
+            (toks, valid, fault), carry = fn(*args, self._poison)
+        else:
+            (toks, valid), carry = fn(*args)
+            fault = None
         (self.state, self.cur_tok, self.pos, self.done, self.remaining,
          self.key) = carry
         self.host_syncs += 1
-        out = jax.device_get((toks, valid, self.done))
-        if draft_params is not None and self._spec_jit is not None:
+        fetch = ((toks, valid, self.done) if fault is None
+                 else (toks, valid, self.done, fault))
+        out = jax.device_get(fetch)              # the ONE designed sync/chunk
+        if fault is None:
+            out = out + (None,)
+        if spec:
             W = self.ecfg.speculate_k
             v = np.asarray(out[1]).reshape(out[1].shape[0], -1, W + 1)
             live = v[:, :, 0]                     # a live window always emits

@@ -62,6 +62,12 @@ class Request:
     prefix_len: int = 0             # paged: cached-prefix tokens this admission
     admit_seq: int = -1             # admission order (preemption victim pick)
     orig_len: int = 0               # submitted prompt length (pre-preemption)
+    # ---- isolation / deadlines (DESIGN.md §12) ----
+    deadline_s: float = 0.0         # wall budget from submit (0 = none)
+    submit_t: float = 0.0           # engine-clock submission time
+    error: str = ""                 # terminal failure reason ("" = none)
+    attempts: int = 0               # decode-fault retries consumed
+    not_before: int = 0             # planning round gating a retry (backoff)
 
     def __post_init__(self):
         if not self.orig_len:
@@ -75,14 +81,17 @@ class Request:
 class GenResult(list):
     """A request's generated tokens.  Compares and prints as a plain list;
     ``unfinished`` marks a partial output (the engine stopped at
-    ``max_iters`` with the request still queued or mid-generation, or the
-    request was cancelled — ``cancelled`` distinguishes the latter)."""
+    ``max_iters`` with the request still queued or mid-generation, the
+    request was cancelled — ``cancelled`` distinguishes that — or it failed
+    terminally, in which case ``error`` carries the reason: "deadline",
+    "non-finite logits", "admission retries exhausted")."""
 
     def __init__(self, tokens=(), unfinished: bool = False,
-                 cancelled: bool = False):
+                 cancelled: bool = False, error: str = ""):
         super().__init__(tokens)
         self.unfinished = unfinished
         self.cancelled = cancelled
+        self.error = error
 
 
 @dataclasses.dataclass
@@ -126,6 +135,16 @@ class Scheduler:
         self.preemptions = 0
         self.pending_releases: List[int] = []   # slots to sink on device
         self._recent_victims: set = set()       # no re-preemption until decode
+        # isolation / robustness counters (DESIGN.md §12).  The guard knobs
+        # (retry budget, admission-attempt cap) apply regardless of
+        # EngineConfig.guards — the flag gates *detection* machinery, not
+        # plain bookkeeping like capping a retry loop.
+        self.gcfg = getattr(ecfg, "guard_cfg", None)
+        self.lane_faults = 0            # decode lanes failed on bad logits
+        self.deadline_expirations = 0
+        self.admission_failures = 0     # requests failed at the attempt cap
+        self._round = 0                 # planning rounds (retry backoff unit)
+        self._starve: Dict[int, int] = {}   # rid → idle-starved rounds
 
     # ---------------------------------------------------------------- intake
 
@@ -137,7 +156,8 @@ class Scheduler:
             return self.ecfg.max_len
         return min(max(self.ecfg.prompt_buckets), self.ecfg.max_len)
 
-    def submit(self, prompt, max_new: int = 16, frames=None) -> int:
+    def submit(self, prompt, max_new: int = 16, frames=None,
+               deadline_s: Optional[float] = None, now: float = 0.0) -> int:
         prompt = list(prompt)
         limit = self.max_prompt_len
         if len(prompt) > limit:
@@ -158,7 +178,10 @@ class Scheduler:
                     f"{self.allocator.capacity}; raise kv_pool_blocks or "
                     f"shrink the prompt/max_new")
         rid = next(self._rid)
-        self.queue.append(Request(rid, prompt, max_new, frames=frames))
+        dl = float(getattr(self.ecfg, "deadline_s", 0.0)
+                   if deadline_s is None else deadline_s)
+        self.queue.append(Request(rid, prompt, max_new, frames=frames,
+                                  deadline_s=dl, submit_t=float(now)))
         return rid
 
     # ------------------------------------------------------------- admission
@@ -181,6 +204,68 @@ class Scheduler:
         # beyond the largest bucket: only reachable by preemption-resumed
         # prompts (submit() rejects external ones) — pad to max_len
         return self.ecfg.max_len
+
+    # ----------------------------------------------- isolation (DESIGN.md §12)
+
+    def _evict(self, slot: int, req: Request, finished: bool):
+        """Shared failure-path eviction: clear the slot, free (paged)
+        blocks, queue the device release; optionally land in finished."""
+        self.slot_req[slot] = None
+        if self.allocator is not None:
+            self.allocator.free_request(req.blocks)
+            req.blocks = []
+        self.pending_releases.append(slot)
+        if finished:
+            self.finished[req.rid] = req
+
+    def fail_lane(self, slot: int, reason: str):
+        """A decode lane went bad (non-finite logits): fail ONLY this
+        request — slot recycled, blocks released, the rest of the batch
+        untouched.  Within the retry budget the request requeues from its
+        original prompt with exponential backoff in planning rounds (the
+        fault may be load-coupled — give the batch time to drain); past it
+        the request finishes with ``error=reason``."""
+        req = self.slot_req[slot]
+        self.lane_faults += 1
+        max_retries = self.gcfg.max_retries if self.gcfg is not None else 0
+        if req.attempts < max_retries:
+            req.attempts += 1
+            self._evict(slot, req, finished=False)
+            req.prompt = list(req.prompt[:req.orig_len])
+            req.out = []
+            req.prefix_len = 0
+            req.not_before = self._round + (1 << req.attempts)
+            self.queue.append(req)
+        else:
+            req.error = reason
+            self._evict(slot, req, finished=True)
+
+    def expire_deadlines(self, now: float):
+        """Fail queued and running requests past their ``deadline_s`` (no
+        retry — the clock that expired them keeps running).  Running
+        requests keep their partial output."""
+        for req in [r for r in self.queue
+                    if r.deadline_s > 0 and now - r.submit_t > r.deadline_s]:
+            self.queue.remove(req)
+            req.error = "deadline"
+            self.finished[req.rid] = req
+            self.deadline_expirations += 1
+        for slot, req in enumerate(self.slot_req):
+            if (req is not None and req.deadline_s > 0
+                    and now - req.submit_t > req.deadline_s):
+                req.error = "deadline"
+                self._evict(slot, req, finished=True)
+                self.deadline_expirations += 1
+
+    def has_deferred_work(self) -> bool:
+        """Queued work the engine must keep stepping for even though no
+        lane is active: retries whose backoff round has not arrived, and
+        requests waiting out a *transient* pool starvation (idle lanes +
+        an allocation that keeps failing — e.g. injected exhaustion).
+        Both are bounded: backoff by the retry budget, starvation by the
+        admission-attempt cap — so ``run_all`` can never spin forever."""
+        return (any(r.not_before > self._round for r in self.queue)
+                or any(r.rid in self._starve for r in self.queue))
 
     # ------------------------------------------------------------ preemption
 
@@ -220,27 +305,66 @@ class Scheduler:
         admission) instead of stalling; victims are held out of the queue
         until planning ends, then requeued at the front — they resume via
         re-prefill (their own blocks stay prefix-cached), never in the same
-        round they were evicted."""
+        round they were evicted.
+
+        The MemoryError→preempt→retry loop is bounded per request per round
+        (``guard_cfg.max_admission_attempts``, lifted to at least
+        ``max_slots + 1`` so a legitimate chain that preempts every running
+        slot still fits): a pathological allocation — one that keeps
+        raising after its victims freed their blocks — fails the request
+        cleanly (``error="admission retries exhausted"``) instead of
+        spinning planning forever.  Requests whose retry backoff round has
+        not arrived (``not_before``) are skipped, not popped."""
+        self._round += 1
+        cap = self.gcfg.max_admission_attempts if self.gcfg is not None else 8
+        cap = max(cap, self.ecfg.max_slots + 1)
+        attempts: Dict[int, int] = {}
         picked: List[tuple] = []
         victims: List[Request] = []
         free = self.free_slots()
-        while free and self.queue:
-            req = self.queue[0]
+        while free:
+            req = next((r for r in self.queue
+                        if r.not_before <= self._round), None)
+            if req is None:
+                break
             if self.allocator is not None:
                 try:
                     req.blocks, req.prefix_len = self.allocator.allocate(
                         req.prompt, req.remaining, self.ecfg.max_len)
                 except MemoryError:
+                    attempts[req.rid] = attempts.get(req.rid, 0) + 1
+                    if attempts[req.rid] >= cap:
+                        self.queue.remove(req)
+                        self._starve.pop(req.rid, None)
+                        req.error = "admission retries exhausted"
+                        self.finished[req.rid] = req
+                        self.admission_failures += 1
+                        continue            # next eligible request
                     victim = self._pick_victim(
                         exclude={s for s, _ in picked})
                     # a fresh victim may not preempt in turn until decode
                     # has progressed — breaks admit-round ping-pong cycles
                     if victim is None or req.rid in self._recent_victims:
+                        if not self.active_slots() and not picked:
+                            # idle starvation: the pool is short with no
+                            # lane running to free it (transient theft or
+                            # a leak).  Wait a bounded number of rounds —
+                            # has_deferred_work() keeps the engine
+                            # stepping — then fail the request cleanly.
+                            n = self._starve.get(req.rid, 0) + 1
+                            self._starve[req.rid] = n
+                            if n >= cap:
+                                self.queue.remove(req)
+                                self._starve.pop(req.rid, None)
+                                req.error = "admission retries exhausted"
+                                self.finished[req.rid] = req
+                                self.admission_failures += 1
                         break               # nothing evictable — wait
                     victims.append(self._preempt(victim))
                     free = self.free_slots()
                     continue                # retry with the freed blocks
-            self.queue.popleft()
+            self._starve.pop(req.rid, None)
+            self.queue.remove(req)
             req.admit_seq = next(self._admit_seq)
             slot = free.pop(0)
             self.slot_req[slot] = req       # claimed now: a preemption later
@@ -324,15 +448,22 @@ class Scheduler:
                 return True
         return False
 
-    def record_block(self, tokens, valid, done) -> int:
+    def record_block(self, tokens, valid, done, fault=None) -> int:
         """Fold one decode block's host copies into per-request outputs.
 
-        ``tokens``/``valid``: (B, K) host arrays; ``done``: (B,) final flags.
+        ``tokens``/``valid``: (B, K) host arrays; ``done``: (B,) final
+        flags; ``fault``: optional (B,) lane-fault flags from the guarded
+        decode (DESIGN.md §12) — a faulted lane's block is discarded
+        wholesale (its logits are suspect from the start of the block) and
+        the request fails alone via :meth:`fail_lane`.
         Returns the number of accepted tokens (token-budget cadence)."""
         accepted = 0
         K = tokens.shape[1]
         for slot in self.active_slots():
             req = self.slot_req[slot]
+            if fault is not None and fault[slot]:
+                self.fail_lane(slot, "non-finite logits")
+                continue
             for k in range(K):
                 if valid[slot, k]:
                     req.out.append(int(tokens[slot, k]))
@@ -346,8 +477,9 @@ class Scheduler:
         """Finished outputs, plus (by default) in-flight/queued partials
         flagged ``unfinished=True`` — nothing submitted is silently dropped.
         Cancelled requests report their partial output with both flags."""
-        out = {rid: GenResult(req.out, unfinished=req.cancelled,
-                              cancelled=req.cancelled)
+        out = {rid: GenResult(req.out,
+                              unfinished=req.cancelled or bool(req.error),
+                              cancelled=req.cancelled, error=req.error)
                for rid, req in self.finished.items()}
         if include_partials:
             pending = [r for r in self.slot_req if r is not None]

@@ -116,6 +116,20 @@ def test_session_merge_is_sum():
         np.asarray(e.stats["stack"][0]["u0.mix.wq"]), 1.0)
 
 
+def test_session_merge_halflife_mismatch_raises():
+    """Stats under different decay schedules are weighted incompatibly —
+    summing them silently misweights one stream, so merge refuses."""
+    a = CalibrationSession(halflife=4.0).update(_fake_stats(1.0), 4)
+    b = CalibrationSession(halflife=8.0).update(_fake_stats(1.0), 4)
+    with pytest.raises(ValueError, match="halflives"):
+        a.merge(b)
+    with pytest.raises(ValueError, match="halflives"):
+        CalibrationSession(halflife=0.0).merge(b)
+    # matching halflives still merge fine
+    m = a.merge(CalibrationSession(halflife=4.0).update(_fake_stats(2.0), 2))
+    assert m.halflife == 4.0 and m.count == 6
+
+
 def test_session_snapshot_isolated_from_updates():
     s = CalibrationSession().update(_fake_stats(1.0), 1)
     snap = s.snapshot()

@@ -1,0 +1,434 @@
+"""Fault tolerance (DESIGN.md §12): calibration-poisoning defense, the
+requant health gate, request isolation with deadlines, and the seeded
+fault-injection harness.
+
+Unit layers first (session guard, qt health gate, the guarded
+``decode_many`` program), then engine-level scenarios driven through
+``serving/faults.py`` — the same injector the robustness bench uses, at
+test-sized workloads.  The bitwise recovery-equality gates live in
+``benchmarks/bench_robustness.py``; here the focus is each mechanism's
+contract: rejected updates never fold, rejected trees never swap, a faulted
+lane fails alone, expired requests fail with ``error == "deadline"``, and
+nothing leaks blocks (``assert_quiescent``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NO_QUANT, ttq_policy
+from repro.models import ModelConfig, lm
+from repro.quant import (CalibrationSession, GuardConfig, QuantizedModel,
+                         QuarantineRecord)
+from repro.serving import (EngineConfig, Fault, FaultInjector, TTQEngine,
+                           VirtualClock)
+from repro.serving.faults import demo_injector
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+GUARD = GuardConfig()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _stats(scale=1.0):
+    return {"w": jnp.full((8,), float(scale), jnp.float32)}
+
+
+# --------------------------------------------------- calibration-session guard
+
+
+def test_session_rejects_nonfinite_stats():
+    s = CalibrationSession(guard=GUARD)
+    s.update(_stats(1.0), tokens=4)
+    s.update(_stats(float("nan")), tokens=4, provenance=(7, 9))
+    assert s.n_updates == 1 and s.n_rejected == 1
+    rec = s.quarantine[-1]
+    assert isinstance(rec, QuarantineRecord)
+    assert rec.reason == "non-finite-stats"
+    assert rec.provenance == (7, 9)
+    # the poisoned update left the running stats untouched
+    assert bool(jnp.isfinite(s.stats["w"]).all())
+    s.update(_stats(float("inf")), tokens=4)
+    assert s.n_rejected == 2 and s.count == 4.0
+
+
+def test_session_rejects_bad_token_count():
+    s = CalibrationSession(guard=GUARD)
+    for bad in (0, -3, float("nan")):
+        s.update(_stats(), tokens=bad)
+    assert s.n_updates == 0 and s.n_rejected == 3
+    assert all(r.reason == "bad-token-count" for r in s.quarantine)
+
+
+def test_session_outlier_gate_arms_after_warmup():
+    s = CalibrationSession(guard=GUARD)
+    s.update(_stats(1.0), tokens=4)            # warmup: defines the scale
+    s.update(_stats(1e6), tokens=4)            # 1e6x the running rate
+    assert s.n_rejected == 1
+    assert s.quarantine[-1].reason == "outlier-stats"
+    s.update(_stats(2.0), tokens=4)            # in-family: accepted
+    assert s.n_updates == 2 and s.n_rejected == 1
+
+
+def test_session_outlier_gate_respects_warmup_window():
+    g = GuardConfig(calib_warmup_updates=3)
+    s = CalibrationSession(guard=g)
+    for scale in (1.0, 50.0, 0.1):             # within warmup: all accepted
+        s.update(_stats(scale), tokens=4)
+    assert s.n_updates == 3 and s.n_rejected == 0
+
+
+def test_session_rollback_ring_bounded():
+    g = GuardConfig(snapshot_ring=2)
+    s = CalibrationSession(guard=g)
+    for i in range(4):
+        s.update(_stats(1.0), tokens=2)
+    assert s.n_updates == 4
+    assert s.rollback(5) == 2                  # ring holds only the last 2
+    assert s.n_updates == 2 and s.count == 4.0
+    assert s.rollback() == 0                   # drained
+
+
+def test_unguarded_session_behaves_as_before():
+    s = CalibrationSession()
+    s.update(_stats(float("nan")), tokens=4)   # no guard: folds verbatim
+    assert s.n_updates == 1 and s.n_rejected == 0
+    assert s.rollback() == 0                   # no ring without a guard
+
+
+def test_quarantine_log_bounded():
+    g = GuardConfig(quarantine_max=3)
+    s = CalibrationSession(guard=g)
+    for _ in range(6):
+        s.update(_stats(), tokens=0)
+    assert s.n_rejected == 6 and len(s.quarantine) == 3
+
+
+# ------------------------------------------------------- requant health gate
+
+
+def _nan_tree(tree):
+    def leaf(x):
+        if hasattr(x, "dtype") and np.issubdtype(x.dtype, np.floating):
+            return x * float("nan")
+        return x
+    return jax.tree.map(leaf, tree)
+
+
+def _prefill_stats(params):
+    toks = jnp.asarray([[5, 9, 17, 3]], jnp.int32)
+    _, _, stats = lm.prefill(CFG, params, {"tokens": toks}, max_len=32)
+    return stats
+
+
+def test_health_gate_blocks_sustained_corruption(params):
+    qm = QuantizedModel(params, ttq_policy(bits=8, group_size=32, rank=0),
+                        session=CalibrationSession(guard=GUARD),
+                        health_gate=GUARD)
+    qm.calibrate(_prefill_stats(params), tokens=4.0)
+    qm._fault_hook = _nan_tree                 # every candidate corrupted
+    assert qm.requantize() is None
+    assert qm.requant_rejections == 2          # first try + the clean retry
+    assert qm.n_requants == 0                  # cadence re-arms
+    # the suspect calibration update was rolled back and nothing swapped
+    assert qm.session.n_updates == 0
+    assert qm.decode_params is params
+    # clean recovery on the next cycle
+    qm._fault_hook = None
+    qm.calibrate(_prefill_stats(params), tokens=4.0)
+    assert qm.requantize() is not None
+    assert qm.n_requants == 1
+
+
+def test_health_gate_transient_corruption_retries_in_step(params):
+    qm = QuantizedModel(params, ttq_policy(bits=8, group_size=32, rank=0),
+                        session=CalibrationSession(guard=GUARD),
+                        health_gate=GUARD)
+    qm.calibrate(_prefill_stats(params), tokens=4.0)
+    calls = {"n": 0}
+
+    def once(tree):
+        calls["n"] += 1
+        return _nan_tree(tree) if calls["n"] == 1 else tree
+
+    qm._fault_hook = once
+    tree = qm.requantize()                     # reject → immediate clean retry
+    assert tree is not None
+    assert qm.requant_rejections == 1
+    assert qm.session.n_updates == 1           # nothing rolled back
+
+
+def test_health_gate_off_keeps_legacy_behavior(params):
+    qm = QuantizedModel(params, ttq_policy(bits=8, group_size=32, rank=0))
+    qm.calibrate(_prefill_stats(params), tokens=4.0)
+    qm._fault_hook = _nan_tree
+    tree = qm.requantize()                     # ungated: corruption passes
+    assert tree is not None and qm.requant_rejections == 0
+
+
+# ------------------------------------------------- guarded decode_many program
+
+
+def test_decode_many_detect_faults_isolates_lane(params):
+    from functools import partial
+
+    toks = jnp.asarray([[5, 9, 17, 3], [100, 50, 25, 12]], jnp.int32)
+    _, state, _ = lm.prefill(CFG, params, {"tokens": toks}, max_len=32)
+    tok0 = jnp.full((2, 1), 7, jnp.int32)
+    pos0 = jnp.asarray([4, 4], jnp.int32)
+    done0 = jnp.zeros((2,), bool)
+    budget = jnp.full((2,), 100, jnp.int32)
+    key = jax.random.PRNGKey(1)
+    fn = jax.jit(partial(lm.decode_many, CFG, K=4, max_len=32,
+                         detect_faults=True))
+    clean = jnp.zeros((2,), bool)
+    (t0_, v0, f0), _ = fn(params, state, tok0, pos0, done0, budget, key,
+                          clean)
+    assert not bool(f0.any()) and bool(v0.all())
+    poison = jnp.asarray([False, True])
+    (t1, v1, f1), carry = fn(params, state, tok0, pos0, done0, budget, key,
+                             poison)
+    f1, v1 = jax.device_get((f1, v1))
+    assert list(f1) == [False, True]           # only the poisoned lane
+    assert not v1[1].any()                     # it emitted nothing valid
+    np.testing.assert_array_equal(np.asarray(t1)[0], np.asarray(t0_)[0])
+    assert bool(carry[3][1])                   # done flag set for the lane
+
+
+def test_decode_many_poison_none_matches_legacy(params):
+    """poison=None keeps the original two-output program — the guarded
+    signature is a strict extension."""
+    from functools import partial
+
+    toks = jnp.asarray([[5, 9, 17, 3]], jnp.int32)
+    _, state, _ = lm.prefill(CFG, params, {"tokens": toks}, max_len=32)
+    args = (jnp.full((1, 1), 7, jnp.int32), jnp.asarray([4], jnp.int32),
+            jnp.zeros((1,), bool), jnp.full((1,), 100, jnp.int32),
+            jax.random.PRNGKey(1))
+    legacy = jax.jit(partial(lm.decode_many, CFG, K=4, max_len=32))
+    ys, _ = legacy(params, state, *args)
+    assert len(ys) == 2                        # (tokens, valid) — no fault row
+
+
+# ----------------------------------------------------- engine-level scenarios
+
+
+def _engine(params, policy=NO_QUANT, faults=(), clock=None, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("decode_chunk", 2)
+    return TTQEngine(CFG, params, policy, EngineConfig(**kw),
+                     faults=FaultInjector(faults, clock=clock))
+
+
+PROMPTS = [[5, 9, 17, 3], [8, 8, 1], [100, 50, 25, 12], [7, 7, 7, 2]]
+
+
+def test_lane_fault_retries_and_recovers(params):
+    eng = _engine(params, faults=[Fault("decode.logits", rid=1, count=1)])
+    ref = _engine(params)
+    rids = [eng.submit(p, max_new=6) for p in PROMPTS[:2]]
+    refs = [ref.submit(p, max_new=6) for p in PROMPTS[:2]]
+    out, exp = eng.run_all(), ref.run_all()
+    assert eng.lane_faults == 1
+    for r, e in zip(rids, refs):
+        assert list(out[r]) == list(exp[e]) and not out[r].error
+
+
+def test_lane_fault_without_retry_fails_alone(params):
+    eng = _engine(params, faults=[Fault("decode.logits", rid=1, count=1)],
+                  guard_cfg=GuardConfig(max_retries=0))
+    ref = _engine(params)
+    rids = [eng.submit(p, max_new=6) for p in PROMPTS[:2]]
+    refs = [ref.submit(p, max_new=6) for p in PROMPTS[:2]]
+    out, exp = eng.run_all(), ref.run_all()
+    assert out[rids[1]].error == "non-finite logits"
+    assert out[rids[1]].unfinished
+    assert list(out[rids[0]]) == list(exp[refs[0]])   # neighbor untouched
+
+
+def test_lane_fault_releases_blocks(params):
+    eng = _engine(params, faults=[Fault("decode.logits", rid=0, count=1)],
+                  guard_cfg=GuardConfig(max_retries=0),
+                  kv_dtype="int8", kv_paged=True, kv_block_size=16)
+    eng.submit(PROMPTS[0], max_new=6)
+    eng.run_all()
+    eng.allocator.assert_quiescent()
+
+
+def test_deadline_expires_running_request(params):
+    clk = VirtualClock()
+    eng = _engine(params, faults=[Fault("clock.skew", at=2, magnitude=5.0)],
+                  clock=clk)
+    r0 = eng.submit(PROMPTS[0], max_new=20)            # no deadline
+    r1 = eng.submit(PROMPTS[1], max_new=20, deadline_s=1.0)
+    out = eng.run_all()
+    assert eng.deadline_expirations == 1
+    assert out[r1].error == "deadline" and out[r1].unfinished
+    assert len(out[r1]) > 0                            # partial output kept
+    assert len(out[r0]) == 20 and not out[r0].error
+    if eng.allocator is not None:
+        eng.allocator.assert_quiescent()
+
+
+def test_deadline_expires_queued_request(params):
+    clk = VirtualClock()
+    eng = _engine(params, faults=[Fault("clock.skew", at=1, magnitude=5.0)],
+                  clock=clk, max_slots=1)
+    r0 = eng.submit(PROMPTS[0], max_new=12)
+    r1 = eng.submit(PROMPTS[1], max_new=12, deadline_s=1.0)  # waits in queue
+    out = eng.run_all()
+    assert out[r1].error == "deadline" and list(out[r1]) == []
+    assert len(out[r0]) == 12
+
+
+def test_engine_default_deadline_from_config(params):
+    clk = VirtualClock(tick=1.0)
+    eng = _engine(params, clock=clk, deadline_s=2.5)
+    r0 = eng.submit(PROMPTS[0], max_new=50)
+    out = eng.run_all()
+    assert out[r0].error == "deadline"
+    assert eng.deadline_expirations == 1
+
+
+def test_admission_retry_cap_fails_cleanly(params):
+    """Satellite: the MemoryError→retry loop is bounded.  Blocks stolen for
+    longer than the attempt cap → the queued request fails with a clean
+    error instead of spinning the planner forever."""
+    inj = FaultInjector([Fault("pool.steal", at=0, magnitude=64, count=500)])
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=1, max_len=64, decode_chunk=2,
+                                 kv_dtype="int8", kv_paged=True,
+                                 kv_block_size=16,
+                                 guard_cfg=GuardConfig(
+                                     max_admission_attempts=4)),
+                    faults=inj)
+    rid = eng.submit(PROMPTS[0], max_new=4)
+    out = eng.run_all()
+    assert out[rid].error == "admission retries exhausted"
+    assert eng.admission_failures == 1
+    # hand the stolen blocks back; the pool must reconcile exactly
+    for _, alloc, blocks in inj._stolen:
+        alloc.free.extend(blocks)
+    inj._stolen.clear()
+    eng.allocator.assert_quiescent()
+
+
+def test_degradation_ladder_climbs_and_tokens_unchanged(params):
+    """Sustained pool pressure climbs the ladder (speculation off → K=1
+    chunks → cached-prefix eviction) — all token-preserving degradations,
+    so outputs match an unpressured engine bitwise."""
+    gcfg = GuardConfig(degrade_pressure=0.2, recover_pressure=0.05)
+    eng = _engine(params, guard_cfg=gcfg, kv_dtype="int8", kv_paged=True,
+                  kv_block_size=16)
+    ref = _engine(params, kv_dtype="int8", kv_paged=True, kv_block_size=16)
+    rids = [eng.submit(p, max_new=8) for p in PROMPTS]
+    refs = [ref.submit(p, max_new=8) for p in PROMPTS]
+    out, exp = eng.run_all(), ref.run_all()
+    assert eng.degrade_events > 0
+    assert eng.runner._decode_small is not None        # K=1 program built
+    for r, e in zip(rids, refs):
+        assert list(out[r]) == list(exp[e])
+    eng.allocator.assert_quiescent()
+
+
+def test_drop_cached_reclaims_prefix_blocks(params):
+    eng = _engine(params, kv_dtype="int8", kv_paged=True, kv_block_size=16,
+                  prefix_cache=True)
+    sysp = list(range(1, 33))                          # two full blocks
+    eng.submit(sysp + [40], max_new=2)
+    eng.run_all()
+    a = eng.allocator
+    assert len(a.cached) > 0
+    n = a.drop_cached()
+    assert n > 0 and len(a.cached) == 0 and len(a.trie) == 0
+    a.assert_quiescent()
+    # dropped blocks are plain-free again: a new admission reuses them
+    eng.submit(sysp + [41], max_new=2)
+    eng.run_all()
+    a.assert_quiescent()
+
+
+def test_guards_off_restores_preguard_engine(params):
+    """guards=False: no detection program, no poison lane, counters dark —
+    and the injector's decode site is never consulted."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=2, max_len=64, decode_chunk=2,
+                                 guards=False),
+                    faults=FaultInjector([Fault("decode.logits", rid=0)]))
+    assert not eng.runner.detect_faults and eng.runner._poison is None
+    rid = eng.submit(PROMPTS[0], max_new=6)
+    out = eng.run_all()
+    assert list(out[rid]) and not out[rid].error
+    assert eng.lane_faults == 0
+    with pytest.raises(RuntimeError):
+        eng.runner.set_poison([0])
+
+
+# ----------------------------------------------- cancel: no-op-safe, leak-free
+
+
+def test_cancel_queued_request_is_leak_free(params):
+    eng = _engine(params, max_slots=1, kv_dtype="int8", kv_paged=True,
+                  kv_block_size=16)
+    r0 = eng.submit(PROMPTS[0], max_new=4)
+    r1 = eng.submit(PROMPTS[1], max_new=4)             # still queued
+    assert eng.cancel(r1) is True
+    out = eng.run_all()
+    assert out[r1].cancelled and list(out[r1]) == []
+    assert len(out[r0]) == 4
+    eng.allocator.assert_quiescent()
+
+
+def test_cancel_after_finish_is_noop(params):
+    eng = _engine(params, kv_dtype="int8", kv_paged=True, kv_block_size=16)
+    r0 = eng.submit(PROMPTS[0], max_new=4)
+    out = eng.run_all()
+    tokens = list(out[r0])
+    assert eng.cancel(r0) is False                     # already finished
+    assert eng.cancel(10_000) is False                 # unknown rid
+    res = eng.scheduler.results()[r0]
+    assert list(res) == tokens and not res.cancelled
+    eng.allocator.assert_quiescent()
+
+
+# ------------------------------------------------------------ injector harness
+
+
+def test_injector_is_deterministic(params):
+    def run():
+        eng = _engine(params,
+                      faults=[Fault("decode.logits", rid=1, count=1)])
+        rids = [eng.submit(p, max_new=6) for p in PROMPTS[:2]]
+        out = eng.run_all()
+        return [list(out[r]) for r in rids], eng.faults.fired
+
+    (o1, f1), (o2, f2) = run(), run()
+    assert o1 == o2 and f1 == f2
+
+
+def test_injector_swallows_harness_bugs(params):
+    class BadClock(VirtualClock):
+        def advance(self, dt):
+            raise RuntimeError("broken harness")
+
+    inj = FaultInjector([Fault("clock.skew", at=0, magnitude=1.0)],
+                        clock=BadClock())
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    EngineConfig(max_slots=1, max_len=64, decode_chunk=2),
+                    faults=inj)
+    rid = eng.submit(PROMPTS[0], max_new=4)
+    out = eng.run_all()
+    assert list(out[rid]) and not out[rid].error       # serving unharmed
+    assert inj.errors and "broken harness" in inj.errors[0]
+
+
+def test_demo_injector_recipes():
+    inj = demo_injector("nan-stats")
+    assert inj.faults[0].site == "calib.stats"
+    with pytest.raises(ValueError):
+        demo_injector("nonsense")

@@ -98,6 +98,45 @@ def test_decode_many_direct_under_transfer_guard(params):
     np.testing.assert_array_equal(host[1], ref[1])
 
 
+def test_guarded_decode_with_lane_fault_under_transfer_guard(params):
+    """The fault-detection machinery (poison mask, per-lane isfinite flag,
+    its device_get) is transfer-clean: a lane poisoned MID-LOOP under
+    ``transfer_guard("disallow")`` fails alone — explicit ``set_poison``
+    placement and the widened decode fetch raise nothing, the surviving
+    lanes' tokens match the unguarded fault-free engine, and the fault
+    wave compiles zero new programs after warmup."""
+    from repro.quant import GuardConfig
+    from repro.serving import Fault, FaultInjector
+
+    def make(faults=()):
+        # max_retries=0: the faulted lane must fail terminally, because a
+        # retry would re-admit (prompt staging — the sanctioned boundary
+        # crossing) inside the guarded region
+        return TTQEngine(CFG, params, NO_QUANT, EngineConfig(
+            max_slots=len(PROMPTS), max_len=64, decode_chunk=2,
+            kv_dtype="int8", kv_paged=True, kv_block_size=16,
+            guard_cfg=GuardConfig(max_retries=0)),
+            faults=FaultInjector(faults))
+
+    eng = make([Fault("decode.logits", rid=2, at=1, count=1)])
+    rids = [eng.submit(p, max_new=b) for p, b in zip(PROMPTS, BUDGETS)]
+    assert eng.step()                    # admission + first block: compiles
+    warm = eng.compiled_programs
+    with jax.transfer_guard("disallow"):
+        while eng.scheduler.has_work():
+            if not eng.step():
+                break
+    assert eng.compiled_programs == warm
+    assert eng.lane_faults == 1
+    out = eng.scheduler.results()
+    assert out[rids[2]].error == "non-finite logits"
+    plain = _serve(make(), guard=False)
+    for i, r in enumerate(rids):
+        if i != 2:
+            assert list(out[r]) == plain[i]
+    eng.allocator.assert_quiescent()
+
+
 def test_mixed_length_paged_workload_bounded_compiles(params):
     """ISSUE 6 regression gate: a TTQ engine serving a mixed-length paged
     workload compiles a bounded number of programs, and identical repeat

@@ -474,6 +474,69 @@ def test_tc405_placement_funnel(tmp_path):
     assert {x.path.rsplit("/", 1)[-1] for x in f} == {"engine.py", "serve.py"}
 
 
+def test_tc406_broad_except_outside_fault_boundary(tmp_path):
+    files = {
+        "src/repro/serving/scheduler.py": """
+            def plan(reqs):
+                try:
+                    reqs.pop()
+                except Exception:                     # TC406
+                    pass
+                try:
+                    reqs.pop()
+                except:                               # TC406 (bare)
+                    pass
+                try:
+                    reqs.pop()
+                except (ValueError, BaseException):   # TC406 (tuple)
+                    pass
+                try:
+                    reqs.pop()
+                except MemoryError:                   # typed: clean
+                    pass
+        """,
+        # the designated fault boundary is exempt by name
+        "src/repro/serving/faults.py": """
+            def on_step(engine):
+                try:
+                    engine.poke()
+                except Exception:
+                    pass
+        """,
+        # non-serving modules are out of scope for TC406
+        "src/repro/quant/api.py": """
+            def probe(x):
+                try:
+                    return x()
+                except Exception:
+                    return None
+        """,
+    }
+    root = write_tree(tmp_path, files)
+    f = [x for x in serving.check(core.parse_paths(sorted(files), root))
+         if x.rule == "TC406"]
+    assert len(f) == 3, f
+    assert all("scheduler.py" in x.path for x in f)
+
+
+def test_tc406_inline_suppression(tmp_path):
+    files = {
+        "src/repro/serving/engine.py": """
+            def step(eng):
+                try:
+                    return eng.tick()
+                except Exception:  # tracecheck: ok[TC406]
+                    return None
+        """,
+    }
+    root = write_tree(tmp_path, files)
+    repo = core.parse_paths(sorted(files), root)
+    raw = [x for x in serving.check(repo) if x.rule == "TC406"]
+    assert len(raw) == 1                 # the pass still sees it...
+    mod = next(m for m in repo if m.path == raw[0].path)
+    assert mod.suppressed(raw[0].line, "TC406")   # ...the filter drops it
+
+
 # --------------------------------------------------------------- docs-links
 
 

@@ -27,6 +27,12 @@ can't express, so the analyzer pins them:
   Scattered placement is how mixed-layout trees and silent resharding
   transfers creep in; the mesh-sharded engine relies on every array
   entering the device through one of these three doors.
+* TC406 — no broad exception handlers (bare ``except``,
+  ``except Exception``, ``except BaseException``) in serving hot paths.
+  A swallowed error in the scheduler/runner/engine loop turns a crash
+  into silent token corruption; fault *containment* is the job of the
+  designated boundary module ``serving/faults.py`` (exempt by name) and
+  of typed handlers (``except MemoryError`` stays legal).
 """
 from __future__ import annotations
 
@@ -68,10 +74,13 @@ ENGINE_ATTRS = [
     "admits_since_cal", "queue", "slot_req", "finished", "state", "pos",
     "cur_tok", "host_syncs", "allocator", "kv_pool_utilization",
     "prefix_hit_rate", "preemptions", "prefill_tokens",
+    "calib_rejections", "quarantine", "requant_rejections", "lane_faults",
+    "deadline_expirations", "admission_failures", "degrade_level",
     "submit", "cancel", "admit", "step", "run_all",
 ]
 SERVING_EXPORTS = ["BlockAllocator", "DeviceRunner", "EngineConfig",
-                   "GenResult", "Request", "Scheduler", "TTQEngine"]
+                   "Fault", "FaultInjector", "GenResult", "Request",
+                   "Scheduler", "TTQEngine", "VirtualClock"]
 
 
 def _text(expr: ast.AST) -> Optional[str]:
@@ -174,6 +183,30 @@ def check(repo: Repo) -> List[Finding]:
                     f"`{d}` outside parallel/, launch/mesh.py, "
                     f"serving/runner.py — device placement and mesh "
                     f"construction are funneled (DESIGN.md §10)"))
+
+    # TC406: broad exception handlers stay inside the fault boundary
+    _BROAD = {"Exception", "BaseException"}
+    for mod in serving_mods:
+        if mod.path.endswith("faults.py"):   # the designated fault boundary
+            continue
+        base = mod.path.rsplit("/", 1)[-1]
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            t = node.type
+            names = ([] if t is None
+                     else [n for n in (getattr(e, "id", getattr(e, "attr",
+                                                                None))
+                           for e in (t.elts if isinstance(t, ast.Tuple)
+                                     else [t])) if n])
+            if t is None or any(n in _BROAD for n in names):
+                what = "bare except" if t is None else \
+                    f"except {'/'.join(n for n in names if n in _BROAD)}"
+                out.append(Finding(
+                    "TC406", mod.path, node.lineno,
+                    f"{what} in serving module {base} — broad handlers "
+                    f"mask corruption in the serving loop; contain faults "
+                    f"in serving/faults.py or catch the specific error"))
 
     # TC404: facade surface + package re-exports
     eng = cg.classes.get("repro.serving.engine.TTQEngine")
