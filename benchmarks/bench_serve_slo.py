@@ -1,0 +1,290 @@
+"""Streaming SLO bench — chunked prefill vs monolithic under open-loop load.
+
+The headline experiment (DESIGN.md §13): a long prompt arriving while
+other streams are decoding.  Monolithic prefill stalls every running
+lane for one giant dispatch — the stall lands in the victims' p99
+inter-token latency (ITL).  Chunked prefill splits the ingestion into
+``prefill_chunk``-sized dispatches interleaved with decode rounds, so
+the worst-case stall shrinks to one chunk.
+
+Three gates (CI runs ``--fast``):
+
+  * **bitwise equality** — chunked and monolithic ingestion produce
+    identical greedy tokens (dense bf16 and paged int8 probes; the full
+    layout × precision × speculation matrix lives in
+    tests/test_chunked_prefill.py);
+  * **zero steady-state recompiles** — after a warm wave that has seen
+    the same prompt lengths, the measured open-loop phase compiles no
+    new XLA program (chunked ingestion adds one prefill program per
+    distinct chunk *offset* — a bounded set, ≤ max_len/chunk — all
+    warmed by one long prompt);
+  * **transfer-guard** — with admission and ingestion quiesced, the
+    remaining pure-decode loop runs under
+    ``jax.transfer_guard("disallow")`` (prompt staging is host→device
+    by nature, exactly like admission — EXPERIMENTS.md
+    §"Transfer-guard methodology").
+
+The latency phase is the paper scenario measured directly: two victim
+streams decode from t=0 under open-loop Poisson background shorts
+(arrivals never wait for the system — queueing is part of what's
+measured), and the long prompt (4096 tokens; 512 under ``--fast``)
+arrives once the victims are mid-stream.  The gated number is the
+victims' own p99 ITL: with ~2·victim_new gaps, the one prefill-sized
+stall per victim sits exactly in the top 1%, so p99 samples it rather
+than diluting it (pooled whole-engine percentiles are also reported).
+The ≥3x p99-ITL improvement is gated in ``--full`` runs only (timing
+gates are advisory under ``--fast``, same policy as bench_engine).
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve_slo.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import NO_QUANT
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, TTQEngine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+CFG = ModelConfig(name="bench-slo", family="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=96, vocab=128)
+PARAMS = None
+
+
+def _prompt(rng, n):
+    return list(rng.integers(1, CFG.vocab, size=n))
+
+
+def make_engine(chunked: bool, long_len: int, chunk: int, **kw):
+    buckets = (16, 32, 64) + ((long_len,) if not chunked else ())
+    ecfg = EngineConfig(max_slots=4, max_len=long_len + 128, decode_chunk=1,
+                       temperature=0.0, recalibrate_tokens=10**9,
+                       prompt_buckets=buckets,
+                       prefill_chunk=chunk if chunked else 0,
+                       **kw)
+    return TTQEngine(CFG, PARAMS, NO_QUANT, ecfg)
+
+
+# ----------------------------------------------------------------- equality
+
+
+def equality_gate(long_len: int, chunk: int) -> dict:
+    """Chunked vs monolithic greedy tokens, dense bf16 + paged int8."""
+    rng = np.random.default_rng(0)
+    prompts = [_prompt(rng, long_len), _prompt(rng, 24), _prompt(rng, 40)]
+    row = {}
+    for label, kw in (("dense-bf16", {}),
+                      ("paged-int8", dict(kv_paged=True, kv_block_size=16,
+                                          kv_dtype="int8"))):
+        outs = []
+        for chunked in (False, True):
+            eng = make_engine(chunked, long_len, chunk, **kw)
+            rids = [eng.submit(p, max_new=8) for p in prompts]
+            res = eng.run_all()
+            outs.append([list(res[r]) for r in rids])
+            if eng.allocator is not None:
+                eng.allocator.assert_quiescent()
+        row[label] = outs[0] == outs[1]
+    return row
+
+
+# ------------------------------------------------------------ open-loop load
+
+
+def poisson_schedule(rng, window_s: float, rate_hz: float):
+    """Open-loop Poisson short arrivals (8–48 tokens): timestamps are
+    fixed up front and never wait for the system — queueing is part of
+    the measured system."""
+    sched = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_hz))
+        if t >= window_s:
+            break
+        sched.append((t, _prompt(rng, int(rng.integers(8, 48)))))
+    return sched
+
+
+def _pct(xs, q):
+    """Nearest-rank percentile: ceil(q*n)-th smallest.  The rank matters
+    here — with 2 victims × victim_new tokens there are ~2·victim_new-2
+    gaps and exactly 2 stall gaps (one per victim), and nearest-rank p99
+    lands on the 2nd-largest of 198, i.e. the smaller stall.  A floor
+    rule would land on the 3rd-largest and miss both."""
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))] \
+        if xs else 0.0
+
+
+def warm(eng, long_len: int):
+    """Compile everything the open-loop phase can dispatch.  Prefill
+    programs are keyed by (bucket, admission-group size), so warm every
+    short bucket at group sizes 1..max_slots and the long prompt at 1–2
+    (two simultaneous long admissions is already a tail event)."""
+    rng = np.random.default_rng(9)
+    for b in (16, 32, 64):
+        for g in range(1, eng.ecfg.max_slots + 1):
+            for _ in range(g):
+                eng.submit(_prompt(rng, b - 1), max_new=2)
+            eng.run_all()
+    for g in (1, 2):
+        for _ in range(g):
+            eng.submit(_prompt(rng, long_len), max_new=2)
+        eng.run_all()
+    eng.scheduler.finished.clear()           # latency stats start clean
+
+
+def latency_phase(chunked: bool, long_len: int, chunk: int, window_s: float,
+                  rate_hz: float, victim_new: int) -> dict:
+    """The headline scenario.  Two victim streams decode from t=0 under
+    open-loop Poisson background shorts; once the victims are a quarter
+    into their budget the long prompt arrives.  The victims' own p99 ITL
+    is the gated number — monolithic ingestion puts one prefill-sized
+    gap in each victim stream (top 1% of ~2·victim_new gaps, so p99
+    samples it exactly); chunked ingestion caps the gap at one chunk.
+    The measured window must compile nothing (warm() covers it)."""
+    eng = make_engine(chunked, long_len, chunk)
+    warm(eng, long_len)
+    warm_programs = eng.compiled_programs
+
+    rng = np.random.default_rng(2)
+    victims = [eng.submit(_prompt(rng, 24), max_new=victim_new),
+               eng.submit(_prompt(rng, 40), max_new=victim_new)]
+    shorts = poisson_schedule(np.random.default_rng(3), window_s, rate_hz)
+    long_prompt = _prompt(rng, long_len)
+    long_rid = None
+    sched = eng.scheduler
+    t0 = time.monotonic()
+    i = 0
+    while (i < len(shorts) or sched.has_work() or sched.has_deferred_work()):
+        now = time.monotonic() - t0
+        while i < len(shorts) and shorts[i][0] <= now:
+            eng.submit(shorts[i][1], max_new=8)
+            i += 1
+        if long_rid is None:
+            v0 = next((r for r in eng.slot_req if r and r.rid == victims[0]),
+                      None)
+            if v0 is not None and len(v0.out) >= victim_new // 4:
+                long_rid = eng.submit(long_prompt, max_new=8)  # mid-stream
+        if sched.has_work() or sched.has_deferred_work():
+            eng.step()
+        elif i < len(shorts):
+            time.sleep(min(0.002, max(0.0, shorts[i][0] - now)))
+
+    fin = sched.finished
+    gaps = [b - a for v in victims
+            for a, b in zip(fin[v].tok_times, fin[v].tok_times[1:])]
+    long_ts = fin[long_rid].tok_times if long_rid is not None else []
+    lat = eng.latency_percentiles()            # engine-wide, informative
+    lat.update(
+        victim_itl_p50=_pct(gaps, 0.50), victim_itl_p99=_pct(gaps, 0.99),
+        victim_gaps=len(gaps),
+        long_ttft=(long_ts[0] - fin[long_rid].submit_t) if long_ts else None,
+        steady_new_programs=eng.compiled_programs - warm_programs,
+        requests=2 + len(shorts) + 1,
+        prefill_chunks=eng.prefill_chunks)
+    return lat
+
+
+# ------------------------------------------------------------ transfer guard
+
+
+def transfer_guard_probe(long_len: int, chunk: int) -> bool:
+    """Quiesce ingestion, then run the remaining decode rounds under
+    ``transfer_guard("disallow")`` — implicit transfers raise."""
+    eng = make_engine(True, long_len, chunk)
+    rng = np.random.default_rng(3)
+    for n in (24, 40, long_len):
+        eng.submit(_prompt(rng, n), max_new=12)
+    sched = eng.scheduler
+    while sched.queue or sched.prefilling:  # admission + chunk ingestion:
+        eng.step()                          # host→device staging by nature
+    try:
+        with jax.transfer_guard("disallow"):
+            while sched.has_work():
+                if not eng.step():
+                    break
+        return True
+    except Exception as e:                  # an implicit transfer raised
+        print(f"transfer-guard probe tripped: {e}")
+        return False
+
+
+# --------------------------------------------------------------------- main
+
+
+def main(fast: bool = False):
+    global PARAMS
+    PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+    long_len = 512 if fast else 4096
+    chunk = 64 if fast else 256
+    window_s = 3.0 if fast else 10.0
+    rate_hz = 4.0 if fast else 6.0
+    victim_new = 100
+
+    print(f"equality gate (long={long_len}, chunk={chunk}) ...")
+    eq = equality_gate(long_len, chunk)
+    print(f"  {eq}")
+
+    rows = {}
+    for label, chunked in (("unchunked", False), ("chunked", True)):
+        print(f"open-loop load [{label}] ...")
+        rows[label] = latency_phase(chunked, long_len, chunk, window_s,
+                                    rate_hz, victim_new)
+        r = rows[label]
+        print(f"  victim itl p50/p99 {r['victim_itl_p50'] * 1e3:.1f}/"
+              f"{r['victim_itl_p99'] * 1e3:.1f} ms "
+              f"({r['victim_gaps']} gaps), long ttft "
+              f"{(r['long_ttft'] or 0) * 1e3:.1f} ms, engine-wide ttft "
+              f"p50/p99 {r['ttft_p50'] * 1e3:.1f}/"
+              f"{r['ttft_p99'] * 1e3:.1f} ms, "
+              f"{r['requests']} req, "
+              f"{r['steady_new_programs']} new programs")
+
+    itl_ratio = (rows["unchunked"]["victim_itl_p99"]
+                 / max(rows["chunked"]["victim_itl_p99"], 1e-9))
+    print(f"p99 ITL improvement: {itl_ratio:.2f}x "
+          f"(gate ≥3x in --full; advisory under --fast)")
+
+    guard_ok = transfer_guard_probe(long_len, chunk)
+
+    report = {
+        "config": {"model": CFG.name, "long_len": long_len, "chunk": chunk,
+                   "window_s": window_s, "rate_hz": rate_hz,
+                   "victim_new": victim_new, "fast": fast},
+        "equality": eq,
+        "latency": rows,
+        "itl_p99_improvement": itl_ratio,
+        "transfer_guard_ok": guard_ok,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_serve_slo.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+
+    ok = (all(eq.values()) and guard_ok
+          and rows["chunked"]["steady_new_programs"] == 0
+          and rows["unchunked"]["steady_new_programs"] == 0)
+    if not fast:
+        ok = ok and itl_ratio >= 3.0
+    if not ok:
+        raise SystemExit("bench_serve_slo acceptance FAILED")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: 512-token long prompt, 3 s window; "
+                         "equality/recompile/guard gates only (the 3x ITL "
+                         "gate needs --full)")
+    main(fast=ap.parse_args().fast)

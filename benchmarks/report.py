@@ -123,6 +123,17 @@ def bench_summary():
         print(f"mesh: byte shrink at mesh=2 "
               f"{r.get('byte_shrink_mesh2') or 0:.2f}x, token agreement "
               f"{r.get('token_agreement')}")
+    r = _bench("BENCH_serve_slo.json")
+    if r:
+        lat = r.get("latency", {})
+        ch = lat.get("chunked", {})
+        print(f"serve_slo: p99 ITL improvement "
+              f"{r.get('itl_p99_improvement', 0):.2f}x with a "
+              f"{r.get('config', {}).get('long_len')}-token prompt "
+              f"mid-stream (chunked victim p99 "
+              f"{ch.get('victim_itl_p99', 0) * 1e3:.1f} ms), equality "
+              f"{all(r.get('equality', {}).values())}, transfer-guard "
+              f"{r.get('transfer_guard_ok')}")
     r = _bench("BENCH_spec.json")
     if r and r.get("best"):
         b = r["best"]

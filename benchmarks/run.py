@@ -9,20 +9,23 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: calibration,groupsize,methods,runtime,"
-                         "kvcache,engine,requant,overhead,roofline")
+                         "kvcache,engine,requant,overhead,serve_slo,"
+                         "roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_ablations, bench_calibration, bench_engine,
                    bench_groupsize, bench_kvcache, bench_methods,
-                   bench_overhead, bench_requant, bench_runtime, roofline)
+                   bench_overhead, bench_requant, bench_runtime,
+                   bench_serve_slo, roofline)
 
     sections = [
         ("overhead", bench_overhead.main),        # cheap first
         ("runtime", bench_runtime.main),
         ("kvcache", bench_kvcache.main),
         ("engine", bench_engine.main),
+        ("serve_slo", bench_serve_slo.main),
         ("requant", bench_requant.main),
         ("ablations", bench_ablations.main),
         ("calibration", bench_calibration.main),

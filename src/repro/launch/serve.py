@@ -32,6 +32,13 @@ pressure instead of stalling), and ``--no-prefix-cache`` disables shared
 prompt-prefix block reuse.  The summary then adds ``kv_pool_util`` (peak),
 ``prefix_hit_rate`` and the preemption count.
 
+``--prefill-chunk C`` ingests long prompts in C-token chunks interleaved
+with decode rounds (DESIGN.md §13) so a long arrival cannot stall running
+streams for a whole monolithic prefill; ``--prefill-budget N`` bounds the
+padded prefill tokens per round, ``--max-queue D`` bounds the admission
+queue (``QueueFull`` past D).  The summary then adds TTFT/ITL p50/p99 and
+the chunk/queue counters.
+
 ``--deadline-s T`` gives every request a T-second deadline (expired
 requests fail cleanly, never stall the drain loop); ``--inject NAME``
 runs a named deterministic fault recipe (``serving.faults.demo_injector``)
@@ -149,6 +156,21 @@ def main():
                          "requant health gate, lane fault isolation, "
                          "degradation ladder) — restores the exact pre-guard "
                          "engine")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill (DESIGN.md §13): ingest prompt "
+                         "tails longer than C tokens in C-sized chunks "
+                         "interleaved with decode rounds, bounding the "
+                         "per-round stall a long prompt inflicts on running "
+                         "streams (0 = monolithic; paged pools need C to "
+                         "divide --kv-block-size)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="padded prefill tokens dispatched per engine round "
+                         "across all chunk-ingesting requests (0 = one "
+                         "chunk per round)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue: submit() raises "
+                         "QueueFull at this depth (the async TTQServer "
+                         "awaits instead; 0 = unbounded)")
     args = ap.parse_args()
 
     import jax
@@ -190,7 +212,10 @@ def main():
                                  prefix_cache=not args.no_prefix_cache,
                                  speculate_k=args.speculate_k,
                                  guards=not args.no_guards,
-                                 deadline_s=args.deadline_s),
+                                 deadline_s=args.deadline_s,
+                                 prefill_chunk=args.prefill_chunk,
+                                 prefill_budget=args.prefill_budget,
+                                 max_queue=args.max_queue),
                     pctx=pctx, draft_policy=draft_policy, faults=faults)
     layout = (f"paged block={eng.kvcfg.block_size} "
               f"pool={eng.num_blocks} blocks/layer "
@@ -240,6 +265,15 @@ def main():
           f"host_syncs/token={eng.host_syncs / max(toks, 1):.2f} "
           f"requant_wall={eng.requant_wall_s:.2f}s "
           f"gate_skipped_layers={skipped}/{total_layers}")
+    lat = eng.latency_percentiles()
+    print(f"latency: ttft p50/p99 {lat['ttft_p50'] * 1e3:.1f}/"
+          f"{lat['ttft_p99'] * 1e3:.1f} ms, itl p50/p99 "
+          f"{lat['itl_p50'] * 1e3:.1f}/{lat['itl_p99'] * 1e3:.1f} ms "
+          f"({lat['n_streams']} streams)")
+    if eng.ecfg.prefill_chunk > 0 or eng.ecfg.max_queue > 0:
+        print(f"slo: prefill_chunks={eng.prefill_chunks} "
+              f"queue_rejections={eng.queue_rejections} "
+              f"queue_depth={eng.queue_depth}")
     if eng.ecfg.speculate_k > 0:
         print(f"speculate: windows={eng.spec_windows} "
               f"acceptance={eng.spec_acceptance_rate:.2f} "

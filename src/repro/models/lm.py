@@ -159,14 +159,16 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, kvcfg=None,
 
 def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
             collect_stats=True, pctx=None, full_logits=False, kvcfg=None,
-            prefix_kv=None, pos0: int = 0):
+            prefix_kv=None, pos0: int = 0, compact_state: bool = False):
     """Run the prompt, build decode state + TTQ activation statistics.
 
     ``prefix_kv``/``pos0`` (paged prefix-cache hits, DESIGN.md §8): the
     tokens are the prompt *tail*, attending to the cached prefix k/v (a
     per-run list of (k, v) with leading layer dim, post-rope) at absolute
     offset ``pos0``.  The returned paged state is compact — this call's
-    rows only; the cached prefix stays where it is."""
+    rows only; the cached prefix stays where it is.  ``compact_state``
+    forces the compact layout for dense caches too (chunked prefill,
+    DESIGN.md §13 — the runner owns the row writes)."""
     tokens = batch["tokens"]
     enc_out = None
     stats: dict = {}
@@ -179,7 +181,8 @@ def prefill(cfg: ModelConfig, params, batch, max_len: int, *,
     x, run_stats, states = S.apply_stack_seq(
         cfg, params["stack"], S.stack_spec(cfg), x, stats_on=collect_stats,
         pctx=pctx, enc_out=enc_out, want_state=True, max_len=max_len,
-        kvcfg=kvcfg, pos0=pos0, prefix_kv=prefix_kv)
+        kvcfg=kvcfg, pos0=pos0, prefix_kv=prefix_kv,
+        compact_state=compact_state)
     if collect_stats:
         stats["stack"] = run_stats
     x = norm(x, params["final_norm"])

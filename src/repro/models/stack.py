@@ -149,14 +149,16 @@ def _mlp_apply(cfg, kind, p, x, stats, prefix, pctx, kcfg=None):
 def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
                     pctx=None, enc_out=None, want_state: bool = False,
                     max_len: int = 0, pos0: int = 0, state=None, kvcfg=None,
-                    kcfg=None, kv_prefix=None):
+                    kcfg=None, kv_prefix=None, compact_state: bool = False):
     """Sequence mode (train / prefill).  Returns (x, state|None).
 
     ``kv_prefix`` (plain-attn only): cached (k, v) context prepended to the
     attention read — tail prefill over a shared prompt prefix, with
     ``pos0`` = prefix length (DESIGN.md §8).  Paged caches return a
     *compact* state (this call's k/v rows at storage dtype); the runner
-    scatters it into pool blocks.
+    scatters it into pool blocks.  ``compact_state`` forces the same
+    compact layout for dense caches (chunked prefill, DESIGN.md §13: the
+    runner writes the chunk's rows into the slot's slab itself).
     """
     h = norm(x, p["ln1"])
     st = None
@@ -168,7 +170,7 @@ def apply_layer_seq(cfg: ModelConfig, kind: str, p, x, stats, prefix, *,
                                      pos0=pos0, return_kv=True,
                                      kv_prefix=kv_prefix, kvcfg=kvcfg,
                                      kcfg=kcfg)
-            if kvcfg is not None and kvcfg.paged:
+            if (kvcfg is not None and kvcfg.paged) or compact_state:
                 st = L.build_kv_compact(k, v, kvcfg)
             else:
                 ml = min(max_len, window) if window else max_len
@@ -344,7 +346,7 @@ def init_stack_state(cfg: ModelConfig, spec, batch: int, max_len: int,
 def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                     pctx=None, enc_out=None, want_state=False, max_len=0,
                     remat=False, kvcfg=None, kcfg=None, pos0: int = 0,
-                    prefix_kv=None):
+                    prefix_kv=None, compact_state: bool = False):
     """Train / prefill over all runs. Returns (x, stats_list, state_list).
 
     With remat, the mixer/MLP outputs are checkpoint-tagged: saving the
@@ -372,7 +374,8 @@ def apply_stack_seq(cfg: ModelConfig, run_params, spec, x, *, stats_on=False,
                                         f"u{j}.", pctx=pctx, enc_out=enc_out,
                                         want_state=want_state, max_len=max_len,
                                         kvcfg=kvcfg, kcfg=kcfg, pos0=pos0,
-                                        kv_prefix=kvp)
+                                        kv_prefix=kvp,
+                                        compact_state=compact_state)
                 if st is not None:
                     states[f"u{j}"] = st
             return h, (stats, states)

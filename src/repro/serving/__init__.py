@@ -3,8 +3,11 @@ from .engine import EngineConfig, TTQEngine
 from .faults import Fault, FaultInjector, VirtualClock, demo_injector
 from .runner import DeviceRunner
 from .sampling import sample
-from .scheduler import GenResult, Request, Scheduler, pick_decode_chunk
+from .scheduler import (GenResult, QueueFull, Request, Scheduler,
+                        pick_decode_chunk)
+from .server import RequestFailed, TTQServer
 
 __all__ = ["BlockAllocator", "DeviceRunner", "EngineConfig", "Fault",
-           "FaultInjector", "GenResult", "Request", "Scheduler", "TTQEngine",
+           "FaultInjector", "GenResult", "QueueFull", "Request",
+           "RequestFailed", "Scheduler", "TTQEngine", "TTQServer",
            "VirtualClock", "demo_injector", "pick_decode_chunk", "sample"]

@@ -161,13 +161,19 @@ class BlockAllocator:
         span = min(plen + max_new, max_len)
         return -(-span // self.block_size)
 
-    def allocate(self, prompt, max_new: int, max_len: int
-                 ) -> Tuple[List[int], int]:
+    def allocate(self, prompt, max_new: int, max_len: int,
+                 register: bool = True) -> Tuple[List[int], int]:
         """Reserve the request's blocks.  Returns (physical blocks in logical
         order, prefix_len in tokens).  Shared prefix blocks are ref-retained;
         the remainder freshly allocated; freshly-prefilled shareable blocks
         are registered in the trie.  Raises MemoryError when the pool cannot
-        cover the request (caller preempts and retries)."""
+        cover the request (caller preempts and retries).
+
+        ``register=False`` defers trie registration of the fresh shareable
+        blocks (chunked prefill: the rows are written over several rounds, so
+        another request must not prefix-match a block before its tokens land
+        — the caller registers written blocks incrementally via
+        :meth:`register_blocks`)."""
         shared, hashes = self.match_prefix(prompt)
         need = self.blocks_needed(len(prompt), max_new, max_len)
         # exact capacity check: reviving a shared block that currently sits
@@ -184,20 +190,8 @@ class BlockAllocator:
                 blocks.append(blk)
             for i in range(len(shared), need):
                 blk = self._take()
-                if self.prefix_cache and i < len(hashes):  # shareable block
-                    h = hashes[i]
-                    # a previous block may still map to h even though the
-                    # trie walk broke earlier in the chain (its predecessor
-                    # was evicted) — unhook it, or its later reclaim would
-                    # delete THIS block's live trie entry out from under us
-                    old = self.trie.get(h)
-                    if old is not None:
-                        del self.block_hash[old]
-                        if old in self.cached:             # demote to plain free
-                            del self.cached[old]
-                            self.free.append(old)
-                    self.trie[h] = blk
-                    self.block_hash[blk] = h
+                if register and self.prefix_cache and i < len(hashes):
+                    self._hook(hashes[i], blk)
                 blocks.append(blk)
         except MemoryError:
             self.free_request(blocks)      # atomic: no partial reservations
@@ -205,6 +199,41 @@ class BlockAllocator:
             self.prefix_misses -= len(hashes) - len(shared)
             raise
         return blocks, len(shared) * self.block_size
+
+    def _hook(self, h: int, blk: int):
+        """Enter ``blk`` into the trie under chain hash ``h``.
+
+        A previous block may still map to ``h`` even though the trie walk
+        broke earlier in the chain (its predecessor was evicted) — unhook
+        it, or its later reclaim would delete THIS block's live trie entry
+        out from under us."""
+        old = self.trie.get(h)
+        if old is not None and old != blk:
+            del self.block_hash[old]
+            if old in self.cached:                         # demote to plain free
+                del self.cached[old]
+                self.free.append(old)
+        self.trie[h] = blk
+        self.block_hash[blk] = h
+
+    def register_blocks(self, prompt, blocks: List[int], written: int):
+        """Register the shareable prefix blocks of ``prompt`` whose tokens
+        have all been written (``written`` = tokens resident in the cache so
+        far).  Incremental counterpart of the registration that
+        ``allocate(register=True)`` does upfront: chunked prefill calls this
+        after each chunk lands, so the trie only ever points at rows that
+        exist on device.  Idempotent — already-registered (shared) blocks
+        are skipped."""
+        if not self.prefix_cache:
+            return
+        n = min(self._shareable_blocks(len(prompt)),
+                written // self.block_size, len(blocks))
+        hashes = chain_hashes(prompt, self.block_size, n)
+        for i in range(n):
+            blk = blocks[i]
+            if self.block_hash.get(blk) == hashes[i]:      # already hooked
+                continue
+            self._hook(hashes[i], blk)
 
     def free_request(self, blocks: List[int]):
         """Release a finished/preempted/cancelled request's blocks."""

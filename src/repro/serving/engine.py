@@ -114,6 +114,20 @@ class EngineConfig:
     deadline_s: float = 0.0         # default per-request wall budget from
                                     # submit (0 = none; submit() overrides
                                     # per request)
+    # ---- streaming & SLO scheduling (DESIGN.md §13) ----
+    prefill_chunk: int = 0          # >0: ingest prompt tails longer than
+                                    # this in fixed-size chunks interleaved
+                                    # with decode rounds (plain-attn
+                                    # families; paged pools need it to
+                                    # divide by block_size).  Also lifts
+                                    # the bucket cap on prompt length.
+    prefill_budget: int = 0         # padded prefill tokens dispatched per
+                                    # engine round (0 → one chunk/round);
+                                    # bounds how much a long ingestion can
+                                    # stretch running streams' ITL
+    max_queue: int = 0              # >0: submit() raises QueueFull at this
+                                    # queue depth (the async front end
+                                    # awaits instead); 0 = unbounded
 
 
 class TTQEngine:
@@ -133,6 +147,15 @@ class TTQEngine:
                     f"{sorted(kinds)} (windowed/latent/recurrent decode "
                     f"states cannot roll back rejected drafts — "
                     f"DESIGN.md §11)")
+        if ecfg.prefill_chunk > 0:
+            from repro.models.stack import stack_spec
+            kinds = {k for ks, _ in stack_spec(cfg) for k in ks}
+            if kinds != {"attn"}:
+                raise ValueError(
+                    f"prefill_chunk needs a plain-attention family, got "
+                    f"{sorted(kinds)} (chunked ingestion gathers and "
+                    f"extends one per-layer k/v context per chunk — "
+                    f"DESIGN.md §13)")
         if ecfg.decode_chunk <= 0:
             ecfg = dataclasses.replace(
                 ecfg, decode_chunk=pick_decode_chunk(ecfg.max_slots,
@@ -171,6 +194,13 @@ class TTQEngine:
             per_slot = ecfg.max_len // self.kvcfg.block_size
             self.num_blocks = (ecfg.kv_pool_blocks
                                or ecfg.max_slots * per_slot + 1)
+            if (ecfg.prefill_chunk > 0
+                    and ecfg.prefill_chunk % self.kvcfg.block_size):
+                raise ValueError(
+                    f"prefill_chunk={ecfg.prefill_chunk} must divide by kv "
+                    f"block_size={self.kvcfg.block_size}: chunk boundaries "
+                    f"must align with pool blocks so the prefix gather "
+                    f"reads whole written blocks")
         # weight-kernel dispatch: policy-driven, EngineConfig.use_kernels
         # wins when set.  Static too — it is baked into the jitted decode.
         # The override is decode-only by design: the GEMM paths are bitwise
@@ -357,6 +387,49 @@ class TTQEngine:
         """Padded tokens dispatched to prefill (prefix hits shrink this)."""
         return self.scheduler.prefill_tokens
 
+    # ------------------------------------- streaming / SLO telemetry (§13)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting in the intake queue right now."""
+        return len(self.scheduler.queue)
+
+    @property
+    def queue_rejections(self) -> int:
+        """Submits bounced off the ``max_queue`` capacity bound."""
+        return self.scheduler.queue_rejections
+
+    @property
+    def prefill_chunks(self) -> int:
+        """Chunked-prefill dispatches issued (0 with chunking off)."""
+        return self.scheduler.prefill_chunks
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 time-to-first-token and inter-token latency (seconds,
+        engine clock) over every request that has emitted tokens — finished
+        and in-flight.  ``serve.py``'s summary and ``bench_serve_slo.py``
+        both report from this one implementation, so the batch harness and
+        the async server share a latency vocabulary."""
+        reqs = list(self.scheduler.finished.values())
+        reqs += [r for r in self.scheduler.slot_req if r is not None]
+        ttfts, itls = [], []
+        for r in reqs:
+            ts = r.tok_times
+            if not ts:
+                continue
+            ttfts.append(ts[0] - r.submit_t)
+            itls += [b - a for a, b in zip(ts, ts[1:])]
+
+        def pct(xs, q):
+            if not xs:
+                return 0.0
+            s = sorted(xs)
+            return s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+
+        return {"ttft_p50": pct(ttfts, 0.50), "ttft_p99": pct(ttfts, 0.99),
+                "itl_p50": pct(itls, 0.50), "itl_p99": pct(itls, 0.99),
+                "n_streams": len(ttfts), "n_itl": len(itls)}
+
     # -------------------------------------------- robustness telemetry (§12)
 
     @property
@@ -392,16 +465,31 @@ class TTQEngine:
     # --------------------------------------------------------------- serving
 
     def submit(self, prompt, max_new: int = 16, frames=None,
-               deadline_s=None) -> int:
-        """Queue a request; rejects prompts the engine cannot admit.
+               deadline_s=None, priority: int = 0) -> int:
+        """Queue a request; rejects prompts the engine cannot admit, and
+        raises :class:`~repro.serving.scheduler.QueueFull` at
+        ``EngineConfig.max_queue`` depth.
 
         ``deadline_s`` (seconds from now, 0 = none) bounds the request's
         wall-clock lifetime: expired requests — queued or running — are
         failed with ``error == "deadline"`` instead of occupying a lane
-        forever.  Defaults to ``EngineConfig.deadline_s``."""
+        forever.  Defaults to ``EngineConfig.deadline_s``.  ``priority``
+        (lower = more urgent) picks the SLO class: admission order,
+        eviction order and chunked-ingestion order all honour it
+        (DESIGN.md §13)."""
         return self.scheduler.submit(prompt, max_new, frames=frames,
                                      deadline_s=deadline_s,
-                                     now=self._clock())
+                                     now=self._clock(), priority=priority)
+
+    def set_stream_callbacks(self, on_token=None, on_finish=None):
+        """Install streaming callbacks: ``on_token(rid, tok, t)`` fires for
+        every emitted token (first token included), ``on_finish(rid, req)``
+        once per terminal landing (done, failed, cancelled, expired).
+        Callbacks run on the engine-driving thread and must be cheap and
+        device-free — the async server forwards into the event loop via
+        ``call_soon_threadsafe`` (tracecheck TC407)."""
+        self.scheduler.on_token = on_token
+        self.scheduler.on_finish = on_finish
 
     def cancel(self, rid: int) -> bool:
         """Abort a queued or running request immediately: its slot and
@@ -447,14 +535,40 @@ class TTQEngine:
                     self.qmodel.calibrate(stats, tokens=tokens,
                                           provenance=rids)
                 self.scheduler.note_admitted(len(group.requests), group.tokens)
+                now = self._clock()
                 for i, (slot, req) in enumerate(zip(group.slots,
                                                     group.requests)):
-                    req.out.append(int(first[i]))
+                    self.scheduler.emit(req, int(first[i]), now)
                     if fin[i]:
                         self.scheduler.finish(slot)
         self._flush_releases()       # requests finished at admission
         if self.scheduler.should_requant():
             self._requantize()
+
+    def _run_chunks(self):
+        """Dispatch this round's chunked-prefill plans (DESIGN.md §13):
+        at most ``prefill_budget`` padded tokens, most urgent ingestion
+        first.  Each chunk folds its calibration statistics into the
+        session — additive sufficient statistics, so the requant cadence
+        sees the whole prompt across chunks exactly as it would from one
+        monolithic prefill.  The final chunk arms the lane and emits the
+        request's first token."""
+        plans = self.scheduler.plan_prefill_chunks()
+        for plan in plans:
+            first, fin, stats = self.runner.prefill_chunk(self.params, plan)
+            rids = (plan.req.rid,)
+            tokens = float(self.ecfg.prefill_chunk)
+            if self.faults is not None:
+                stats, tokens = self.faults.calib_site(stats, tokens, rids)
+            if stats is not None:        # a "drop" fault skips the fold
+                self.qmodel.calibrate(stats, tokens=tokens, provenance=rids)
+            self.scheduler.note_chunk(plan, float(self.ecfg.prefill_chunk))
+            if plan.final:
+                self.scheduler.emit(plan.req, int(first[0]), self._clock())
+                if fin[0]:
+                    self.scheduler.finish(plan.slot)
+        if plans:
+            self._flush_releases()   # finished-at-final-chunk slots → sink
 
     def _update_ladder(self):
         """Graceful-degradation ladder under KV-pool pressure (paged pool
@@ -496,9 +610,12 @@ class TTQEngine:
         self.scheduler.expire_deadlines(now)
         self._flush_releases()       # deadline-evicted slots → sink
         self.admit()
+        self._run_chunks()           # budgeted chunked-prefill dispatches
         self._update_ladder()
-        if not self.scheduler.active_slots():
-            return self.scheduler.has_deferred_work()
+        if not self.scheduler.decode_slots():
+            # mid-chunked-prefill lanes are work even though nothing decodes
+            return (bool(self.scheduler.prefilling)
+                    or self.scheduler.has_deferred_work())
         draft = None if self.degrade_level >= 1 else self.draft_params
         if self.faults is not None and self.runner.detect_faults:
             slots = self.faults.decode_site(self.scheduler.slot_req,
@@ -506,7 +623,8 @@ class TTQEngine:
             self.runner.set_poison(slots)
         toks, valid, done, fault = self.runner.decode_block(
             self.decode_params, draft, small_chunk=self.degrade_level >= 2)
-        self.scheduler.record_block(toks, valid, done, fault=fault)
+        self.scheduler.record_block(toks, valid, done, fault=fault,
+                                    now=self._clock())
         self._flush_releases()       # freed blocks must not be written again
         if self.scheduler.should_requant():
             self._requantize()

@@ -74,6 +74,24 @@ def _write_paged(pools, compact, phys, block_size: int):
     return jax.tree.map(per, pools, compact)
 
 
+def _write_rows(batched, compact, slot: int, start: int, max_len: int):
+    """Write a compact chunk state into rows ``[start, start + L)`` of one
+    slot of the dense batched slab (chunked prefill, DESIGN.md §13).
+
+    batched: per-run {'u0': {leaf: (R, B, Hkv, ML, ·)}}; compact: same
+    structure with (R, 1, Hkv, C, ·) leaves.  ``L = min(C, max_len -
+    start)`` — the final chunk's pad columns may overhang the slab; the
+    dropped overhang holds pad garbage by construction.  Eager
+    ``dynamic_update_slice`` with host-static offsets: no advanced-index
+    normalization, no h2d."""
+    def per(bl, cl):
+        L = min(cl.shape[3], max_len - start)
+        return jax.lax.dynamic_update_slice(
+            bl, cl[:, :, :, :L].astype(bl.dtype), (0, slot, 0, start, 0))
+
+    return jax.tree.map(per, batched, compact)
+
+
 def _gather_pool(pool, ptab):
     """pool (R, NB, Hkv, bs, D·) + ptab (n, nbp) → (R, n, Hkv, nbp·bs, D·):
     the oracle's per-slot gather, vmapped over the leading layer dim so the
@@ -111,6 +129,7 @@ class DeviceRunner:
         # clean — see tests/test_runtime_guards.py)
         self._zero = jnp.asarray(0, jnp.int32)
         self._sink = jnp.asarray(SINK, jnp.int32)
+        self._maxlen = jnp.asarray(ML, jnp.int32)
         # mesh serving: commit the decode state to its canonical layout (KV
         # heads on the model axis; paged pools shard heads, never blocks) and
         # the scalar lanes replicated.  The shardings are cached so admission
@@ -126,6 +145,7 @@ class DeviceRunner:
                                       self._state_shardings)
             self._zero = jax.device_put(self._zero, self._rep)
             self._sink = jax.device_put(self._sink, self._rep)
+            self._maxlen = jax.device_put(self._maxlen, self._rep)
             if self._poison is not None:
                 self._poison = jax.device_put(self._poison, self._rep)
         else:
@@ -165,7 +185,8 @@ class DeviceRunner:
         self._prefill_jit = jax.jit(partial(lm.prefill, cfg, pctx=pctx,
                                             collect_stats=True,
                                             full_logits=True, kvcfg=kvcfg),
-                                    static_argnames=("max_len",))
+                                    static_argnames=("max_len",
+                                                     "compact_state"))
 
     def place_params(self, params):
         """Device placement for a parameter tree (fp at engine init, or a
@@ -205,7 +226,8 @@ class DeviceRunner:
         delta being zero."""
         n = (self._decode_jit._cache_size()
              + self._prefill_jit._cache_size()
-             + _gather_prefix._cache_size())
+             + _gather_prefix._cache_size()
+             + _gather_dense_prefix._cache_size())
         if self._spec_jit is not None:
             n += self._spec_jit._cache_size()
         if self._decode_small is not None:
@@ -360,6 +382,14 @@ class DeviceRunner:
         row pointed at the sink so the lane's clamped writes can never land
         in blocks the allocator has handed to someone else.
 
+        Also the *parking* primitive for mid-chunked-prefill lanes
+        (DESIGN.md §13): ``pos`` is pushed to ``max_len`` so a parked
+        lane's done-lane garbage writes clamp to row ``max_len - 1`` —
+        a row no chunk's prefix gather ever reads (gathers stop strictly
+        before the prompt's last token) and every armed lane overwrites
+        before reading.  Dense slabs need this; paged lanes are already
+        safe via the sink row.
+
         Runs mid-decode (a request can finish inside the steady-state
         loop), so the slot set crosses via one explicit ``device_put`` and
         the updates are masked ``where``s over device-resident constants —
@@ -372,9 +402,83 @@ class DeviceRunner:
             else jax.device_put(mask_h, self._rep)
         self.done = jnp.logical_or(self.done, mask)
         self.remaining = jnp.where(mask, self._zero, self.remaining)
+        self.pos = jnp.where(mask, self._maxlen, self.pos)
         if self.paged:
             self.state["block_table"] = jnp.where(
                 mask[:, None], self._sink, self.state["block_table"])
+
+    # -------------------------------------------------------- chunked prefill
+
+    def prefill_chunk(self, params, plan):
+        """One chunked-prefill dispatch (DESIGN.md §13): ingest prompt rows
+        ``[start, start + length)`` of one request into its parked slot.
+
+        The chunk is padded to the fixed ``prefill_chunk`` width (shape
+        stability: one prefill program per distinct prefix length, not per
+        tail length) and attends to the already-resident rows as tail-
+        prefill context — gathered from the slot's physical blocks (paged)
+        or its slab rows (dense), exactly the prefix-cache mechanics of
+        DESIGN.md §8 with ``pos0 = start``.  Pad columns are causally
+        masked during the chunk and land past the prompt point (sink
+        blocks / overwritten-before-read slab rows), so they never
+        contaminate later reads.
+
+        Non-final chunks return ``(None, None, stats)`` — the lane stays
+        parked.  The final chunk runs the shared admission epilogue:
+        samples the first token from the last *real* row's logits, installs
+        the (paged) block-table row, arms the lane, and returns
+        ``(first (1,), finished (1,), stats)`` host arrays."""
+        ecfg, kvcfg = self.ecfg, self.kvcfg
+        req, slot = plan.req, plan.slot
+        C = ecfg.prefill_chunk
+        start, n = plan.start, plan.length
+        toks_h = np.zeros((1, C), np.int32)
+        toks_h[0, :n] = req.prompt[start:start + n]
+        batch = {"tokens": jnp.asarray(toks_h)}
+        prefix_kv = None
+        if start:
+            if self.paged:
+                nbp = start // kvcfg.block_size
+                ptab = jnp.asarray([req.blocks[:nbp]], jnp.int32)
+                prefix_kv = _gather_prefix(self.state["stack"], ptab, kvcfg)
+            else:
+                prefix_kv = _gather_dense_prefix(
+                    self.state["stack"], jnp.asarray([slot], jnp.int32),
+                    pfx=start, kvcfg=kvcfg)
+        logits, sstate, stats = self._prefill_jit(
+            params, batch, max_len=ecfg.max_len, prefix_kv=prefix_kv,
+            pos0=start, compact_state=True)
+        if self.paged:
+            bs = kvcfg.block_size
+            nbw = C // bs                    # C % bs == 0 (engine-validated)
+            pb0 = start // bs
+            end = start + n
+            phys = np.full((1, nbw), SINK, np.int32)
+            for j in range(nbw):
+                lb = pb0 + j
+                if lb * bs < end and lb < len(req.blocks):
+                    phys[0, j] = req.blocks[lb]
+            self.state["stack"] = _write_paged(self.state["stack"],
+                                               sstate["stack"],
+                                               jnp.asarray(phys), bs)
+        else:
+            self.state["stack"] = _write_rows(self.state["stack"],
+                                              sstate["stack"], slot, start,
+                                              ecfg.max_len)
+        if not plan.final:
+            self._repin()                   # chunk writes → canonical layout
+            return None, None, stats
+        last = logits[:, n - 1]             # last real row's logits
+        if self.paged:
+            nblk = ecfg.max_len // kvcfg.block_size
+            rows = np.full((1, nblk), SINK, np.int32)
+            rows[0, :len(req.blocks)] = req.blocks
+            idx = jnp.asarray([slot], jnp.int32)
+            self.state["block_table"] = \
+                self.state["block_table"].at[idx].set(jnp.asarray(rows))
+        plens_h = np.asarray([len(req.prompt)], np.int32)
+        first_h, fin_h = self._finish_admission([slot], [req], last, plens_h)
+        return first_h, fin_h, stats
 
     # ----------------------------------------------------------------- decode
 
@@ -464,6 +568,33 @@ def _gather_prefix(stack_state, ptab, kvcfg):
             kv = tuple(
                 dequantize_kv(_gather_pool(st[nm + "_q"], ptab),
                               _gather_pool(st[nm + "_s"], ptab),
+                              jnp.float32, bits=kvcfg.bits,
+                              group_size=kvcfg.group_size)
+                for nm in ("k", "v"))
+        out.append(kv)
+    return out
+
+
+@partial(jax.jit, static_argnames=("pfx", "kvcfg"))
+def _gather_dense_prefix(stack_state, slot, pfx, kvcfg):
+    """Materialize one slot's first ``pfx`` dense-slab rows as tail-prefill
+    context — the dense twin of :func:`_gather_prefix` for chunked prefill
+    (DESIGN.md §13): chunk N attends the rows chunks < N wrote.  Quantized
+    layouts dequantize to f32, matching the QDQ values the chunk's own
+    attention read uses, so every chunk sees one consistent context.
+    ``slot``: (1,) int32.  Returns per-run (k, v) arrays (R, 1, Hkv, pfx, ·),
+    post-rope, ready to ride the layer scan as xs."""
+    from repro.core.kvquant import dequantize_kv
+
+    out = []
+    for run in stack_state:
+        st = run["u0"]
+        if "k" in st:
+            kv = (st["k"][:, slot, :, :pfx], st["v"][:, slot, :, :pfx])
+        else:
+            kv = tuple(
+                dequantize_kv(st[nm + "_q"][:, slot, :, :pfx],
+                              st[nm + "_s"][:, slot, :, :pfx],
                               jnp.float32, bits=kvcfg.bits,
                               group_size=kvcfg.group_size)
                 for nm in ("k", "v"))

@@ -1,9 +1,21 @@
 """Scheduler — the host half of the serving engine: requests and policy.
 
-Owns everything that is bookkeeping rather than device math: the FIFO queue,
-the slot table, admission planning (free slots are filled in submission
-order, then the round's admissions are grouped by padded prompt bucket so
-each group is ONE batched prefill dispatch), and the requantization cadence.
+Owns everything that is bookkeeping rather than device math: the request
+queue, the slot table, admission planning (free slots are filled in
+priority/deadline order, then the round's admissions are grouped by padded
+prompt bucket so each group is ONE batched prefill dispatch), the chunked
+prefill ledger, and the requantization cadence.
+
+SLO scheduling (DESIGN.md §13): requests carry a priority class (lower =
+more urgent) and an optional deadline; admission picks by
+``(priority, absolute deadline, submission order)`` — earliest-deadline-
+first within a class, FIFO when neither priority nor deadlines are set.
+Preemption (pool pressure) victims are picked from the *least* important
+class first, and a request never evicts a more important one.  Long
+prompts are ingested in fixed-size chunks (``EngineConfig.prefill_chunk``)
+interleaved with decode rounds under a per-round padded-token budget
+(``prefill_budget``) so a 4k-token arrival cannot monopolize a dispatch
+round and blow up running streams' inter-token latency.
 
 Cadence is a policy, not a side effect of admission (the paper's Fig. 1b
 lifecycle): with ``EngineConfig.recalibrate_tokens > 0`` the engine
@@ -24,7 +36,15 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
+
+
+class QueueFull(RuntimeError):
+    """``submit`` rejected: the intake queue is at ``max_queue`` capacity.
+
+    The synchronous engine surfaces this to the caller (shed load / retry
+    later); the async front end (:class:`~repro.serving.server.TTQServer`)
+    holds its own admission semaphore so coroutines *await* instead."""
 
 
 def pick_decode_chunk(slots: int, speculate_k: int = 0) -> int:
@@ -68,6 +88,10 @@ class Request:
     error: str = ""                 # terminal failure reason ("" = none)
     attempts: int = 0               # decode-fault retries consumed
     not_before: int = 0             # planning round gating a retry (backoff)
+    # ---- SLO / streaming (DESIGN.md §13) ----
+    priority: int = 0               # class: lower = more urgent
+    prefilled: int = 0              # chunked prefill: tokens resident on device
+    tok_times: list = dataclasses.field(default_factory=list)  # emit stamps
 
     def __post_init__(self):
         if not self.orig_len:
@@ -110,6 +134,19 @@ class AdmissionGroup:
         return float(len(self.requests) * self.bucket)
 
 
+@dataclasses.dataclass
+class ChunkPlan:
+    """One chunked-prefill dispatch for one mid-ingestion request: write
+    prompt rows ``[start, start + length)`` into the slot's cache (padded to
+    ``prefill_chunk``).  The ``final`` chunk runs the admission epilogue —
+    sample the first token and arm the lane for decode."""
+    slot: int
+    req: Request
+    start: int                      # tokens already resident (prefix + chunks)
+    length: int                     # real tokens this chunk (<= prefill_chunk)
+    final: bool
+
+
 class Scheduler:
     def __init__(self, ecfg, exact_buckets: bool = False, kvcfg=None,
                  num_blocks: int = 0):
@@ -145,30 +182,45 @@ class Scheduler:
         self.admission_failures = 0     # requests failed at the attempt cap
         self._round = 0                 # planning rounds (retry backoff unit)
         self._starve: Dict[int, int] = {}   # rid → idle-starved rounds
+        # SLO / streaming (DESIGN.md §13)
+        self.prefilling: Dict[int, Request] = {}  # slot → mid-chunked-prefill
+        self.prefill_chunks = 0         # chunk dispatches (telemetry)
+        self.queue_rejections = 0       # submits bounced off max_queue
+        self.on_token: Optional[Callable] = None    # (rid, tok, now)
+        self.on_finish: Optional[Callable] = None   # (rid, req)
 
     # ---------------------------------------------------------------- intake
 
     @property
     def max_prompt_len(self) -> int:
         """Longest admissible prompt: the cache must hold it and (for
-        bucketed families) the largest bucket must fit it."""
-        if self.exact_buckets:
+        bucketed families) the largest bucket must fit it.  Chunked prefill
+        lifts the bucket limit — any prompt the cache holds can be ingested
+        chunk by chunk."""
+        if self.exact_buckets or getattr(self.ecfg, "prefill_chunk", 0) > 0:
             return self.ecfg.max_len
         return min(max(self.ecfg.prompt_buckets), self.ecfg.max_len)
 
     def submit(self, prompt, max_new: int = 16, frames=None,
-               deadline_s: Optional[float] = None, now: float = 0.0) -> int:
+               deadline_s: Optional[float] = None, now: float = 0.0,
+               priority: int = 0) -> int:
         prompt = list(prompt)
         limit = self.max_prompt_len
         if len(prompt) > limit:
             detail = f"max_len={self.ecfg.max_len}"
-            if not self.exact_buckets:
+            if limit != self.ecfg.max_len:
                 detail += (f", largest prompt bucket "
                            f"{max(self.ecfg.prompt_buckets)}")
             raise ValueError(
                 f"prompt of {len(prompt)} tokens exceeds the engine's "
                 f"admissible length {limit} ({detail}); raise max_len / "
                 f"prompt_buckets or truncate the prompt")
+        mq = getattr(self.ecfg, "max_queue", 0)
+        if mq and len(self.queue) >= mq:
+            self.queue_rejections += 1
+            raise QueueFull(
+                f"intake queue at capacity (max_queue={mq}); shed load or "
+                f"retry after the engine drains")
         if self.allocator is not None:
             need = self.allocator.blocks_needed(len(prompt), max_new,
                                                 self.ecfg.max_len)
@@ -181,8 +233,28 @@ class Scheduler:
         dl = float(getattr(self.ecfg, "deadline_s", 0.0)
                    if deadline_s is None else deadline_s)
         self.queue.append(Request(rid, prompt, max_new, frames=frames,
-                                  deadline_s=dl, submit_t=float(now)))
+                                  deadline_s=dl, submit_t=float(now),
+                                  priority=int(priority)))
         return rid
+
+    # ------------------------------------------------------------- streaming
+
+    def emit(self, req: Request, tok: int, now: float = 0.0):
+        """Land one generated token: append to the request's output, stamp
+        the emission time (TTFT/ITL metrics) and fire the streaming
+        callback.  Every token-producing path funnels through here so
+        ``len(out) == len(tok_times)`` holds everywhere."""
+        req.out.append(int(tok))
+        req.tok_times.append(float(now))
+        if self.on_token is not None:
+            self.on_token(req.rid, int(tok), float(now))
+
+    def _land(self, req: Request):
+        """Terminal landing: the request is finished (done, failed,
+        cancelled, expired) — record it and fire the completion callback."""
+        self.finished[req.rid] = req
+        if self.on_finish is not None:
+            self.on_finish(req.rid, req)
 
     # ------------------------------------------------------------- admission
 
@@ -191,6 +263,12 @@ class Scheduler:
 
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def decode_slots(self) -> List[int]:
+        """Slots with an armed decode lane — active minus mid-chunked-
+        prefill (those are parked ``done`` on device until their final
+        chunk lands)."""
+        return [s for s in self.active_slots() if s not in self.prefilling]
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
@@ -211,12 +289,13 @@ class Scheduler:
         """Shared failure-path eviction: clear the slot, free (paged)
         blocks, queue the device release; optionally land in finished."""
         self.slot_req[slot] = None
+        self.prefilling.pop(slot, None)
         if self.allocator is not None:
             self.allocator.free_request(req.blocks)
             req.blocks = []
         self.pending_releases.append(slot)
         if finished:
-            self.finished[req.rid] = req
+            self._land(req)
 
     def fail_lane(self, slot: int, reason: str):
         """A decode lane went bad (non-finite logits): fail ONLY this
@@ -233,7 +312,9 @@ class Scheduler:
             self._evict(slot, req, finished=False)
             req.prompt = list(req.prompt[:req.orig_len])
             req.out = []
+            req.tok_times = []
             req.prefix_len = 0
+            req.prefilled = 0
             req.not_before = self._round + (1 << req.attempts)
             self.queue.append(req)
         else:
@@ -248,7 +329,7 @@ class Scheduler:
                     if r.deadline_s > 0 and now - r.submit_t > r.deadline_s]:
             self.queue.remove(req)
             req.error = "deadline"
-            self.finished[req.rid] = req
+            self._land(req)
             self.deadline_expirations += 1
         for slot, req in enumerate(self.slot_req):
             if (req is not None and req.deadline_s > 0
@@ -269,13 +350,21 @@ class Scheduler:
 
     # ------------------------------------------------------------ preemption
 
-    def _pick_victim(self, exclude) -> Optional[int]:
-        """Most-recently-admitted running slot (the youngest request loses —
-        FIFO keeps older work running; its resume re-prefill is cheap anyway
-        because its own prompt blocks stay in the prefix cache)."""
-        cands = [(self.slot_req[s].admit_seq, s) for s in self.active_slots()
-                 if s not in exclude]
-        return max(cands)[1] if cands else None
+    def _pick_victim(self, exclude, limit_priority: int = 0
+                     ) -> Optional[int]:
+        """Class-based eviction: the least important running class loses
+        first (highest priority number), youngest admission within it (FIFO
+        keeps older work running; its resume re-prefill is cheap anyway
+        because its own prompt blocks stay in the prefix cache).  A request
+        never evicts a lane *more* important than itself
+        (``victim.priority >= limit_priority``) — equal-class preemption
+        stays allowed so a full pool of peers behaves exactly as before
+        priorities existed."""
+        cands = [(self.slot_req[s].priority, self.slot_req[s].admit_seq, s)
+                 for s in self.active_slots()
+                 if s not in exclude
+                 and self.slot_req[s].priority >= limit_priority]
+        return max(cands)[2] if cands else None
 
     def _preempt(self, slot: int) -> Request:
         """Evict a running slot: free its blocks and fold the generated
@@ -288,7 +377,9 @@ class Scheduler:
         self.allocator.free_request(req.blocks)
         req.blocks = []
         req.prompt = list(req.prompt[:req.orig_len]) + list(req.out)
+        req.prefilled = 0               # mid-chunked-prefill victims restart
         self.slot_req[slot] = None
+        self.prefilling.pop(slot, None)
         self.pending_releases.append(slot)
         self.preemptions += 1
         self._recent_victims.add(req.rid)
@@ -314,7 +405,19 @@ class Scheduler:
         raising after its victims freed their blocks — fails the request
         cleanly (``error="admission retries exhausted"``) instead of
         spinning planning forever.  Requests whose retry backoff round has
-        not arrived (``not_before``) are skipped, not popped."""
+        not arrived (``not_before``) are skipped, not popped.
+
+        SLO ordering (DESIGN.md §13): the next admission is the eligible
+        request minimizing ``(priority, absolute deadline, rid)`` —
+        priority classes strictly dominate, earliest deadline first within
+        a class, FIFO among undeadlined peers.  Eviction honours the same
+        classes via :meth:`_pick_victim`.  Requests whose prompt tail
+        exceeds ``prefill_chunk`` claim their slot and blocks here but skip
+        the group dispatch — they enter the ``prefilling`` ledger and are
+        ingested chunk-by-chunk by :meth:`plan_prefill_chunks`; their lane
+        is parked on device (queued slot release) until the final chunk
+        arms it, and their fresh blocks enter the prefix trie only as the
+        rows land (``allocate(register=False)``)."""
         self._round += 1
         cap = self.gcfg.max_admission_attempts if self.gcfg is not None else 8
         cap = max(cap, self.ecfg.max_slots + 1)
@@ -323,25 +426,28 @@ class Scheduler:
         victims: List[Request] = []
         free = self.free_slots()
         while free:
-            req = next((r for r in self.queue
-                        if r.not_before <= self._round), None)
+            req = min((r for r in self.queue
+                       if r.not_before <= self._round),
+                      key=self._sel_key, default=None)
             if req is None:
                 break
             if self.allocator is not None:
                 try:
                     req.blocks, req.prefix_len = self.allocator.allocate(
-                        req.prompt, req.remaining, self.ecfg.max_len)
+                        req.prompt, req.remaining, self.ecfg.max_len,
+                        register=not self._maybe_chunked(req))
                 except MemoryError:
                     attempts[req.rid] = attempts.get(req.rid, 0) + 1
                     if attempts[req.rid] >= cap:
                         self.queue.remove(req)
                         self._starve.pop(req.rid, None)
                         req.error = "admission retries exhausted"
-                        self.finished[req.rid] = req
+                        self._land(req)
                         self.admission_failures += 1
                         continue            # next eligible request
                     victim = self._pick_victim(
-                        exclude={s for s, _ in picked})
+                        exclude={s for s, _ in picked},
+                        limit_priority=req.priority)
                     # a fresh victim may not preempt in turn until decode
                     # has progressed — breaks admit-round ping-pong cycles
                     if victim is None or req.rid in self._recent_victims:
@@ -357,7 +463,7 @@ class Scheduler:
                                 self.queue.remove(req)
                                 self._starve.pop(req.rid, None)
                                 req.error = "admission retries exhausted"
-                                self.finished[req.rid] = req
+                                self._land(req)
                                 self.admission_failures += 1
                         break               # nothing evictable — wait
                     victims.append(self._preempt(victim))
@@ -369,10 +475,22 @@ class Scheduler:
             slot = free.pop(0)
             self.slot_req[slot] = req       # claimed now: a preemption later
             picked.append((slot, req))      # in this round must not free it
+            if self._chunked(req):
+                req.prefilled = req.prefix_len
+                self.prefilling[slot] = req
+                self.pending_releases.append(slot)  # park the lane on device
+            elif self.allocator is not None and self._maybe_chunked(req):
+                # prefix hits shrank the tail under one chunk — classic
+                # dispatch after all; hook the deferred registrations now
+                # (identical to allocate(register=True) semantics)
+                self.allocator.register_blocks(req.prompt, req.blocks,
+                                               len(req.prompt))
         for req in reversed(victims):       # oldest victim resumes first
             self.queue.appendleft(req)
         groups: Dict[tuple, AdmissionGroup] = {}
         for slot, req in picked:
+            if slot in self.prefilling:     # chunk-ingested, no group
+                continue
             tail = len(req.prompt) - req.prefix_len
             key = (self.bucket(tail), req.prefix_len)
             g = groups.setdefault(key, AdmissionGroup(*key))
@@ -388,6 +506,71 @@ class Scheduler:
         # ⇒ no dependency).  Without it a reader could share a group
         # created before its writer's and gather still-zero pool blocks.
         return sorted(groups.values(), key=lambda g: g.prefix_len)
+
+    @staticmethod
+    def _sel_key(req: Request):
+        """Admission order: priority class, then earliest absolute
+        deadline, then submission (rid) — plain FIFO when neither knob is
+        used."""
+        dl = (req.submit_t + req.deadline_s if req.deadline_s > 0
+              else float("inf"))
+        return (req.priority, dl, req.rid)
+
+    def _maybe_chunked(self, req: Request) -> bool:
+        """Could this request need chunked ingestion?  Decided before the
+        prefix match — used to defer trie registration."""
+        c = getattr(self.ecfg, "prefill_chunk", 0)
+        return c > 0 and len(req.prompt) > c
+
+    def _chunked(self, req: Request) -> bool:
+        """Chunked ingestion needed: the un-cached prompt tail exceeds one
+        chunk (prefix hits may have shrunk it under the threshold)."""
+        c = getattr(self.ecfg, "prefill_chunk", 0)
+        return c > 0 and (len(req.prompt) - req.prefix_len) > c
+
+    # ------------------------------------------------------- chunked prefill
+
+    def plan_prefill_chunks(self) -> List[ChunkPlan]:
+        """The round's chunk dispatches, most urgent request first, capped
+        at ``prefill_budget`` padded tokens (default: one chunk per round —
+        decode runs between every pair of chunks).  Always yields at least
+        one chunk when ingestion is pending, so a sub-chunk budget cannot
+        stall a prompt forever.  Plans are speculative until the engine
+        lands them via :meth:`note_chunk`."""
+        if not self.prefilling:
+            return []
+        chunk = self.ecfg.prefill_chunk
+        budget = getattr(self.ecfg, "prefill_budget", 0) or chunk
+        plans: List[ChunkPlan] = []
+        spent = 0
+        for slot, req in sorted(self.prefilling.items(),
+                                key=lambda kv: self._sel_key(kv[1])):
+            plen, prog = len(req.prompt), req.prefilled
+            while prog < plen and (spent < budget or not plans):
+                n = min(chunk, plen - prog)
+                plans.append(ChunkPlan(slot, req, prog, n,
+                                       final=prog + n >= plen))
+                prog += n
+                spent += chunk          # budget counts padded tokens
+            if spent >= budget:
+                break
+        return plans
+
+    def note_chunk(self, plan: ChunkPlan, tokens: float):
+        """One chunk landed on device: advance the resident-token mark,
+        expose the freshly written full blocks to the prefix trie, and fold
+        the (padded) chunk into the requant cadence.  The final chunk
+        counts as the admission and un-parks the ledger entry — the engine
+        arms the lane and emits the first token."""
+        req = plan.req
+        req.prefilled = plan.start + plan.length
+        if self.allocator is not None:
+            self.allocator.register_blocks(req.prompt, req.blocks,
+                                           req.prefilled)
+        self.prefill_chunks += 1
+        self.note_admitted(1 if plan.final else 0, tokens)
+        if plan.final:
+            self.prefilling.pop(plan.slot, None)
 
     # -------------------------------------------------------- requant cadence
 
@@ -418,55 +601,62 @@ class Scheduler:
     def finish(self, slot: int):
         req = self.slot_req[slot]
         req.done = True
-        self.finished[req.rid] = req
         self.slot_req[slot] = None
         if self.allocator is not None:
             self.allocator.free_request(req.blocks)
             req.blocks = []
             self.pending_releases.append(slot)
+        self._land(req)
 
     def cancel(self, rid: int) -> bool:
         """Abort a queued or running request: its slot and (paged) blocks
-        free immediately and the partial output lands in ``finished`` as
+        free immediately — including blocks partially written by chunked
+        prefill — and the partial output lands in ``finished`` as
         ``cancelled`` (``results()`` flags it unfinished).  Returns False
         for unknown/already-finished rids."""
         for req in list(self.queue):
             if req.rid == rid:
                 self.queue.remove(req)
                 req.cancelled = True
-                self.finished[rid] = req
+                self._land(req)
                 return True
         for slot, req in enumerate(self.slot_req):
             if req is not None and req.rid == rid:
                 req.cancelled = True
-                self.finished[rid] = req
                 self.slot_req[slot] = None
+                self.prefilling.pop(slot, None)
                 if self.allocator is not None:
                     self.allocator.free_request(req.blocks)
                     req.blocks = []
                 self.pending_releases.append(slot)
+                self._land(req)
                 return True
         return False
 
-    def record_block(self, tokens, valid, done, fault=None) -> int:
+    def record_block(self, tokens, valid, done, fault=None,
+                     now: float = 0.0) -> int:
         """Fold one decode block's host copies into per-request outputs.
 
         ``tokens``/``valid``: (B, K) host arrays; ``done``: (B,) final
         flags; ``fault``: optional (B,) lane-fault flags from the guarded
         decode (DESIGN.md §12) — a faulted lane's block is discarded
         wholesale (its logits are suspect from the start of the block) and
-        the request fails alone via :meth:`fail_lane`.
+        the request fails alone via :meth:`fail_lane`.  Mid-chunked-prefill
+        slots are skipped: their lanes are parked ``done`` on device, which
+        must not be mistaken for EOS.
         Returns the number of accepted tokens (token-budget cadence)."""
         accepted = 0
         K = tokens.shape[1]
         for slot in self.active_slots():
+            if slot in self.prefilling:
+                continue
             req = self.slot_req[slot]
             if fault is not None and fault[slot]:
                 self.fail_lane(slot, "non-finite logits")
                 continue
             for k in range(K):
                 if valid[slot, k]:
-                    req.out.append(int(tokens[slot, k]))
+                    self.emit(req, int(tokens[slot, k]), now)
                     accepted += 1
             if done[slot]:
                 self.finish(slot)

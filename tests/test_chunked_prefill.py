@@ -1,0 +1,252 @@
+"""Chunked prefill + SLO scheduling (DESIGN.md §13).
+
+Equality contract: splitting prompt ingestion into chunks is a pure
+scheduling change — under a quiescent requant cadence the greedy token
+stream is bitwise identical to monolithic prefill, across dense/paged
+layouts, every KV precision and with speculation on.  (Per-chunk Σx²
+calibration updates are additive, so only the *timing* of requants can
+differ; the quiescent cadence removes that one degree of freedom.)
+"""
+import jax
+import pytest
+
+from repro.core import NO_QUANT
+from repro.models import ModelConfig, lm
+from repro.models.config import HybridCfg
+from repro.serving import EngineConfig, QueueFull, Request, Scheduler, TTQEngine
+
+CFG = ModelConfig(name="t", family="dense", n_layers=3, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+
+LONG = [((7 * i + 3) % 126) + 1 for i in range(40)]     # > chunk: gets chunked
+SHORT = [((11 * i + 5) % 126) + 1 for i in range(8)]    # <= chunk: classic path
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _ecfg(**kw):
+    base = dict(max_slots=2, max_len=96, decode_chunk=1, temperature=0.0,
+                recalibrate_tokens=10**9, prompt_buckets=(16, 32, 64))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run(params, ecfg, prompts, max_new=6):
+    eng = TTQEngine(CFG, params, NO_QUANT, ecfg)
+    rids = [eng.submit(p, max_new=max_new) for p in prompts]
+    outs = eng.run_all()
+    if eng.allocator is not None:
+        eng.allocator.assert_quiescent()
+    return [list(outs[r]) for r in rids], eng
+
+
+# ------------------------------------------------------------------ equality
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+@pytest.mark.parametrize("kv", ["bf16", "int8", "int4"])
+@pytest.mark.parametrize("spec", [0, 2], ids=["nospec", "spec2"])
+def test_chunked_matches_unchunked(params, paged, kv, spec):
+    """Greedy outputs are bitwise equal with and without chunked prefill,
+    across KV layout × KV precision × speculation."""
+    kw = dict(kv_dtype=kv, speculate_k=spec)
+    if paged:
+        kw.update(kv_paged=True, kv_block_size=16)
+    ref, _ = _run(params, _ecfg(**kw), [LONG, SHORT])
+    got, eng = _run(params, _ecfg(prefill_chunk=16, **kw), [LONG, SHORT])
+    assert got == ref
+    assert eng.prefill_chunks >= 3          # 40-token prompt → 16+16+8
+
+
+def test_chunking_lifts_bucket_cap(params):
+    """Prompts past the largest bucket are accepted when chunking is on
+    (chunks are what gets padded, not the whole prompt) and still match
+    the reference greedy stream."""
+    long100 = [((5 * i + 1) % 126) + 1 for i in range(100)]
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    _ecfg(max_len=128, prefill_chunk=16))
+    rid = eng.submit(long100, max_new=4)
+    out = list(eng.run_all()[rid])
+
+    toks = list(long100)
+    for _ in range(4):
+        lg, _, _ = lm.forward(CFG, params,
+                              {"tokens": jax.numpy.asarray(toks)[None]})
+        toks.append(int(jax.numpy.argmax(lg[0, -1])))
+    assert out == toks[100:]
+
+    # the same submit bounces off the bucket cap when chunking is off
+    eng2 = TTQEngine(CFG, params, NO_QUANT, _ecfg(max_len=128))
+    with pytest.raises(ValueError):
+        eng2.submit(long100, max_new=4)
+
+
+# -------------------------------------------------------------- interleaving
+
+
+def test_decode_interleaves_with_chunked_prefill(params):
+    """A running stream keeps emitting while a long prompt is being
+    ingested — the whole point of chunking (ITL protection)."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg(prefill_chunk=16))
+    r_short = eng.submit(SHORT, max_new=12)
+    eng.step()                                  # short admitted, decoding
+    r_long = eng.submit(LONG, max_new=4)
+    eng.step()                                  # long admitted → mid-prefill
+    assert eng.scheduler.prefilling
+    short_req = next(r for r in eng.slot_req if r and r.rid == r_short)
+    seen_interleave = False
+    while eng.scheduler.prefilling:
+        n0 = len(short_req.out)
+        eng.step()
+        if len(short_req.out) > n0:
+            seen_interleave = True
+    assert seen_interleave
+    outs = eng.run_all()
+    assert list(outs[r_short])                  # both streams land
+    assert list(outs[r_long])
+
+
+def test_prefill_budget_bounds_chunks_per_round(params):
+    """prefill_budget caps padded prefill tokens dispatched per round;
+    the default (0) is one chunk per round."""
+    for budget, per_round in ((0, 1), (16, 2), (40, 5)):
+        eng = TTQEngine(CFG, params, NO_QUANT,
+                        _ecfg(prefill_chunk=8, prefill_budget=budget))
+        eng.submit(LONG, max_new=2)             # 40 tokens → 5 chunks of 8
+        eng.step()                              # admission parks the lane
+        prev = eng.prefill_chunks
+        while eng.scheduler.prefilling:
+            eng.step()
+            assert eng.prefill_chunks - prev <= per_round
+            prev = eng.prefill_chunks
+        eng.run_all()
+
+
+# ------------------------------------------------- cancellation / leak checks
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_cancel_mid_chunked_prefill_releases_blocks(params, paged):
+    """Cancelling a request mid-ingestion frees its partially written
+    blocks immediately; the pool is quiescent afterwards."""
+    kw = dict(kv_paged=True, kv_block_size=16) if paged else {}
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg(prefill_chunk=16, **kw))
+    rid = eng.submit(LONG, max_new=4)
+    eng.step()                                  # admit + first chunk
+    assert eng.scheduler.prefilling             # still mid-prefill
+    eng.cancel(rid)
+    assert not eng.scheduler.prefilling
+    r2 = eng.submit(SHORT, max_new=3)           # pool immediately reusable
+    outs = eng.run_all()
+    assert outs[rid].cancelled and outs[rid].unfinished
+    assert len(outs[r2]) == 3
+    if eng.allocator is not None:
+        eng.allocator.assert_quiescent()
+
+
+def test_chunked_prefix_sharing(params):
+    """Deferred trie registration: a second identical prompt shares the
+    first one's blocks — but only blocks whose rows were actually written
+    ever enter the trie, so the hit is safe mid-ingestion too."""
+    ecfg = _ecfg(kv_paged=True, kv_block_size=16, prefill_chunk=16)
+    ref, _ = _run(params, ecfg, [LONG])
+    eng = TTQEngine(CFG, params, NO_QUANT, ecfg)
+    r1 = eng.submit(LONG, max_new=6)
+    eng.run_all()
+    r2 = eng.submit(LONG, max_new=6)
+    outs = eng.run_all()
+    assert list(outs[r2]) == ref[0]
+    assert eng.allocator.prefix_hits > 0        # second pass hit the trie
+    eng.allocator.assert_quiescent()
+
+
+# ----------------------------------------------------------- SLO scheduling
+
+
+def test_priority_admission_order(params):
+    """With one slot occupied, the urgent class (lower number) jumps the
+    queue regardless of arrival order."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg(max_slots=1))
+    blocker = eng.submit(SHORT, max_new=2)
+    eng.step()                                  # blocker owns the slot
+    r_low = eng.submit([1, 2, 3], max_new=2, priority=5)
+    r_high = eng.submit([4, 5, 6], max_new=2, priority=0)
+    eng.run_all()
+    fin = eng.scheduler.finished
+    assert fin[blocker].admit_seq < fin[r_high].admit_seq < fin[r_low].admit_seq
+
+
+def test_deadline_class_order(params):
+    """Within a priority class, earliest absolute deadline admits first;
+    no deadline sorts last."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg(max_slots=1))
+    blocker = eng.submit(SHORT, max_new=2)
+    eng.step()
+    r_none = eng.submit([1, 2, 3], max_new=2)                   # no deadline
+    r_late = eng.submit([4, 5, 6], max_new=2, deadline_s=1000.0)
+    r_soon = eng.submit([7, 8, 9], max_new=2, deadline_s=500.0)
+    eng.run_all()
+    fin = eng.scheduler.finished
+    assert (fin[r_soon].admit_seq < fin[r_late].admit_seq
+            < fin[r_none].admit_seq)
+
+
+def test_priority_eviction_classes():
+    """Victim pick: lowest class loses first, youngest within it; a
+    requester never evicts a lane more urgent than itself."""
+    sched = Scheduler(EngineConfig(max_slots=3, max_len=32))
+    for slot, (pri, seq) in enumerate([(0, 0), (2, 1), (2, 2)]):
+        r = Request(rid=slot, prompt=[1], max_new=1, admit_seq=seq)
+        r.priority = pri
+        sched.slot_req[slot] = r
+    # an urgent requester evicts the least-urgent, youngest lane
+    assert sched._pick_victim(set(), limit_priority=0) == 2
+    assert sched._pick_victim({2}, limit_priority=0) == 1
+    # a background requester (priority 5) cannot evict anyone more urgent
+    assert sched._pick_victim(set(), limit_priority=5) is None
+    # equal-class preemption stays allowed (pre-priority behaviour)
+    assert sched._pick_victim(set(), limit_priority=2) == 2
+
+
+def test_max_queue_rejects(params):
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg(max_slots=1, max_queue=2))
+    eng.submit(SHORT, max_new=2)
+    eng.step()                                  # drain one into the slot
+    eng.submit([1, 2], max_new=1)
+    eng.submit([3, 4], max_new=1)
+    with pytest.raises(QueueFull):
+        eng.submit([5, 6], max_new=1)
+    assert eng.queue_rejections == 1
+    eng.run_all()
+    assert eng.queue_rejections == 1            # counter survives the run
+
+
+# ----------------------------------------------------------------- validation
+
+
+def test_prefill_chunk_rejects_non_attention_family():
+    cfg = ModelConfig(name="h", family="hybrid", n_layers=3, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=96, vocab=128,
+                      hybrid=HybridCfg(pattern=("rec", "attn"), window=32))
+    p = lm.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        TTQEngine(cfg, p, NO_QUANT, EngineConfig(prefill_chunk=16))
+
+
+def test_prefill_chunk_must_divide_block_size(params):
+    with pytest.raises(ValueError, match="block"):
+        TTQEngine(CFG, params, NO_QUANT,
+                  _ecfg(kv_paged=True, kv_block_size=16, prefill_chunk=12))
+
+
+def test_latency_percentiles_shape(params):
+    _, eng = _run(params, _ecfg(prefill_chunk=16), [LONG, SHORT], max_new=5)
+    lat = eng.latency_percentiles()
+    assert set(lat) >= {"ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
+                        "n_streams", "n_itl"}
+    assert lat["n_streams"] == 2
+    assert lat["n_itl"] == 2 * 4                # 5 tokens → 4 gaps each
+    assert lat["ttft_p99"] >= lat["ttft_p50"] >= 0.0

@@ -280,7 +280,10 @@ def test_deadline_expires_queued_request(params):
     eng = _engine(params, faults=[Fault("clock.skew", at=1, magnitude=5.0)],
                   clock=clk, max_slots=1)
     r0 = eng.submit(PROMPTS[0], max_new=12)
-    r1 = eng.submit(PROMPTS[1], max_new=12, deadline_s=1.0)  # waits in queue
+    # EDF admission (DESIGN.md §13) would otherwise run the deadlined
+    # request first — a less-urgent priority class keeps it queued behind
+    # r0 so the expiry happens with no output produced
+    r1 = eng.submit(PROMPTS[1], max_new=12, deadline_s=1.0, priority=1)
     out = eng.run_all()
     assert out[r1].error == "deadline" and list(out[r1]) == []
     assert len(out[r0]) == 12

@@ -1,0 +1,174 @@
+"""TTQServer: async streaming front end (DESIGN.md §13).
+
+The contract under test: the server is a pure transport — tokens stream
+out exactly as the batch engine would produce them, backpressure awaits
+instead of erroring, and a consumer that walks away cancels its request
+on the engine without disturbing other streams.  No pytest-asyncio:
+each test drives its own ``asyncio.run``.
+"""
+import asyncio
+
+import jax
+import pytest
+
+from repro.core import NO_QUANT
+from repro.models import ModelConfig, lm
+from repro.serving import EngineConfig, TTQEngine, TTQServer
+
+CFG = ModelConfig(name="t", family="dense", n_layers=3, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128)
+
+PROMPTS = [[((7 * i + s) % 126) + 1 for i in range(n)]
+           for s, n in ((3, 8), (5, 40), (1, 12))]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _ecfg(**kw):
+    base = dict(max_slots=2, max_len=96, decode_chunk=1, temperature=0.0,
+                recalibrate_tokens=10**9, prompt_buckets=(16, 32, 64),
+                prefill_chunk=16, max_queue=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def reference(params):
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg())
+    rids = [eng.submit(p, max_new=6) for p in PROMPTS]
+    outs = eng.run_all()
+    return [list(outs[r]) for r in rids]
+
+
+def test_streams_match_batch_engine(params, reference):
+    """Concurrent async streams produce exactly the batch-mode tokens."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg())
+
+    async def main():
+        async with TTQServer(eng) as server:
+            async def stream(p):
+                return [t async for t in server.generate(p, max_new=6)]
+            return await asyncio.gather(*[stream(p) for p in PROMPTS])
+
+    outs = asyncio.run(main())
+    assert outs == reference
+    assert eng.allocator is None or not eng.allocator.ref
+
+
+def test_complete_returns_genresult(params, reference):
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg())
+
+    async def main():
+        async with TTQServer(eng) as server:
+            return await server.complete(PROMPTS[0], max_new=6)
+
+    res = asyncio.run(main())
+    assert list(res) == reference[0]
+    assert not res.unfinished and not res.error
+
+
+def test_backpressure_awaits_at_capacity(params, reference):
+    """With the engine queue bounded at 1, concurrent submitters await at
+    the semaphore instead of bouncing off QueueFull — every stream
+    completes, and correctly."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg(max_slots=1, max_queue=1))
+
+    async def main():
+        async with TTQServer(eng) as server:
+            async def stream(p):
+                return [t async for t in server.generate(p, max_new=6)]
+            return await asyncio.gather(*[stream(p) for p in PROMPTS])
+
+    outs = asyncio.run(main())
+    for got, want, prompt in zip(outs, reference, PROMPTS):
+        assert got == want, prompt
+    assert eng.queue_rejections == 0            # awaited, never rejected
+
+
+def test_disconnect_cancels_without_disturbing_others(params, reference):
+    """Closing a stream mid-generation cancels it on the engine (even
+    mid-chunked-prefill); a concurrent stream is unaffected and the block
+    pool ends quiescent."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    _ecfg(kv_paged=True, kv_block_size=16))
+
+    async def main():
+        async with TTQServer(eng) as server:
+            survivor = asyncio.ensure_future(
+                server.complete(PROMPTS[0], max_new=6))
+            agen = server.generate(PROMPTS[1], max_new=6)
+            first = await agen.__anext__()
+            await agen.aclose()                 # client walks away
+            return first, await survivor
+
+    first, res = asyncio.run(main())
+    assert first == reference[1][0]
+    assert list(res) == reference[0]
+    cancelled = [r for r in eng.scheduler.finished.values() if r.cancelled]
+    assert len(cancelled) == 1
+    eng.allocator.assert_quiescent()
+
+
+def test_immediate_disconnect_cancels_mid_prefill(params):
+    """A consumer that leaves before the first token cancels a request
+    that is still chunk-ingesting its prompt; blocks are released."""
+    eng = TTQEngine(CFG, params, NO_QUANT,
+                    _ecfg(kv_paged=True, kv_block_size=16))
+
+    async def main():
+        async with TTQServer(eng) as server:
+            task = asyncio.ensure_future(
+                server.complete(PROMPTS[1], max_new=6))
+            await asyncio.sleep(0)              # let the submit land
+            task.cancel()
+            try:
+                await task
+            except asyncio.CancelledError:
+                pass
+            # server still serves afterwards
+            return await server.complete(PROMPTS[0], max_new=3)
+
+    res = asyncio.run(main())
+    assert len(res) == 3 and not res.error
+    eng.allocator.assert_quiescent()
+
+
+def test_stop_drains_inflight_work(params, reference):
+    """Leaving the ``async with`` waits for in-flight requests instead of
+    dropping them."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg())
+
+    async def main():
+        server = TTQServer(eng)
+        await server.start()
+        task = asyncio.ensure_future(server.complete(PROMPTS[2], max_new=6))
+        await asyncio.sleep(0)
+        res = await task
+        await server.stop()
+        return res
+
+    res = asyncio.run(main())
+    assert list(res) == reference[2]
+    assert eng.scheduler.has_work() is False
+
+
+def test_worker_crash_fails_open_streams(params):
+    """An engine fault past containment lands in every open stream as an
+    error result instead of hanging the consumers."""
+    eng = TTQEngine(CFG, params, NO_QUANT, _ecfg())
+    def boom():
+        raise RuntimeError("injected engine crash")
+    eng.step = boom
+
+    async def main():
+        async with TTQServer(eng) as server:
+            res = await asyncio.wait_for(
+                server.complete(PROMPTS[0], max_new=4), timeout=30)
+            return res, server.error
+
+    res, err = asyncio.run(main())
+    assert res.unfinished and "crash" in res.error
+    assert isinstance(err, RuntimeError)

@@ -537,6 +537,43 @@ def test_tc406_inline_suppression(tmp_path):
     assert mod.suppressed(raw[0].line, "TC406")   # ...the filter drops it
 
 
+def test_tc407_no_device_work_in_coroutines(tmp_path):
+    files = {
+        "src/repro/serving/server.py": """
+            import jax.numpy as jnp
+            class Srv:
+                async def handle(self, prompt):
+                    rid = self.engine.submit(prompt)    # TC407
+                    self.engine.step()                  # TC407
+                    x = jnp.zeros((4,))                 # TC407
+                    def forward(tok):                   # nested sync def:
+                        self.engine.cancel(rid)         # worker-side, clean
+                    await self.queue.put(x)             # non-engine: clean
+                    return rid
+                def drain(self):
+                    return self.engine.step()           # sync method: clean
+        """,
+        # coroutines outside serving/ are out of scope
+        "src/repro/launch/cli.py": """
+            async def main(eng, prompt):
+                return eng.submit(prompt)
+        """,
+    }
+    root = write_tree(tmp_path, files)
+    f = [x for x in serving.check(core.parse_paths(sorted(files), root))
+         if x.rule == "TC407"]
+    assert len(f) == 3, f
+    assert all("server.py" in x.path for x in f)
+    assert {x.line for x in f} == {5, 6, 7}
+
+
+def test_tc407_real_server_is_clean():
+    """The shipped async front end obeys its own threading contract."""
+    repo = core.parse_paths(["src/repro/serving/server.py"], REPO)
+    f = [x for x in serving.check(repo) if x.rule == "TC407"]
+    assert f == []
+
+
 # --------------------------------------------------------------- docs-links
 
 

@@ -33,6 +33,14 @@ can't express, so the analyzer pins them:
   into silent token corruption; fault *containment* is the job of the
   designated boundary module ``serving/faults.py`` (exempt by name) and
   of typed handlers (``except MemoryError`` stays legal).
+* TC407 — no device dispatch or allocation from coroutine bodies in
+  serving modules.  The async front end (``serving/server.py``,
+  DESIGN.md §13) runs on the event-loop thread; every engine call
+  (``submit``/``step``/``cancel``/…) and every ``jnp.``/``jax.``
+  operation must happen on the dedicated worker thread.  An engine call
+  inside an ``async def`` either blocks the loop for a whole device
+  dispatch or races the worker thread on device state — both are bugs
+  the type system can't see.
 """
 from __future__ import annotations
 
@@ -61,6 +69,14 @@ _ALLOCATOR_FNS = {
 # TC405: placement/mesh primitives and the modules allowed to use them
 _PLACEMENT_ATTRS = {"jax.device_put", "jax.make_mesh", "jax.sharding.Mesh"}
 
+# TC407: engine entry points that dispatch device work (or mutate device
+# state) — none may be called from a coroutine body in a serving module
+_ENGINE_ENTRY = {
+    "step", "run_all", "admit", "submit", "cancel", "decode_block",
+    "admit_group", "prefill_chunk", "release_slots", "_requantize",
+    "place_params", "calibrate", "requantize",
+}
+
 
 def _placement_allowed(path: str) -> bool:
     return ("/parallel/" in path or path.endswith("launch/mesh.py")
@@ -77,10 +93,13 @@ ENGINE_ATTRS = [
     "calib_rejections", "quarantine", "requant_rejections", "lane_faults",
     "deadline_expirations", "admission_failures", "degrade_level",
     "submit", "cancel", "admit", "step", "run_all",
+    "queue_depth", "queue_rejections", "prefill_chunks",
+    "latency_percentiles", "set_stream_callbacks",
 ]
 SERVING_EXPORTS = ["BlockAllocator", "DeviceRunner", "EngineConfig",
-                   "Fault", "FaultInjector", "GenResult", "Request",
-                   "Scheduler", "TTQEngine", "VirtualClock"]
+                   "Fault", "FaultInjector", "GenResult", "QueueFull",
+                   "Request", "RequestFailed", "Scheduler", "TTQEngine",
+                   "TTQServer", "VirtualClock"]
 
 
 def _text(expr: ast.AST) -> Optional[str]:
@@ -97,6 +116,19 @@ def _text(expr: ast.AST) -> Optional[str]:
 
 def _is_serving(mod: Module) -> bool:
     return "serving" in mod.path.split("/")
+
+
+def _walk_own(fn: ast.AsyncFunctionDef):
+    """Walk a coroutine's body without descending into nested ``def``s
+    (a nested sync function may legitimately run on the worker thread;
+    nested coroutines are visited by the module-level walk on their own)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
 
 
 def _touches_block_table(tgt: ast.AST) -> bool:
@@ -207,6 +239,32 @@ def check(repo: Repo) -> List[Finding]:
                     f"{what} in serving module {base} — broad handlers "
                     f"mask corruption in the serving loop; contain faults "
                     f"in serving/faults.py or catch the specific error"))
+
+    # TC407: coroutine bodies in serving modules stay device-free
+    for mod in serving_mods:
+        base = mod.path.rsplit("/", 1)[-1]
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, ast.AsyncFunctionDef):
+                continue
+            for node in _walk_own(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = _text(node.func)
+                if d is not None and (d.startswith("jnp.")
+                                      or d.startswith("jax.")):
+                    out.append(Finding(
+                        "TC407", mod.path, node.lineno,
+                        f"`{d}` inside coroutine `{fn.name}` ({base}) — "
+                        f"device ops run on the engine worker thread, "
+                        f"never the event loop"))
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _ENGINE_ENTRY):
+                    out.append(Finding(
+                        "TC407", mod.path, node.lineno,
+                        f"engine call `.{node.func.attr}(...)` inside "
+                        f"coroutine `{fn.name}` ({base}) — engine entry "
+                        f"points dispatch device work; hand the command "
+                        f"to the worker thread instead"))
 
     # TC404: facade surface + package re-exports
     eng = cg.classes.get("repro.serving.engine.TTQEngine")
